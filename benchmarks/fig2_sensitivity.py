@@ -1,0 +1,91 @@
+"""Paper Fig. 2 sensitivity analysis (reduced, synthetic):
+
+(a) drop-rate sweep, (b) top-k vs random selection, (c) schedulers
+(constant / linear / cosine / bar) at a fixed target, (d) scheduler
+period. Reproduces the paper's qualitative findings: accuracy falls with
+rate; random falls faster than top-k; schedulers beat constant; the
+2-epoch bar is at least as good as iteration-periodic bars.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.policy import SsPropPolicy, paper_default
+from repro.core.schedulers import drop_rate_for_step
+from repro.data.pipeline import ImagePipeline, ImagePipelineConfig
+from repro.models import resnet
+from repro.optim import adam
+
+_NAME = "resnet18"
+_STEPS = 16
+_SPE = 4  # steps per "epoch"
+
+
+def _train(rate_fn, selection="topk", steps=_STEPS, seed=0):
+    pipe = ImagePipeline(ImagePipelineConfig((3, 16, 16), 10, 32, seed=7), n_train=256)
+    params = resnet.init_params(_NAME, jax.random.PRNGKey(seed), num_classes=10)
+    opt = adam.init(params)
+    ocfg = adam.AdamConfig(lr=1e-3)
+    cache = {}
+
+    def get_step(rate):
+        key = round(rate, 2)
+        if key not in cache:
+            pol = (
+                SsPropPolicy(0.0)
+                if rate == 0
+                else dataclasses.replace(paper_default(rate), selection=selection)
+            )
+
+            def loss_fn(p, x, y, k):
+                logits = resnet.forward(_NAME, p, x, pol)
+                return -jax.nn.log_softmax(logits)[jnp.arange(x.shape[0]), y].mean()
+
+            @jax.jit
+            def step(p, o, x, y, k):
+                l, g = jax.value_and_grad(loss_fn)(p, x, y, k)
+                p2, o2, _ = adam.apply_updates(ocfg, p, g, o)
+                return p2, o2, l
+
+            cache[key] = step
+        return cache[key]
+
+    key = jax.random.PRNGKey(123)
+    for i in range(steps):
+        b = jax.tree.map(jnp.asarray, pipe.batch_at(i))
+        key, sub = jax.random.split(key)
+        step = get_step(rate_fn(i))
+        params, opt, l = step(params, opt, b["images"], b["labels"], sub)
+    ev = pipe.eval_batch(128)
+    logits = resnet.forward(_NAME, params, jnp.asarray(ev["images"]), SsPropPolicy(0.0), train=False)
+    return float((jnp.argmax(logits, -1) == jnp.asarray(ev["labels"])).mean())
+
+
+def run():
+    # (a) drop-rate sweep, constant schedule
+    for rate in (0.0, 0.5, 0.8, 0.95):
+        acc = _train(lambda i, r=rate: r)
+        emit(f"fig2a/rate_{rate}", 0.0, f"acc={acc:.3f}")
+    # (b) selection method at 0.8
+    for sel in ("topk", "random"):
+        acc = _train(lambda i: 0.8, selection=sel)
+        emit(f"fig2b/select_{sel}", 0.0, f"acc={acc:.3f}")
+    # (c) schedulers to target 0.8
+    for sched in ("constant", "linear", "cosine", "bar", "epoch_bar"):
+        acc = _train(
+            lambda i, s=sched: drop_rate_for_step(
+                s, step=i, steps_per_epoch=_SPE, total_steps=_STEPS, target=0.8
+            )
+        )
+        emit(f"fig2c/sched_{sched}", 0.0, f"acc={acc:.3f}")
+    # (d) periodic bar periods
+    for period in (8, 16):
+        acc = _train(
+            lambda i, p=period: drop_rate_for_step(
+                "periodic_bar", step=i, steps_per_epoch=_SPE,
+                total_steps=_STEPS, target=0.8, period=p,
+            )
+        )
+        emit(f"fig2d/period_{period}", 0.0, f"acc={acc:.3f}")

@@ -1,0 +1,137 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+results JSONs. Run after the dry-run matrix + probes:
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCH_IDS
+
+DRY = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def _load(arch, shape, mesh, policy):
+    f = os.path.join(DRY, f"{arch}__{shape}__{mesh}__{policy}.json")
+    if os.path.exists(f):
+        with open(f) as fh:
+            return json.load(fh)
+    return None
+
+
+def dryrun_table():
+    lines = [
+        "| arch | shape | mesh | status | HLO GFLOP/dev (module) | args GiB/dev | temp GiB/dev | wire GiB/dev/step | top collectives |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                r = _load(arch, shape, mesh, "ssprop")
+                if r is None:
+                    continue
+                if r["status"] == "skipped":
+                    lines.append(
+                        f"| {arch} | {shape} | {mesh} | N/A (sub-quadratic rule) | | | | | |"
+                    )
+                    continue
+                dev = r["devices"]
+                mem = r.get("memory", {})
+                colls = r.get("collectives", {})
+                top = sorted(
+                    colls.items(),
+                    key=lambda kv: -kv[1].get("stepped_bytes", kv[1]["bytes"]),
+                )[:2]
+                tops = "; ".join(
+                    f"{k}×{v['count']}"
+                    for k, v in top
+                )
+                lines.append(
+                    "| {a} | {s} | {m} | {st} | {fl:.1f} | {ar:.2f} | {tm:.2f} | {w:.3f} | {tp} |".format(
+                        a=arch,
+                        s=shape,
+                        m=mesh,
+                        st=r["status"],
+                        fl=r.get("cost", {}).get("flops", 0) / 1e9,
+                        ar=mem.get("argument_bytes", 0) / dev / 2**30,
+                        tm=mem.get("temp_bytes", 0) / 2**30,
+                        w=r.get("collective_wire_bytes", 0) / 2**30,
+                        tp=tops,
+                    )
+                )
+    return "\n".join(lines)
+
+
+def roofline_table(policy="ssprop"):
+    from benchmarks import roofline as R
+
+    lines = [
+        "| arch | shape | compute s | memory s (model) | memory s (HLO-bytes UB) | collective s | dominant | roofline frac | MODEL/HLO flops |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            row = R.roofline_row(arch, shape, policy=policy)
+            if row.get("status") != "ok":
+                lines.append(f"| {arch} | {shape} | — | — | — | — | {row['status']} | | |")
+                continue
+            lines.append(
+                "| {a} | {s} | {c:.4f} | {m:.4f} | {mh:.4f} | {co:.4f} | {d} | {f:.3f} | {u:.2f} |".format(
+                    a=arch, s=shape, c=row["compute_s"], m=row["memory_s"],
+                    mh=row["memory_hlo_s"], co=row["collective_s"],
+                    d=row["dominant"], f=row["roofline_fraction"],
+                    u=row["useful_ratio"],
+                )
+            )
+    return "\n".join(lines)
+
+
+def variants_table(cells):
+    from benchmarks import roofline as R
+
+    lines = [
+        "| cell | policy | compute s | collective s | temp GiB/dev | wire GiB/step |",
+        "|---|---|---|---|---|---|",
+    ]
+    for arch, shape in cells:
+        for pol in ("dense", "ssprop", "ssprop_tp", "opt"):
+            r = _load(arch, shape, "single", pol)
+            if r is None or r["status"] != "ok":
+                continue
+            row = R.roofline_row(arch, shape, policy=pol)
+            comp = f"{row['compute_s']:.4f}" if row.get("status") == "ok" else "—"
+            lines.append(
+                "| {a} × {s} | {p} | {c} | {co:.4f} | {t:.2f} | {w:.3f} |".format(
+                    a=arch, s=shape, p=pol, c=comp,
+                    co=r.get("collective_wire_bytes", 0) / 50e9,
+                    t=r.get("memory", {}).get("temp_bytes", 0) / 2**30,
+                    w=r.get("collective_wire_bytes", 0) / 2**30,
+                )
+            )
+    return "\n".join(lines)
+
+
+def main():
+    print("## Dry-run table\n")
+    print(dryrun_table())
+    print("\n## Roofline table (ssprop baseline)\n")
+    print(roofline_table())
+    print("\n## Hillclimb variants\n")
+    print(
+        variants_table(
+            [
+                ("mistral-large-123b", "train_4k"),
+                ("kimi-k2-1t-a32b", "prefill_32k"),
+                ("nemotron-4-15b", "decode_32k"),
+            ]
+        )
+    )
+
+
+if __name__ == "__main__":
+    main()

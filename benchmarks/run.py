@@ -1,0 +1,28 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    from benchmarks import (
+        fig2_sensitivity,
+        roofline,
+        table4_classification,
+        table5_generation,
+        table6_dropout,
+        table7_flops_matched,
+    )
+
+    print("name,us_per_call,derived")
+    table4_classification.run()
+    table5_generation.run()
+    table6_dropout.run()
+    table7_flops_matched.run()
+    fig2_sensitivity.run()
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

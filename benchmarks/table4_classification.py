@@ -1,0 +1,86 @@
+"""Paper Table 4: classification backward-FLOPs, dense vs ssProp.
+
+The FLOPs columns are analytic (Eq. 6/7) over the real layer shapes —
+they reproduce the paper's numbers exactly (285.32B/669.75B per iter on
+CIFAR). Wall time is measured on a reduced CPU-sized step to demonstrate
+the time-parity claim (sparse step not slower than dense).
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.policy import SsPropPolicy, paper_default
+from repro.core.schedulers import average_rate
+from repro.models import resnet
+from repro.optim import adam
+
+# dataset -> (image, batch) per paper Tables 1-2
+DATASETS = {
+    "mnist": ((1, 28, 28), 128),
+    "fashionmnist": ((1, 28, 28), 128),
+    "cifar10": ((3, 32, 32), 128),
+    "cifar100": ((3, 32, 32), 128),
+    "celeba": ((3, 64, 64), 128),
+    "imagenet1k": ((3, 224, 224), 32),
+}
+
+PAPER_TABLE4 = {  # (dense B/iter, paper ssprop B/iter) for resnet18/50
+    ("cifar10", "resnet18"): (285.32, 171.61),
+    ("cifar10", "resnet50"): (669.75, 404.18),
+    ("mnist", "resnet18"): (234.10, 140.79),
+    ("imagenet1k", "resnet18"): (3495.14, 2102.19),
+}
+
+
+def _step(name, image, batch, policy):
+    params = resnet.init_params(name, jax.random.PRNGKey(0), num_classes=10)
+    opt = adam.init(params)
+    cfg = adam.AdamConfig(lr=2e-4)
+
+    def loss_fn(p, x, y):
+        logits = resnet.forward(name, p, x, policy)
+        return -jax.nn.log_softmax(logits)[jnp.arange(x.shape[0]), y].mean()
+
+    @jax.jit
+    def step(p, o, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p2, o2, _ = adam.apply_updates(cfg, p, g, o)
+        return p2, o2, l
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch,) + image)
+    y = jax.random.randint(jax.random.PRNGKey(2), (batch,), 0, 10)
+    return lambda: step(params, opt, x, y)
+
+
+def run():
+    # analytic FLOPs table (all datasets × resnet18/50), avg bar rate 0.4
+    avg = average_rate("epoch_bar", total_steps=100, steps_per_epoch=10, target=0.8)
+    for ds, (image, batch) in DATASETS.items():
+        for name in ("resnet18", "resnet50"):
+            dense, _ = resnet.flops_per_iter(name, batch, image)
+            _, sp = resnet.flops_per_iter(name, batch, image, avg)
+            saved = 1 - sp / dense
+            emit(
+                f"table4/{ds}/{name}/flops",
+                0.0,
+                f"dense_B={dense/1e9:.2f};ssprop_B={sp/1e9:.2f};saved={saved:.3f}",
+            )
+    # paper cross-check
+    for (ds, name), (paper_dense, paper_sp) in PAPER_TABLE4.items():
+        image, batch = DATASETS[ds]
+        dense, _ = resnet.flops_per_iter(name, batch, image)
+        _, sp = resnet.flops_per_iter(name, batch, image, avg)
+        emit(
+            f"table4/check/{ds}/{name}",
+            0.0,
+            f"ours_dense={dense/1e9:.2f};paper_dense={paper_dense};"
+            f"ours_ssprop={sp/1e9:.2f};paper_ssprop={paper_sp}",
+        )
+    # measured wall time (reduced: 16x16 images, batch 16, CPU)
+    for name in ("resnet18",):
+        f_dense = _step(name, (3, 16, 16), 16, SsPropPolicy(0.0))
+        f_sp = _step(name, (3, 16, 16), 16, paper_default(0.8))
+        t_d = time_fn(f_dense, iters=3)
+        t_s = time_fn(f_sp, iters=3)
+        emit(f"table4/walltime/{name}/dense", t_d, "reduced-cpu")
+        emit(f"table4/walltime/{name}/ssprop80", t_s, f"ratio={t_s/t_d:.2f}")

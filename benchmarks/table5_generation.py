@@ -1,0 +1,50 @@
+"""Paper Table 5: DDPM generation backward-FLOPs, dense vs ssProp,
+plus a measured reduced train step (time-parity claim)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core.policy import SsPropPolicy, paper_default
+from repro.core.schedulers import average_rate
+from repro.models import ddpm
+from repro.optim import adam
+
+DATASETS = {
+    "mnist": ((1, 28, 28), 128, 200),
+    "fashionmnist": ((1, 28, 28), 128, 200),
+    "celeba": ((3, 64, 64), 128, 1000),
+}
+
+
+def run():
+    avg = average_rate("epoch_bar", total_steps=100, steps_per_epoch=10, target=0.8)
+    for ds, (image, batch, timesteps) in DATASETS.items():
+        dense, _ = ddpm.flops_per_iter(batch, image, base=64)
+        _, sp = ddpm.flops_per_iter(batch, image, base=64, drop_rate=avg)
+        emit(
+            f"table5/{ds}/ddpm/flops",
+            0.0,
+            f"dense_B={dense/1e9:.2f};ssprop_B={sp/1e9:.2f};saved={1-sp/dense:.3f};T={timesteps}",
+        )
+
+    # measured reduced step
+    params = ddpm.init_params(jax.random.PRNGKey(0), channels=1, base=16, t_dim=64)
+    sched = ddpm.make_schedule(50)
+    opt = adam.init(params)
+    ocfg = adam.adamw()
+    x0 = jax.random.normal(jax.random.PRNGKey(1), (8, 1, 16, 16))
+
+    def make(policy):
+        @jax.jit
+        def step(p, o, x, rng):
+            l, g = jax.value_and_grad(lambda p: ddpm.loss_fn(p, sched, x, rng, policy))(p)
+            p2, o2, _ = adam.apply_updates(ocfg, p, g, o)
+            return p2, o2, l
+
+        rng = jax.random.PRNGKey(2)
+        return lambda: step(params, opt, x0, rng)
+
+    t_d = time_fn(make(SsPropPolicy(0.0)), iters=3)
+    t_s = time_fn(make(paper_default(0.8)), iters=3)
+    emit("table5/walltime/ddpm/dense", t_d, "reduced-cpu")
+    emit("table5/walltime/ddpm/ssprop80", t_s, f"ratio={t_s/t_d:.2f}")

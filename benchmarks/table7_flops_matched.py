@@ -1,0 +1,59 @@
+"""Paper Table 7 (Q2): sparse ResNet-50 vs FLOPs-matched ResNet-26.
+
+The paper's control: ResNet-26 (BasicBlock 2-3-5-2) consumes ~the same
+backward FLOPs as an ssProp-sparsified ResNet-50. We reproduce the FLOPs
+match analytically and train both reduced variants on the synthetic task
+to show both modes learn (paper: ssProp-50 ≈ ResNet-26 accuracy; both
+ssProp variants beat their dense counterparts on over-fit-prone data).
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.policy import SsPropPolicy, paper_default
+from repro.data.pipeline import ImagePipeline, ImagePipelineConfig
+from repro.models import resnet
+from repro.optim import adam
+
+
+def _train(name, policy, steps=16, seed=0):
+    pipe = ImagePipeline(ImagePipelineConfig((3, 16, 16), 10, 32, seed=5), n_train=256)
+    params = resnet.init_params(name, jax.random.PRNGKey(seed), num_classes=10)
+    opt = adam.init(params)
+    ocfg = adam.AdamConfig(lr=1e-3)
+
+    def loss_fn(p, x, y):
+        logits = resnet.forward(name, p, x, policy)
+        return -jax.nn.log_softmax(logits)[jnp.arange(x.shape[0]), y].mean()
+
+    @jax.jit
+    def step(p, o, x, y):
+        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p2, o2, _ = adam.apply_updates(ocfg, p, g, o)
+        return p2, o2, l
+
+    l = None
+    for i in range(steps):
+        b = jax.tree.map(jnp.asarray, pipe.batch_at(i))
+        params, opt, l = step(params, opt, b["images"], b["labels"])
+    ev = pipe.eval_batch(128)
+    logits = resnet.forward(name, params, jnp.asarray(ev["images"]), SsPropPolicy(0.0), train=False)
+    acc = float((jnp.argmax(logits, -1) == jnp.asarray(ev["labels"])).mean())
+    return float(l), acc
+
+
+def run():
+    d26, _ = resnet.flops_per_iter("resnet26", 128, (3, 32, 32))
+    d50, s50 = resnet.flops_per_iter("resnet50", 128, (3, 32, 32), 0.4)
+    emit("table7/flops_match", 0.0,
+         f"resnet26_dense_B={d26/1e9:.2f};ssprop50_avg_B={s50/1e9:.2f};"
+         f"ratio={s50/d26:.3f};paper=440.19_vs_404.18")
+
+    for name, pol, tag in [
+        ("resnet26", SsPropPolicy(0.0), "dense"),
+        ("resnet26", paper_default(0.8), "ssprop"),
+        ("resnet50", SsPropPolicy(0.0), "dense"),
+        ("resnet50", paper_default(0.8), "ssprop"),
+    ]:
+        l, acc = _train(name, pol)
+        emit(f"table7/train/{name}/{tag}", 0.0, f"loss={l:.3f};acc={acc:.3f}")

@@ -1,0 +1,211 @@
+"""Model / shape configuration system.
+
+One :class:`ModelConfig` dataclass covers every assigned architecture
+family (dense, MoE, hybrid SSM+attn, pure SSM, encoder-decoder, VLM).
+Each ``repro/configs/<arch>.py`` exports ``CONFIG`` with the exact
+constants from the assignment table and a ``reduced()`` smoke-test
+variant. ``repro.configs.registry`` maps ``--arch`` ids to them.
+
+Input shapes are global; the four assigned shape cells live in
+:data:`SHAPES`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description (see assignment table; DESIGN.md §4)."""
+
+    name: str
+    family: str  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    act: str = "silu"  # silu | gelu | relu2
+    gated_mlp: bool = True  # False: 2-matrix MLP (nemotron relu2, whisper)
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+
+    # MoE
+    n_experts: int = 0
+    moe_topk: int = 0
+    n_shared_experts: int = 0
+    moe_every: int = 1  # apply MoE on layers where (layer % moe_every == moe_offset)
+    moe_offset: int = 0
+    capacity_factor: float = 1.25
+    moe_dp_groups: int = 0  # >0: DP-local MoE dispatch (§Perf iteration 2)
+
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    attn_every: int = 0  # hybrid: one attention layer per this many (jamba 8)
+
+    # encoder-decoder
+    n_enc_layers: int = 0
+    enc_seq: int = 0  # fixed encoder length (whisper: 1500 frames)
+
+    # VLM
+    n_patches: int = 0  # prefix length of stub patch embeddings
+
+    # numerics / memory
+    attn_q_chunk: int = 1024  # blocked-attention query chunk (memory lever)
+    decode_seq_shard: bool = False  # §Perf iter 3: seq-sharded KV decode
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+
+    # ssProp integration: which projections get the sparse backward.
+    ssprop_projections: bool = True
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 for clean TP sharding.
+
+        Standard practice (MaxText/Megatron pad vocab): the embedding
+        table gets padded rows, logits for padded ids are masked to -inf.
+        The logical vocab (targets, sampling) is unchanged.
+        """
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def supports_shape(self, shape: ShapeConfig) -> Tuple[bool, str]:
+        """Whether a shape cell applies (long_500k needs sub-quadratic)."""
+        if shape.seq_len > 100_000 and self.family not in ("ssm", "hybrid"):
+            return False, "long_500k skipped: pure full-attention arch (DESIGN.md §4)"
+        return True, ""
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks), for 6ND."""
+        d, v = self.d_model, self.vocab
+        emb = v * d * (1 if self.family != "encdec" else 1) + v * d  # tok + unembed
+        per_attn = (
+            self.n_heads * self.head_dim * d  # q
+            + 2 * self.n_kv_heads * self.head_dim * d  # kv
+            + self.n_heads * self.head_dim * d  # o
+        )
+        per_mlp = (3 if self.gated_mlp else 2) * d * self.d_ff
+        per_moe = (
+            (self.n_experts + self.n_shared_experts) * 3 * d * self.d_ff
+            + d * self.n_experts
+        )
+        per_ssm = (
+            d * (2 * self.d_inner + 2 * self.ssm_state + self.n_ssm_heads)
+            + self.d_inner * d
+        )
+        total = emb
+        n_dec = self.n_layers
+        for i in range(n_dec):
+            is_attn = (self.attn_every == 0) or (i % self.attn_every == 0)
+            if self.family in ("ssm",):
+                total += per_ssm
+                continue
+            if self.family == "hybrid":
+                total += per_attn if is_attn else per_ssm
+            else:
+                total += per_attn
+            if self.is_moe and (i % self.moe_every == self.moe_offset):
+                total += per_moe
+            else:
+                total += per_mlp
+        for _ in range(self.n_enc_layers):
+            total += per_attn + per_mlp
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: routed top-k + shared)."""
+        if not self.is_moe:
+            return self.param_count()
+        d = self.d_model
+        full_moe = (
+            (self.n_experts + self.n_shared_experts) * 3 * d * self.d_ff
+            + d * self.n_experts
+        )
+        act_moe = (
+            (self.moe_topk + self.n_shared_experts) * 3 * d * self.d_ff
+            + d * self.n_experts
+        )
+        n_moe_layers = sum(
+            1
+            for i in range(self.n_layers)
+            if (i % self.moe_every == self.moe_offset)
+            and not (self.family == "hybrid" and False)
+        )
+        return self.param_count() - n_moe_layers * (full_moe - act_moe)
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family variant for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 4 if self.attn_every else 2),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=max(1, min(self.n_kv_heads, 2)),
+            head_dim=32,
+            d_ff=256,
+            vocab=512,
+            n_experts=min(self.n_experts, 4),
+            moe_topk=min(self.moe_topk, 2),
+            n_shared_experts=min(self.n_shared_experts, 1),
+            ssm_state=min(self.ssm_state, 16),
+            ssm_headdim=32 if self.ssm_state else self.ssm_headdim,
+            ssm_chunk=16,
+            n_enc_layers=min(self.n_enc_layers, 2),
+            enc_seq=min(self.enc_seq, 32) if self.enc_seq else 0,
+            n_patches=min(self.n_patches, 8) if self.n_patches else 0,
+            attn_every=min(self.attn_every, 2) if self.attn_every else 0,
+            dtype="float32",
+            remat=False,
+            scan_layers=self.scan_layers,
+        )
+        if self.attn_every:
+            small["n_layers"] = self.attn_every * 2 if self.attn_every <= 2 else 4
+            small["attn_every"] = 2
+        small.update(overrides)
+        return dataclasses.replace(self, **small)

@@ -1,0 +1,45 @@
+"""``--arch`` id → ModelConfig registry (assigned archs + paper models)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+
+_ARCH_MODULES = {
+    "mistral-large-123b": "mistral_large_123b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "deepseek-67b": "deepseek_67b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "whisper-large-v3": "whisper_large_v3",
+    "paligemma-3b": "paligemma_3b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "mamba2-1.3b": "mamba2_1_3b",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    try:
+        mod = _ARCH_MODULES[arch]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}") from None
+    return importlib.import_module(f"repro.configs.{mod}").CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def all_cells():
+    """All (arch, shape) cells with applicability flags — 40 rows."""
+    rows = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, why = cfg.supports_shape(shape)
+            rows.append((arch, sname, ok, why))
+    return rows

@@ -1,0 +1,47 @@
+"""ssProp core: scheduled channel-sparse back-propagation.
+
+The paper's contribution as a composable JAX module:
+
+* :mod:`repro.core.sparsity`   — channel importance + top-k selection.
+* :mod:`repro.core.schedulers` — drop-rate schedulers (constant, linear,
+  cosine, bar, 2-epoch bar).
+* :mod:`repro.core.dense`      — ``sparse_dense``: matmul with
+  channel-sparse backward (custom_vjp).
+* :mod:`repro.core.conv`       — ``sparse_conv2d``: convolution with
+  channel-sparse backward (custom_vjp).
+* :mod:`repro.core.flops`      — the paper's FLOPs model (Eq. 6-11).
+* :mod:`repro.core.policy`     — ``SsPropPolicy`` configuration object.
+"""
+from repro.core.policy import SsPropPolicy
+from repro.core.schedulers import (
+    bar_schedule,
+    constant_schedule,
+    cosine_schedule,
+    drop_rate_for_step,
+    epoch_bar_schedule,
+    linear_schedule,
+)
+from repro.core.sparsity import (
+    channel_importance,
+    select_topk_channels,
+    select_topk_blocks,
+)
+from repro.core.dense import sparse_dense
+from repro.core.conv import sparse_conv2d
+from repro.core import flops
+
+__all__ = [
+    "SsPropPolicy",
+    "sparse_dense",
+    "sparse_conv2d",
+    "channel_importance",
+    "select_topk_channels",
+    "select_topk_blocks",
+    "constant_schedule",
+    "linear_schedule",
+    "cosine_schedule",
+    "bar_schedule",
+    "epoch_bar_schedule",
+    "drop_rate_for_step",
+    "flops",
+]

@@ -1,0 +1,153 @@
+"""``sparse_conv2d``: convolution with ssProp channel-sparse backward.
+
+Forward is ``jax.lax.conv_general_dilated`` (NCHW / OIHW, matching the
+paper's tensor layout). Backward applies the paper's Fig. 1(a) pipeline:
+select top-K output channels of dY, then compute dX and dW through the
+*shrunk* convolution — we take the VJP of the conv restricted to the kept
+output channels, which XLA lowers to transposed convs with ``C_out' = K``
+(exactly the (1-D) FLOPs saving of Eq. 9, without img2col).
+
+The paper's img2col exposition is replaced by the framework-native conv —
+the paper itself does the same for its fast path ("PyTorch built-in
+backward version"). See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import SsPropPolicy
+from repro.core import sparsity
+
+_DN = ("NCHW", "OIHW", "NCHW")
+
+
+def _norm_pair(v) -> Tuple[int, int]:
+    if isinstance(v, int):
+        return (v, v)
+    return tuple(v)
+
+
+def _conv(x, w, stride, padding, dilation, groups):
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=stride,
+        padding=padding,
+        rhs_dilation=dilation,
+        dimension_numbers=_DN,
+        feature_group_count=groups,
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
+def _sparse_conv2d(policy, has_bias, stride, padding, dilation, groups, x, w, b, key32):
+    y = _conv(x, w, stride, padding, dilation, groups)
+    if has_bias:
+        y = y + b[None, :, None, None]
+    return y
+
+
+def _fwd(policy, has_bias, stride, padding, dilation, groups, x, w, b, key32):
+    y = _sparse_conv2d(policy, has_bias, stride, padding, dilation, groups, x, w, b, key32)
+    return y, (x, w, key32)
+
+
+def _bwd(policy: SsPropPolicy, has_bias, stride, padding, dilation, groups, res, dy):
+    x, w, key32 = res
+    c_out = w.shape[0]
+
+    key = None
+    if policy.selection == "random":
+        key = jax.random.wrap_key_data(key32.astype(jnp.uint32))
+
+    def full_vjp(dy_eff):
+        _, vjp = jax.vjp(lambda x_, w_: _conv(x_, w_, stride, padding, dilation, groups), x, w)
+        dx, dw = vjp(dy_eff)
+        db = dy_eff.sum(axis=(0, 2, 3)) if has_bias else None
+        return dx, dw, db
+
+    if not policy.active:
+        dx, dw, db = full_vjp(dy)
+    elif policy.mask_mode:
+        dy_m = sparsity.mask_grad(dy, policy, channel_axis=1, key=key)
+        dx, dw, db = full_vjp(dy_m)
+    else:
+        idx, k = sparsity.select_indices(dy, policy, channel_axis=1, key=key)
+        dy_k = jnp.take(dy, idx, axis=1)          # [B, K, H, W]
+        w_k = jnp.take(w, idx, axis=0)            # [K, C_in/g, Kh, Kw]
+        # VJP of the conv restricted to the kept output channels — the
+        # transposed convs XLA emits have C_out' = K, i.e. shrunk FLOPs.
+        _, vjp_k = jax.vjp(
+            lambda x_, w_: _conv(x_, w_, stride, padding, dilation, groups), x, w_k
+        )
+        dx, dw_k = vjp_k(dy_k)
+        dw = jnp.zeros_like(w).at[idx].set(dw_k.astype(w.dtype))
+        db = (
+            jnp.zeros((c_out,), dtype=dy.dtype).at[idx].set(dy_k.sum(axis=(0, 2, 3)))
+            if has_bias
+            else None
+        )
+
+    db_out = (
+        db.astype(dy.dtype) if has_bias else jnp.zeros((c_out,), dy.dtype)
+    )
+    return (
+        dx.astype(x.dtype),
+        dw.astype(w.dtype),
+        db_out,
+        np.zeros(key32.shape, dtype=jax.dtypes.float0),
+    )
+
+
+_sparse_conv2d.defvjp(_fwd, _bwd)
+
+_DUMMY_KEY = np.zeros((2,), dtype=np.uint32)
+
+
+def sparse_conv2d(
+    x: jax.Array,
+    w: jax.Array,
+    b: Optional[jax.Array] = None,
+    *,
+    stride: Union[int, Sequence[int]] = 1,
+    padding: Union[str, int, Sequence[Tuple[int, int]]] = 0,
+    dilation: Union[int, Sequence[int]] = 1,
+    groups: int = 1,
+    policy: SsPropPolicy = SsPropPolicy(),
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """2-D convolution (NCHW) with ssProp scheduled-sparse backward.
+
+    Args:
+      x: ``[B, C_in, H, W]`` input.
+      w: ``[C_out, C_in // groups, Kh, Kw]`` filters (OIHW).
+      b: optional ``[C_out]`` bias.
+      stride / padding / dilation / groups: as in any DL framework; the
+        paper's simplifying assumptions (p=0, d=1, g=1) are *not* baked in.
+      policy: ssProp policy.
+      key: PRNG key for ``selection="random"``.
+    """
+    stride = _norm_pair(stride)
+    dilation = _norm_pair(dilation)
+    if isinstance(padding, int):
+        padding = ((padding, padding), (padding, padding))
+    elif isinstance(padding, str):
+        pass
+    else:
+        padding = tuple(tuple(p) for p in padding)
+    has_bias = b is not None
+    key32 = (
+        jax.random.key_data(key).astype(jnp.uint32).reshape(-1)
+        if key is not None
+        else jnp.asarray(_DUMMY_KEY)
+    )
+    if b is None:
+        b = jnp.zeros((w.shape[0],), dtype=x.dtype)
+    return _sparse_conv2d(
+        policy, has_bias, stride, padding, dilation, groups, x, w, b, key32
+    )

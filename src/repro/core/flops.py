@@ -1,0 +1,108 @@
+"""The paper's backward-FLOPs model (Eq. 6-11).
+
+Counting convention (paper, "Drop Rate Lower Bound"): each Add, Sub, Mul
+or Div is one FLOP; sorting is comparisons only (0 FLOPs); the importance
+reduction adds ``(Bt*H_out*W_out - 1) * C_out`` FLOPs.
+
+These formulas drive the benchmark tables (paper Tables 4-7) and the
+property test on the drop-rate lower bound (Eq. 10-11).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+
+def conv_backward_flops(
+    bt: int, h_out: int, w_out: int, c_in: int, c_out: int, k: int
+) -> int:
+    """Eq. 6: backward FLOPs of one convolution, columnized form.
+
+    ``(Bt*H_out*W_out) * (4*C_in*K^2 + 1) * C_out``
+    """
+    m = bt * h_out * w_out
+    return m * (4 * c_in * k * k + 1) * c_out
+
+
+def conv_backward_flops_ssprop(
+    bt: int, h_out: int, w_out: int, c_in: int, c_out: int, k: int, drop_rate: float
+) -> int:
+    """Eq. 9 RHS: conv backward FLOPs with ssProp at ``drop_rate``.
+
+    ``[(4MN + M)(1 - D) + M] * C_out`` with ``M = Bt*H_out*W_out`` and
+    ``N = C_in*K^2``; the trailing ``M*C_out`` is the importance
+    reduction overhead.
+    """
+    m = bt * h_out * w_out
+    n = c_in * k * k
+    return int(((4 * m * n + m) * (1.0 - drop_rate) + m) * c_out)
+
+
+def batchnorm_backward_flops(bt: int, h: int, w: int, c: int) -> int:
+    """Eq. 7: ``12*(Bt*H*W*C) + 10*C``."""
+    return 12 * (bt * h * w * c) + 10 * c
+
+
+def dropout_backward_flops(bt: int, h: int, w: int, c: int) -> int:
+    """Eq. 8: ``2*(Bt*H*W*C)``."""
+    return 2 * (bt * h * w * c)
+
+
+def drop_rate_lower_bound(c_in: int, k: int) -> float:
+    """Eq. 10: minimum drop rate that saves computation.
+
+    ``D > 1 / (4*C_in*K^2 + 1)``; Eq. 11 notes this is <= ~3% for K>=3.
+    """
+    return 1.0 / (4 * c_in * k * k + 1)
+
+
+def dense_backward_flops(m: int, d_in: int, d_out: int, bias: bool = True) -> int:
+    """Backward FLOPs of ``Y[M, D_out] = X[M, D_in] @ W + b``.
+
+    dX and dW are each a ``2*M*D_in*D_out`` FLOP matmul; the bias gradient
+    is an ``M*D_out`` reduction. This is Eq. 6 with K=1 (a 1x1 conv), the
+    form used for the transformer-projection extension (DESIGN.md §4).
+    """
+    f = 4 * m * d_in * d_out
+    if bias:
+        f += m * d_out
+    return f
+
+
+def dense_backward_flops_ssprop(
+    m: int, d_in: int, d_out: int, drop_rate: float, bias: bool = True
+) -> int:
+    """ssProp dense backward: shrunk matmuls + importance reduction."""
+    f = 4 * m * d_in * d_out * (1.0 - drop_rate)
+    if bias:
+        f += m * d_out * (1.0 - drop_rate)
+    f += m * d_out  # importance reduction (Eq. 9's +M per channel)
+    return int(f)
+
+
+def savings_fraction(
+    dense_flops: int, ssprop_flops: int
+) -> float:
+    """Fraction of backward FLOPs saved by ssProp."""
+    if dense_flops <= 0:
+        return 0.0
+    return 1.0 - ssprop_flops / dense_flops
+
+
+def conv_layer_report(
+    bt: int,
+    h_out: int,
+    w_out: int,
+    c_in: int,
+    c_out: int,
+    k: int,
+    drop_rate: float,
+) -> Dict[str, float]:
+    """Per-layer dict used by the benchmark tables."""
+    dense = conv_backward_flops(bt, h_out, w_out, c_in, c_out, k)
+    sparse = conv_backward_flops_ssprop(bt, h_out, w_out, c_in, c_out, k, drop_rate)
+    return {
+        "dense_flops": dense,
+        "ssprop_flops": sparse,
+        "saved": savings_fraction(dense, sparse),
+        "lower_bound": drop_rate_lower_bound(c_in, k),
+    }

@@ -1,0 +1,126 @@
+"""ssProp policy configuration.
+
+A :class:`SsPropPolicy` describes *how* backward gradients are sparsified.
+It is a static (hashable) config object threaded through model builders so
+every ``sparse_dense`` / ``sparse_conv2d`` call site sees the same policy.
+
+Shape-static requirement
+------------------------
+XLA requires static shapes, so the *keep count* K must be a Python int at
+trace time. The drop-rate *schedule* therefore lives outside jit: the
+train loop asks :func:`repro.core.schedulers.drop_rate_for_step` for the
+current rate, quantizes it to ``rate_buckets`` and retraces (cached per
+bucket). For the paper's 2-epoch bar scheduler this means exactly two
+compiled executables: dense (rate 0.0) and sparse (rate 0.8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class SsPropPolicy:
+    """Static configuration for scheduled sparse back-propagation.
+
+    Attributes:
+      drop_rate: fraction of output channels whose gradients are dropped
+        in the *current* compiled step. 0.0 disables sparsification.
+      granularity: ``"channel"`` = per-channel top-k (paper-faithful);
+        ``"block"`` = top-k over contiguous channel blocks of
+        ``block_size`` (TPU/MXU-native adaptation, see DESIGN.md §3).
+      block_size: channel-block width for ``granularity="block"``.
+        128 matches the TPU lane width / MXU tile.
+      selection: ``"topk"`` (paper) or ``"random"`` (Fig. 2(b) ablation).
+      scheduler: which schedule produced this rate — carried for logging
+        and FLOPs accounting only; the schedule itself runs in the host
+        loop (see module docstring).
+      target_rate: the schedule's target drop rate (e.g. 0.8 for the
+        paper's bar schedule).
+      rate_buckets: allowed compiled drop rates. The host loop rounds the
+        scheduled rate to the nearest bucket so the jit cache stays small.
+      mask_mode: if True, dropped channels are zeroed but matmuls stay
+        full-size (reference semantics; no FLOPs saved — used by tests and
+        as the XLA-autodiff-visible fallback). If False, matmuls shrink to
+        the kept channels (gather mode, FLOPs actually drop).
+      sparsify_dx / sparsify_dw: apply sparsity to the input-gradient /
+        weight-gradient matmul. Paper uses both.
+      use_pallas: route the shrunk backward matmuls through the Pallas
+        gathered-matmul kernels (TPU target; interpret-mode on CPU) rather
+        than plain jnp gather+dot.
+      seed: RNG seed for ``selection="random"``.
+    """
+
+    drop_rate: float = 0.0
+    granularity: str = "channel"  # "channel" | "block"
+    block_size: int = 128
+    selection: str = "topk"  # "topk" | "random"
+    scheduler: str = "epoch_bar"  # constant|linear|cosine|bar|epoch_bar
+    target_rate: float = 0.8
+    rate_buckets: Tuple[float, ...] = (0.0, 0.25, 0.5, 0.8, 0.95)
+    mask_mode: bool = False
+    sparsify_dx: bool = True
+    sparsify_dw: bool = True
+    use_pallas: bool = False
+    tp_shards: int = 0  # >0: TP-local per-shard top-k (comm-free gather;
+    #   equal k per shard -> load-balanced shrunk matmuls). §Perf iter 1.
+    bwd_dtype: str = ""  # "bfloat16": backward matmuls/psums in bf16
+    #   (halves the fp32 cotangent all-reduce volume). §Perf iter 5.
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 <= self.drop_rate < 1.0:
+            raise ValueError(f"drop_rate must be in [0, 1), got {self.drop_rate}")
+        if self.granularity not in ("channel", "block"):
+            raise ValueError(f"bad granularity {self.granularity!r}")
+        if self.selection not in ("topk", "random"):
+            raise ValueError(f"bad selection {self.selection!r}")
+
+    @property
+    def active(self) -> bool:
+        return self.drop_rate > 0.0
+
+    def keep_count(self, channels: int) -> int:
+        """Number of channels (or blocks) retained for ``channels`` outputs.
+
+        Per-channel: K = max(1, round((1-D) * C)).
+        Block: computed over ceil(C / block_size) blocks, at least 1 block.
+        """
+        if self.granularity == "channel":
+            return max(1, int(round((1.0 - self.drop_rate) * channels)))
+        nblocks = -(-channels // self.block_size)
+        return max(1, int(round((1.0 - self.drop_rate) * nblocks)))
+
+    def with_rate(self, rate: float) -> "SsPropPolicy":
+        return dataclasses.replace(self, drop_rate=float(rate))
+
+    def bucketed(self, rate: float) -> "SsPropPolicy":
+        """Round ``rate`` to the nearest allowed bucket and return a policy."""
+        best = min(self.rate_buckets, key=lambda b: abs(b - rate))
+        return self.with_rate(best)
+
+
+DENSE = SsPropPolicy(drop_rate=0.0)
+
+
+def paper_default(drop_rate: float = 0.8) -> SsPropPolicy:
+    """The paper's winning configuration: channel top-k + 2-epoch bar."""
+    return SsPropPolicy(
+        drop_rate=drop_rate,
+        granularity="channel",
+        selection="topk",
+        scheduler="epoch_bar",
+        target_rate=drop_rate,
+    )
+
+
+def tpu_default(drop_rate: float = 0.8) -> SsPropPolicy:
+    """TPU-native configuration: 128-channel-block top-k (DESIGN.md §3)."""
+    return SsPropPolicy(
+        drop_rate=drop_rate,
+        granularity="block",
+        block_size=128,
+        selection="topk",
+        scheduler="epoch_bar",
+        target_rate=drop_rate,
+    )

@@ -1,0 +1,115 @@
+"""Drop-rate schedulers (paper Fig. 2(c)/(d)).
+
+All schedulers map training progress to a drop rate in ``[0, target]``.
+They run in the *host* training loop (Python floats), because the keep
+count K must be static under jit (see ``policy.py``). The paper's winner
+is the **bar scheduler with a 2-epoch period** (``epoch_bar``): dense on
+even epochs, full target rate on odd epochs — the average rate over
+training is ``target / 2`` (≈40% for the 80% target), matching the
+paper's "nearly 40% computation saved".
+"""
+from __future__ import annotations
+
+import math
+
+
+def constant_schedule(progress: float, target: float) -> float:
+    """Fixed drop rate for the whole run (paper's 'constant' baseline)."""
+    del progress
+    return target
+
+
+def linear_schedule(progress: float, target: float) -> float:
+    """Ramp 0 → target linearly from first to last epoch."""
+    return target * min(max(progress, 0.0), 1.0)
+
+
+def cosine_schedule(progress: float, target: float) -> float:
+    """Ramp 0 → target with a cosine ease-in."""
+    p = min(max(progress, 0.0), 1.0)
+    return target * 0.5 * (1.0 - math.cos(math.pi * p))
+
+
+def bar_schedule(progress: float, target: float) -> float:
+    """Step function: 0 for the first half of training, target after."""
+    return target if progress >= 0.5 else 0.0
+
+
+def epoch_bar_schedule(epoch: int, target: float) -> float:
+    """The paper's best config: 2-epoch period bar.
+
+    Epoch 0, 2, 4, ... train dense; epoch 1, 3, 5, ... train at the
+    target rate. (Paper numbers epochs from 1 and trains normally in
+    epochs 1, 3, 5 — identical parity pattern.)
+    """
+    return target if (epoch % 2 == 1) else 0.0
+
+
+def periodic_bar_schedule(step: int, period: int, target: float) -> float:
+    """Iteration-periodic bar (paper Fig. 2(d), 30–300-iteration periods).
+
+    First half of each period dense, second half at target rate.
+    """
+    if period <= 0:
+        raise ValueError("period must be positive")
+    return target if (step % period) >= (period // 2) else 0.0
+
+
+_SCHEDULES = {
+    "constant": constant_schedule,
+    "linear": linear_schedule,
+    "cosine": cosine_schedule,
+    "bar": bar_schedule,
+}
+
+
+def drop_rate_for_step(
+    scheduler: str,
+    *,
+    step: int,
+    steps_per_epoch: int,
+    total_steps: int,
+    target: float,
+    period: int = 0,
+) -> float:
+    """Resolve the drop rate for one training step under any scheduler.
+
+    ``epoch_bar`` keys on the epoch index; ``periodic_bar`` on the step
+    index with an explicit ``period``; the remaining schedules key on
+    fractional training progress.
+    """
+    if scheduler == "epoch_bar":
+        epoch = step // max(steps_per_epoch, 1)
+        return epoch_bar_schedule(epoch, target)
+    if scheduler == "periodic_bar":
+        return periodic_bar_schedule(step, period, target)
+    try:
+        fn = _SCHEDULES[scheduler]
+    except KeyError:
+        raise ValueError(f"unknown scheduler {scheduler!r}") from None
+    progress = step / max(total_steps - 1, 1)
+    return fn(progress, target)
+
+
+def average_rate(
+    scheduler: str,
+    *,
+    total_steps: int,
+    steps_per_epoch: int,
+    target: float,
+    period: int = 0,
+) -> float:
+    """Mean drop rate over a whole run (drives total-FLOPs accounting)."""
+    if total_steps <= 0:
+        return 0.0
+    acc = 0.0
+    for s in range(total_steps):
+        acc += drop_rate_for_step(
+            scheduler,
+            step=s,
+            steps_per_epoch=steps_per_epoch,
+            total_steps=total_steps,
+            target=target,
+            period=period,
+        )
+    return acc / total_steps

@@ -1,0 +1,210 @@
+"""Channel importance and top-k gradient selection (paper Fig. 1(a)).
+
+Given an output gradient ``dY``, the paper computes a per-output-channel
+importance — the spatial/batch mean of ``|dY|`` — sorts it, and keeps the
+top-K channels' gradients for the backward matmuls.
+
+Two granularities are provided (DESIGN.md §3):
+
+* ``"channel"``: per-channel top-k, exactly the paper.
+* ``"block"``: top-k over contiguous blocks of ``block_size`` channels —
+  the TPU-native form that keeps shrunk matmuls 128-lane/MXU aligned and
+  lets the Pallas kernel fuse the gather into HBM→VMEM block addressing.
+
+All functions are jit-safe: K is static, indices are data-dependent.
+Returned indices are **sorted ascending** — gathers with monotone indices
+lower to cheaper HLO and keep dW scatters coalesced.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import SsPropPolicy
+
+
+def channel_importance(dy: jax.Array, channel_axis: int = -1) -> jax.Array:
+    """Mean of ``|dy|`` over every axis except ``channel_axis``.
+
+    Returns a 1-D vector of length ``dy.shape[channel_axis]`` where larger
+    values mean the channel "contributes more significantly to the
+    gradients of inputs and weights/biases" (paper, Method).
+    """
+    axis = channel_axis % dy.ndim
+    reduce_axes = tuple(a for a in range(dy.ndim) if a != axis)
+    # fp32 accumulation: bf16 |dy| means underflow easily at large B*S.
+    return jnp.mean(jnp.abs(dy).astype(jnp.float32), axis=reduce_axes)
+
+
+def block_importance(imp: jax.Array, block_size: int) -> jax.Array:
+    """Aggregate per-channel importance into per-block importance.
+
+    Channels are padded with zeros up to a multiple of ``block_size``;
+    block importance is the mean over the block (zeros in a ragged tail
+    only dilute that tail block, matching "smallest gradients dropped
+    first" semantics).
+    """
+    c = imp.shape[0]
+    nblocks = -(-c // block_size)
+    pad = nblocks * block_size - c
+    if pad:
+        imp = jnp.pad(imp, (0, pad))
+    return imp.reshape(nblocks, block_size).mean(axis=1)
+
+
+def select_topk_channels(
+    imp: jax.Array,
+    k: int,
+    *,
+    selection: str = "topk",
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Indices of the K most important channels, sorted ascending.
+
+    ``selection="random"`` reproduces the paper's Fig. 2(b) ablation:
+    K channels chosen uniformly at random (requires ``key``).
+    """
+    c = imp.shape[0]
+    if not 0 < k <= c:
+        raise ValueError(f"k={k} out of range for {c} channels")
+    if selection == "topk":
+        _, idx = jax.lax.top_k(imp, k)
+    elif selection == "random":
+        if key is None:
+            raise ValueError("selection='random' requires a PRNG key")
+        idx = jax.random.permutation(key, c)[:k]
+    else:
+        raise ValueError(f"bad selection {selection!r}")
+    return jnp.sort(idx)
+
+
+def select_topk_blocks(
+    imp: jax.Array,
+    block_size: int,
+    k_blocks: int,
+    *,
+    selection: str = "topk",
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Indices of the K most important channel *blocks*, sorted ascending."""
+    bimp = block_importance(imp, block_size)
+    return select_topk_channels(bimp, k_blocks, selection=selection, key=key)
+
+
+def block_indices_to_channels(block_idx: jax.Array, block_size: int) -> jax.Array:
+    """Expand block indices to the flat channel indices they cover."""
+    offs = jnp.arange(block_size)
+    return (block_idx[:, None] * block_size + offs[None, :]).reshape(-1)
+
+
+def select_indices(
+    dy: jax.Array,
+    policy: SsPropPolicy,
+    *,
+    channel_axis: int = -1,
+    key: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, int]:
+    """Policy-driven selection: returns (sorted channel indices, K).
+
+    For block granularity the returned indices are the expanded channel
+    indices of the kept blocks (length ``k_blocks * block_size``, clipped
+    semantics handled by callers that pad the channel dim).
+    """
+    c = dy.shape[channel_axis % dy.ndim]
+    imp = channel_importance(dy, channel_axis)
+    if policy.granularity == "channel":
+        k = policy.keep_count(c)
+        idx = select_topk_channels(imp, k, selection=policy.selection, key=key)
+        return idx, k
+    k_blocks = policy.keep_count(c)
+    bidx = select_topk_blocks(
+        imp, policy.block_size, k_blocks, selection=policy.selection, key=key
+    )
+    idx = block_indices_to_channels(bidx, policy.block_size)
+    # Ragged tail: indices past C-1 are clamped; gathers of a clamped
+    # duplicate are masked out by callers via the mask path, but for the
+    # common LM case C % 128 == 0 and no clamping occurs.
+    idx = jnp.minimum(idx, c - 1)
+    return idx, k_blocks * policy.block_size
+
+
+def keep_mask(
+    dy_shape: Sequence[int],
+    idx: jax.Array,
+    *,
+    channel_axis: int = -1,
+    dtype=jnp.bool_,
+) -> jax.Array:
+    """Boolean mask over the channel axis: True on kept channels.
+
+    Used by ``mask_mode`` (reference semantics) and by tests.
+    """
+    c = dy_shape[channel_axis % len(dy_shape)]
+    flat = jnp.zeros((c,), dtype=jnp.bool_).at[idx].set(True)
+    shape = [1] * len(dy_shape)
+    shape[channel_axis % len(dy_shape)] = c
+    return flat.reshape(shape).astype(dtype)
+
+
+def select_indices_per_shard(
+    dy2: jax.Array,
+    policy: SsPropPolicy,
+    tp_shards: int,
+    *,
+    key: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, int]:
+    """TP-local selection: top-k/shard within each of ``tp_shards``
+    contiguous channel groups (the TP shards of the output dim).
+
+    Returns (idx [tp_shards, k_local] of *within-shard* channel indices,
+    k_local). Selection is balanced across shards by construction, so the
+    shrunk matmuls stay load-balanced, and — because the gather uses
+    ``take_along_axis`` on the shard-local axis — GSPMD keeps it
+    communication-free (DESIGN.md §3.4; §Perf iteration 1).
+    """
+    m, c = dy2.shape
+    assert c % tp_shards == 0, (c, tp_shards)
+    c_loc = c // tp_shards
+    imp = channel_importance(dy2, -1).reshape(tp_shards, c_loc)
+    if policy.granularity == "block":
+        # shard-local block size: small projections (e.g. kv with few
+        # heads) may hold fewer than block_size channels per shard.
+        bs = policy.block_size
+        while bs > 1 and (c_loc < bs or c_loc % bs):
+            bs //= 2
+        nblocks_loc = c_loc // bs
+        k_total = max(1, int(round((1.0 - policy.drop_rate) * (c // bs))))
+        k_loc_blocks = max(1, min(nblocks_loc, k_total // tp_shards))
+        bimp = imp.reshape(tp_shards, nblocks_loc, bs).mean(-1)
+        _, bidx = jax.lax.top_k(bimp, k_loc_blocks)  # [S, kb]
+        bidx = jnp.sort(bidx, axis=-1)
+        offs = jnp.arange(bs)
+        idx = (bidx[:, :, None] * bs + offs[None, None, :]).reshape(tp_shards, -1)
+        return idx, k_loc_blocks * bs
+    k_total = policy.keep_count(c)
+    k_loc = max(1, k_total // tp_shards)
+    if policy.selection == "random":
+        if key is None:
+            raise ValueError("random selection requires key")
+        noise = jax.random.uniform(key, imp.shape)
+        _, idx = jax.lax.top_k(noise, k_loc)
+    else:
+        _, idx = jax.lax.top_k(imp, k_loc)
+    return jnp.sort(idx, axis=-1), k_loc
+
+
+def mask_grad(
+    dy: jax.Array,
+    policy: SsPropPolicy,
+    *,
+    channel_axis: int = -1,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Zero out dropped channels of ``dy`` (mask-mode sparsification)."""
+    if not policy.active:
+        return dy
+    idx, _ = select_indices(dy, policy, channel_axis=channel_axis, key=key)
+    m = keep_mask(dy.shape, idx, channel_axis=channel_axis, dtype=dy.dtype)
+    return dy * m

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for ssProp's backward hot-spots.
+
+* ``gathered_matmul`` — kernel bodies (pl.pallas_call + BlockSpec):
+  block-gathered dX/dW matmuls (scalar-prefetch fused gather) and the
+  channel-importance reduction.
+* ``ops`` — jit'd public wrappers (padding, backend dispatch, scatter).
+* ``ref`` — pure-jnp oracles; tests assert_allclose against these.
+"""
+from repro.kernels import ops, ref
+from repro.kernels import gathered_matmul
+
+__all__ = ["ops", "ref", "gathered_matmul"]

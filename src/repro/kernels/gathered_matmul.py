@@ -1,0 +1,224 @@
+"""Pallas TPU kernels: channel-block-gathered backward matmuls.
+
+The TPU-native heart of ssProp (DESIGN.md §3.2): instead of materializing
+a shrunk ``dY_kept`` in HBM, the kept-block indices ride in SMEM (scalar
+prefetch) and the ``BlockSpec`` index maps address the kept 128-channel
+blocks of ``dY`` / ``W`` directly during the HBM→VMEM copy. The gather is
+thus free — the MXU only ever sees dense, 128-aligned tiles.
+
+Kernels:
+  * ``dx_gathered``  : dX[M, D_in]  = Σ_kb dY[:, blk] @ W[:, blk]^T
+  * ``dw_gathered``  : dWk[D_in, K] = X^T @ dY[:, kept]   (compact out)
+  * ``importance``   : imp[N]       = mean_M |dY|
+
+Grid iteration on TPU is sequential over the last axis, so accumulation
+into the revisited output block (init at step 0) is the standard pattern.
+All accumulation is fp32 (``preferred_element_type``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ----------------------------------------------------------------------
+# dX = dY[:, kept] @ W[:, kept]^T  — gather fused via scalar prefetch.
+# ----------------------------------------------------------------------
+def _dx_kernel(idx_ref, dy_ref, w_ref, out_ref, *, nk: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    dy_blk = dy_ref[...]  # [bm, bk]   kept block of dY
+    w_blk = w_ref[...]    # [bn, bk]   same kept block of W (D_in rows)
+    out_ref[...] += jax.lax.dot_general(
+        dy_blk,
+        w_blk,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def dx_gathered(
+    dy: jax.Array,
+    w: jax.Array,
+    block_idx: jax.Array,
+    *,
+    block_size: int = 128,
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """dX[M, D_in] from full dY[M, N], W[D_in, N], kept block_idx[KB].
+
+    M, D_in must be multiples of (bm, bn) and N of block_size — callers
+    (ops.py) pad. Output is fp32.
+    """
+    m, n = dy.shape
+    d_in, n2 = w.shape
+    assert n == n2, (n, n2)
+    kb = block_idx.shape[0]
+    assert m % bm == 0 and d_in % bn == 0 and n % block_size == 0
+
+    grid = (m // bm, d_in // bn, kb)
+    return pl.pallas_call(
+        functools.partial(_dx_kernel, nk=kb),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, block_size), lambda i, j, k, idx: (i, idx[k])),
+                pl.BlockSpec((bn, block_size), lambda i, j, k, idx: (j, idx[k])),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, idx: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, d_in), jnp.float32),
+        interpret=interpret,
+    )(block_idx, dy, w)
+
+
+# ----------------------------------------------------------------------
+# compact dW = X^T @ dY[:, kept] — output written compact [D_in, K].
+# ----------------------------------------------------------------------
+def _dw_kernel(idx_ref, x_ref, dy_ref, out_ref, *, nsteps: int):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x_blk = x_ref[...]    # [bk_m, bm]  rows of X, D_in cols
+    dy_blk = dy_ref[...]  # [bk_m, bs]  kept channel block of dY
+    out_ref[...] += jax.lax.dot_general(
+        x_blk,
+        dy_blk,
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def dw_gathered(
+    x: jax.Array,
+    dy: jax.Array,
+    block_idx: jax.Array,
+    *,
+    block_size: int = 128,
+    bm: int = 128,
+    bk_m: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Compact dW[D_in, KB*block_size] from X[M, D_in], dY[M, N].
+
+    Column block j of the output corresponds to channel block
+    ``block_idx[j]`` of the full dW; callers scatter it back.
+    """
+    m, d_in = x.shape
+    m2, n = dy.shape
+    assert m == m2
+    kb = block_idx.shape[0]
+    assert m % bk_m == 0 and d_in % bm == 0 and n % block_size == 0
+
+    nsteps = m // bk_m
+    grid = (d_in // bm, kb, nsteps)
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, nsteps=nsteps),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bk_m, bm), lambda i, j, s, idx: (s, i)),
+                pl.BlockSpec((bk_m, block_size), lambda i, j, s, idx: (s, idx[j])),
+            ],
+            out_specs=pl.BlockSpec((bm, block_size), lambda i, j, s, idx: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((d_in, kb * block_size), jnp.float32),
+        interpret=interpret,
+    )(block_idx, x, dy)
+
+
+# ----------------------------------------------------------------------
+# importance: imp[N] = mean_M |dY| — fp32 tree of row-block partials.
+# ----------------------------------------------------------------------
+def _imp_kernel(dy_ref, out_ref, *, m_total: int):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    blk = jnp.abs(dy_ref[...].astype(jnp.float32))
+    out_ref[...] += jnp.sum(blk, axis=0, keepdims=True) / m_total
+
+
+def importance(
+    dy: jax.Array,
+    *,
+    bm: int = 256,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-channel importance mean |dY| over rows: dy[M, N] -> [N] f32."""
+    m, n = dy.shape
+    assert m % bm == 0 and n % bn == 0
+    grid = (n // bn, m // bm)
+    out = pl.pallas_call(
+        functools.partial(_imp_kernel, m_total=m),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda j, s: (s, j))],
+        out_specs=pl.BlockSpec((1, bn), lambda j, s: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
+        interpret=interpret,
+    )(dy)
+    return out[0]
+
+
+# ----------------------------------------------------------------------
+# plain blocked matmul (used for the per-channel-granularity fallback
+# where the gather cannot be block-fused; also a tuning baseline).
+# ----------------------------------------------------------------------
+def _mm_kernel(a_ref, b_ref, out_ref):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jax.lax.dot_general(
+        a_ref[...],
+        b_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """A[M, K] @ B[K, N] -> [M, N] f32, MXU-tiled."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,80 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to tile multiples, backend detection (TPU → compiled
+kernel, anything else → ``interpret=True`` so CPU CI exercises the same
+kernel body), and the scatter of the compact dW back into the full
+weight-gradient buffer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gathered_matmul as gm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def dx_gathered(dy, w, block_idx, block_size: int = 128):
+    """dX[M, D_in] = dY[:, kept] @ W[:, kept]^T, gather fused in-kernel."""
+    m, n = dy.shape
+    d_in = w.shape[0]
+    dy_p = _pad_to(_pad_to(dy, 0, 128), 1, block_size)
+    w_p = _pad_to(_pad_to(w, 0, 128), 1, block_size)
+    out = gm.dx_gathered(
+        dy_p, w_p, block_idx, block_size=block_size, interpret=_interpret()
+    )
+    return out[:m, :d_in]
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "n_out"))
+def dw_gathered_scatter(x, dy, block_idx, n_out: int, block_size: int = 128):
+    """Full dW[D_in, N]: compact kernel output scattered into zeros."""
+    m, d_in = x.shape
+    x_p = _pad_to(_pad_to(x, 0, 128), 1, 128)
+    dy_p = _pad_to(_pad_to(dy, 0, 128), 1, block_size)
+    compact = gm.dw_gathered(
+        x_p, dy_p, block_idx, block_size=block_size, interpret=_interpret()
+    )  # [D_in_pad, KB*block_size]
+    compact = compact[:d_in]
+    kb = block_idx.shape[0]
+    dw = jnp.zeros((d_in, -(-n_out // block_size), block_size), jnp.float32)
+    dw = dw.at[:, block_idx, :].set(compact.reshape(d_in, kb, block_size))
+    return dw.reshape(d_in, -1)[:, :n_out]
+
+
+@jax.jit
+def importance(dy):
+    """Per-channel mean |dY| over all leading axes. dy [..., N] -> [N]."""
+    n = dy.shape[-1]
+    dy2 = dy.reshape(-1, n)
+    m = dy2.shape[0]
+    dy_p = _pad_to(_pad_to(dy2, 0, 256), 1, 128)
+    # zero padding is |.|-neutral; rescale the mean to the true M.
+    out = gm.importance(dy_p, interpret=_interpret())
+    return out[:n] * (dy_p.shape[0] / m)
+
+
+@jax.jit
+def matmul(a, b):
+    """Padded MXU-tiled matmul."""
+    m, k = a.shape
+    n = b.shape[1]
+    a_p = _pad_to(_pad_to(a, 0, 128), 1, 128)
+    b_p = _pad_to(_pad_to(b, 0, 128), 1, 128)
+    return gm.matmul(a_p, b_p, interpret=_interpret())[:m, :n]

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` computes the exact mathematical result the kernel must
+reproduce; tests sweep shapes/dtypes and ``assert_allclose`` kernel
+(interpret=True) against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expand_block_idx(block_idx: jax.Array, block_size: int) -> jax.Array:
+    """Flat channel indices covered by the kept blocks, sorted order."""
+    offs = jnp.arange(block_size)
+    return (block_idx[:, None] * block_size + offs[None, :]).reshape(-1)
+
+
+def dx_gathered_ref(
+    dy: jax.Array, w: jax.Array, block_idx: jax.Array, block_size: int
+) -> jax.Array:
+    """dX = dY[:, kept] @ W[:, kept]^T with kept = expanded block_idx.
+
+    Shapes: dy [M, N], w [D_in, N], block_idx [KB] -> out [M, D_in] f32.
+    """
+    cols = expand_block_idx(block_idx, block_size)
+    dy_k = jnp.take(dy, cols, axis=1).astype(jnp.float32)
+    w_k = jnp.take(w, cols, axis=1).astype(jnp.float32)
+    return dy_k @ w_k.T
+
+
+def dw_gathered_ref(
+    x: jax.Array, dy: jax.Array, block_idx: jax.Array, block_size: int
+) -> jax.Array:
+    """Compact dW_kept = X^T @ dY[:, kept].
+
+    Shapes: x [M, D_in], dy [M, N], block_idx [KB]
+    -> out [D_in, KB*block_size] f32 (caller scatters into full dW).
+    """
+    cols = expand_block_idx(block_idx, block_size)
+    dy_k = jnp.take(dy, cols, axis=1).astype(jnp.float32)
+    return x.astype(jnp.float32).T @ dy_k
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Plain blocked-matmul oracle: A [M, K] @ B [K, N] in f32."""
+    return a.astype(jnp.float32) @ b.astype(jnp.float32)
+
+
+def importance_ref(dy: jax.Array) -> jax.Array:
+    """Per-channel importance: mean |dY| over rows. dy [M, N] -> [N] f32."""
+    return jnp.mean(jnp.abs(dy).astype(jnp.float32), axis=0)

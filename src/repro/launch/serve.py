@@ -1,0 +1,100 @@
+"""Batched LM serving driver (prefill + decode loop).
+
+Serves a model with batched requests: prefill builds the KV/SSM cache
+from the prompt batch via the full forward pass, then the jitted
+single-token serve step autoregressively extends all requests in
+lock-step (static batch; real serving would use continuous batching —
+the cache layout here, batch-major with per-slot position, is what a
+continuous batcher needs).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
+      --reduced --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.core.policy import SsPropPolicy
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as lm
+
+
+def build_parser():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2.5-3b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-mesh", type=int, default=1)
+    ap.add_argument("--model-mesh", type=int, default=1)
+    return ap
+
+
+def run(args) -> dict:
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh(args.data_mesh, args.model_mesh)
+    rng = jax.random.PRNGKey(args.seed)
+    max_seq = args.prompt_len + args.gen + (cfg.n_patches or 0)
+
+    with jax.set_mesh(mesh):
+        params = lm.init_params(cfg, rng)
+        prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0, cfg.vocab)
+
+        # ---- prefill: run the prompt through decode steps to build the
+        # cache (teacher-forced); production would use a chunked prefill
+        # kernel — decode_32k/prefill_32k cells cover both shapes.
+        cache = lm.init_cache(cfg, args.batch, max_seq, dtype=jnp.float32)
+        enc_out = None
+        if cfg.family == "encdec":
+            frames = jax.random.normal(rng, (args.batch, cfg.enc_seq, cfg.d_model))
+            enc_out = lm.encode(cfg, params, frames.astype(jnp.dtype(cfg.dtype)))
+        serve_step = jax.jit(steps_lib.make_serve_step(cfg))
+
+        state = {"tokens": prompts[:, :1], "pos": jnp.int32(0), "cache": cache}
+        if enc_out is not None:
+            state["enc_out"] = enc_out
+        t0 = time.time()
+        for t in range(1, args.prompt_len):
+            state = serve_step(params, state)
+            state["tokens"] = prompts[:, t : t + 1]  # teacher-forced prefill
+        prefill_s = time.time() - t0
+
+        generated = []
+        t0 = time.time()
+        for _ in range(args.gen):
+            state = serve_step(params, state)
+            generated.append(np.asarray(state["tokens"])[:, 0])
+        decode_s = time.time() - t0
+
+    gen = np.stack(generated, axis=1)
+    tput = args.batch * args.gen / max(decode_s, 1e-9)
+    return {
+        "generated": gen,
+        "prefill_s": prefill_s,
+        "decode_s": decode_s,
+        "tokens_per_s": tput,
+    }
+
+
+def main():
+    args = build_parser().parse_args()
+    out = run(args)
+    print(f"[serve] batch={args.batch} gen={args.gen}")
+    print(f"[serve] prefill {out['prefill_s']*1e3:.0f} ms, decode {out['decode_s']*1e3:.0f} ms"
+          f" ({out['tokens_per_s']:.1f} tok/s)")
+    print("[serve] first request tokens:", out["generated"][0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Jitted train/serve step builders shared by train.py, dryrun.py, tests.
+
+``make_train_step`` builds a gradient-accumulation (microbatched) step:
+the global batch is split into ``accum`` microbatches scanned
+sequentially with summed grads — at 123B scale the per-device activation
+carry of a full 256-batch remat'd scan would exceed HBM; microbatching is
+how production frameworks bound it. One optimizer update per step.
+
+``make_serve_step`` is a single-token decode step over the KV/SSM cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.policy import SsPropPolicy
+from repro.models import model as lm
+from repro.optim import adam
+
+
+def microbatch_plan(cfg: ModelConfig, shape: ShapeConfig, dp: int) -> int:
+    """Number of grad-accumulation microsteps for a train cell.
+
+    Budget ≈ 8k tokens per data shard per microstep (bounds the remat
+    carry [micro_b/dp, S, d] · n_layers to ~GBs at d=12k).
+    """
+    if shape.kind != "train":
+        return 1
+    budget = max(1, 8192 // shape.seq_len)  # examples per shard
+    if cfg.d_model >= 8192:
+        budget = 1
+    micro_global = min(shape.global_batch, dp * budget)
+    accum = max(1, shape.global_batch // micro_global)
+    while shape.global_batch % accum:
+        accum += 1
+    return accum
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    policy: SsPropPolicy,
+    opt_cfg: adam.AdamConfig,
+    *,
+    accum: int = 1,
+) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss(params, microbatch):
+        return lm.loss_fn(cfg, params, microbatch, policy)
+
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (l, metrics), grads = grad_fn(params, batch)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape(accum, b // accum, *x.shape[1:])
+
+            micro = jax.tree.map(reshape, batch)
+
+            def body(acc, mb):
+                (l, metrics), g = grad_fn(params, mb)
+                acc_g, acc_l = acc
+                return (
+                    jax.tree.map(jnp.add, acc_g, g),
+                    acc_l + l / accum,
+                ), metrics
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, l), metrics = jax.lax.scan(body, (zero_g, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        new_params, new_opt, om = adam.apply_updates(opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=l, **om)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    def eval_step(params, batch):
+        l, metrics = lm.loss_fn(cfg, params, batch, SsPropPolicy())
+        return metrics["ce"]
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """Forward pass over the full prompt (inference-prefill shape)."""
+
+    def prefill(params, batch):
+        logits, _ = lm.forward(cfg, params, batch, SsPropPolicy())
+        return jnp.argmax(logits[:, -1], axis=-1)
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """One new token against a seq_len KV cache.
+
+    state = {"tokens": [B,1] int32, "pos": scalar int32, "cache": pytree,
+             optional "enc_out": [B, enc_seq, d]}.
+    Returns (next_tokens [B,1], new_state).
+    """
+
+    def serve_step(params, state):
+        enc_out = state.get("enc_out")
+        logits, new_cache = lm.decode_step(
+            cfg, params, state["tokens"], state["cache"], state["pos"],
+            enc_out=enc_out,
+        )
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        new_state = dict(state, tokens=nxt, pos=state["pos"] + 1, cache=new_cache)
+        return new_state
+
+    return serve_step
+
+
+def abstract_state(cfg: ModelConfig, rng=None):
+    """eval_shape of (params, opt_state) — no allocation."""
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    a_params = jax.eval_shape(lambda r: lm.init_params(cfg, r), rng)
+    a_opt = jax.eval_shape(adam.init, a_params)
+    return a_params, a_opt
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(
+        lambda: lm.init_cache(cfg, batch, max_seq, dtype=jnp.dtype(cfg.dtype))
+    )

@@ -1,0 +1,144 @@
+"""Top-level LM model: embeddings + stack + loss + decode.
+
+Public functional API (used by the train/serve step builders, the smoke
+tests and the dry-run):
+
+  * ``init_params(cfg, rng)``
+  * ``forward(cfg, params, batch, policy)``          -> logits
+  * ``loss_fn(cfg, params, batch, policy)``          -> (loss, metrics)
+  * ``init_cache(cfg, batch, max_seq)``              -> cache pytree
+  * ``decode_step(cfg, params, tokens, cache, pos)`` -> (logits, cache)
+
+Batch dict keys by family:
+  * LM/MoE/hybrid/ssm: ``tokens [B,S]``, ``targets [B,S]``
+  * vlm:   + ``patches [B, n_patches, d_model]`` (SigLIP stub output)
+  * encdec:+ ``frames  [B, enc_seq, d_model]``   (audio frontend stub)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import SsPropPolicy
+from repro.models import layers, transformer
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    k_emb, k_stack, k_enc, k_out = jax.random.split(rng, 4)
+    params: Dict[str, Any] = {
+        "embed": layers.embed_init(k_emb, cfg.padded_vocab, cfg.d_model, dt),
+        "final_norm": layers.rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.family == "encdec":
+        params["encoder"] = transformer.encoder_init(k_enc, cfg)
+        params["enc_norm"] = layers.rmsnorm_init(cfg.d_model, dt)
+        params["decoder"] = transformer.cross_decoder_init(k_stack, cfg)
+    else:
+        params["stack"] = transformer.stack_init(k_stack, cfg)
+    return params
+
+
+def _embed_inputs(cfg, params, batch):
+    """Token embeddings, with the VLM patch prefix fused in."""
+    x = layers.embed_apply(params["embed"], batch["tokens"])
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, jax.Array],
+    policy: SsPropPolicy = SsPropPolicy(),
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward. Returns (logits fp32 [B, S, V], aux_loss)."""
+    x = _embed_inputs(cfg, params, batch)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "encdec":
+        enc = transformer.encoder_apply(params["encoder"], batch["frames"].astype(x.dtype), cfg, policy)
+        enc = layers.rmsnorm_apply(params["enc_norm"], enc, cfg.norm_eps)
+        x, _ = transformer.cross_decoder_apply(params["decoder"], x, enc, cfg, policy)
+    else:
+        x, _, aux = transformer.stack_apply(params["stack"], x, cfg, policy)
+    x = layers.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if cfg.family == "vlm":
+        x = x[:, cfg.n_patches :]
+    logits = layers.unembed_apply(params["embed"], x, valid=cfg.vocab)
+    return logits, aux
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, jax.Array],
+    policy: SsPropPolicy = SsPropPolicy(),
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross-entropy (+0.01·MoE aux)."""
+    logits, aux = forward(cfg, params, batch, policy)
+    targets = batch["targets"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(targets, jnp.float32))
+    loss = (nll * mask).sum() / jnp.clip(mask.sum(), 1.0)
+    total = loss + 0.01 * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# ----------------------------------------------------------------------
+# decode
+# ----------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
+    dt = dtype or jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        def one(k):
+            del k
+            return {
+                "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dt),
+                "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dt),
+            }
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one(None)
+        )
+    return transformer.stack_cache_init(cfg, batch, max_seq, dt)
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,  # [B, 1]
+    cache,
+    pos: jax.Array,  # scalar int32: current write position
+    *,
+    enc_out: Optional[jax.Array] = None,
+    policy: SsPropPolicy = SsPropPolicy(),
+):
+    """One decode step with KV/SSM caches. Returns (logits [B,V], cache)."""
+    x = layers.embed_apply(params["embed"], tokens)
+    positions = (pos + jnp.arange(1))[None, :]
+    if cfg.family == "encdec":
+        x, new_cache = transformer.cross_decoder_apply(
+            params["decoder"], x, enc_out, cfg, policy,
+            positions=positions, caches=cache, cache_pos=pos,
+        )
+    else:
+        x, new_cache, _ = transformer.stack_apply(
+            params["stack"], x, cfg, policy,
+            positions=positions, caches=cache, cache_pos=pos,
+        )
+    x = layers.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    logits = layers.unembed_apply(params["embed"], x, valid=cfg.vocab)[:, 0]
+    return logits, new_cache
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array, policy=SsPropPolicy()):
+    """Whisper encoder pass (used once before decode)."""
+    enc = transformer.encoder_apply(params["encoder"], frames, cfg, policy)
+    return layers.rmsnorm_apply(params["enc_norm"], enc, cfg.norm_eps)

@@ -1,0 +1,189 @@
+"""Mixture-of-Experts layer: top-k router + sort-based static dispatch.
+
+MaxText-style capacity dispatch: token→expert assignments are sorted by
+expert id, packed into a ``[E, capacity, d]`` buffer (overflow dropped),
+experts run as one batched matmul (vmapped ``sparse_dense`` so ssProp's
+channel-sparse backward applies per expert), and outputs are combined
+with router weights. All shapes static; EP shards the expert axis over
+the ``model`` mesh axis (see dist/sharding.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_dense
+from repro.core.policy import SsPropPolicy
+from repro.models import layers
+
+
+def moe_init(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 5)
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    p = {
+        "router": layers.dense_init(ks[0], d, e, dtype=jnp.float32),
+        "gate": (jax.random.normal(ks[1], (e, d, ff), jnp.float32) * scale).astype(dtype),
+        "up": (jax.random.normal(ks[2], (e, d, ff), jnp.float32) * scale).astype(dtype),
+        "down": (
+            jax.random.normal(ks[3], (e, ff, d), jnp.float32) / jnp.sqrt(ff)
+        ).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.mlp_init(
+            ks[4], d, cfg.d_ff * cfg.n_shared_experts, dtype=dtype
+        )
+    return p
+
+
+def _expert_ffn(gate_w, up_w, down_w, xb, act, policy):
+    """One expert's gated FFN on its [capacity, d] buffer (vmapped)."""
+    h = layers._ACTS[act](sparse_dense(xb, gate_w, policy=policy)) * sparse_dense(
+        xb, up_w, policy=policy
+    )
+    return sparse_dense(h, down_w, policy=policy)
+
+
+def moe_apply(
+    p, x, cfg, policy: SsPropPolicy, *, full_capacity: bool = False,
+    dp_groups: int = 0,
+):
+    """x [B, S, d] -> ([B, S, d], aux_metrics).
+
+    Router in fp32; dispatch by stable sort over expert ids; per-expert
+    capacity ``C = ceil(B*S*topk/E * capacity_factor)``; overflow dropped
+    (weight zeroed). Aux load-balance loss returned for logging/training.
+    ``full_capacity=True`` (decode/serving) sizes the buffer so no token
+    can ever be dropped (C = tokens).
+
+    ``dp_groups > 0`` (§Perf iteration 2): dispatch is performed
+    independently within ``dp_groups`` token groups (the DP shards).
+    Every sort/scatter/gather then carries a leading group axis that
+    GSPMD keeps local to the data shard — the only cross-shard traffic
+    left is the compact ``[G, E, C/G, d]`` expert-buffer all-to-all,
+    instead of replicated token-sized scatters (which showed up as
+    ~0.5 TB all-reduces in the baseline dry-run of the 1M-token MoE
+    prefill cells).
+    """
+    if dp_groups and (x.shape[0] * x.shape[1]) % dp_groups == 0 and not full_capacity:
+        return _moe_apply_grouped(p, x, cfg, policy, dp_groups)
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_topk
+    tokens = b * s
+    xf = x.reshape(tokens, d)
+
+    logits = layers.dense_apply(p["router"], xf.astype(jnp.float32), SsPropPolicy())
+    probs = jax.nn.softmax(logits, axis=-1)  # [T, E]
+    topw, topi = jax.lax.top_k(probs, k)  # [T, k]
+    topw = topw / jnp.clip(topw.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux (Switch-style) ----
+    me = probs.mean(0)
+    ce = jnp.zeros((e,)).at[topi.reshape(-1)].add(1.0) / (tokens * k)
+    aux_loss = e * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----
+    if full_capacity:
+        cap = tokens  # an expert can receive at most one slot per token
+    else:
+        cap = max(1, int(tokens * k / e * cfg.capacity_factor))
+    flat_e = topi.reshape(-1)  # [T*k]
+    order = jnp.argsort(flat_e, stable=True)  # group by expert
+    sorted_e = flat_e[order]
+    sorted_tok = order // k  # source token of each slot
+    # position within expert group
+    grp_start = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    pos = jnp.arange(tokens * k) - grp_start[sorted_e]
+    keep = pos < cap
+    pos_c = jnp.minimum(pos, cap - 1)
+
+    buf = jnp.zeros((e, cap, d), x.dtype)
+    buf = buf.at[sorted_e, pos_c].set(
+        jnp.where(keep[:, None], xf[sorted_tok], 0).astype(x.dtype)
+    )
+
+    out_buf = jax.vmap(_expert_ffn, in_axes=(0, 0, 0, 0, None, None))(
+        p["gate"], p["up"], p["down"], buf, cfg.act, policy
+    )  # [E, cap, d]
+
+    # ---- combine ----
+    gathered = out_buf[sorted_e, pos_c]  # [T*k, d]
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    contrib = jnp.zeros((tokens * k, d), jnp.float32).at[order].set(
+        gathered.astype(jnp.float32)
+    )
+    contrib = contrib.reshape(tokens, k, d) * topw[..., None]
+    y = contrib.sum(axis=1).astype(x.dtype)
+
+    if "shared" in p:
+        y = y + layers.mlp_apply(p["shared"], xf, cfg.act, policy)
+
+    frac_dropped = 1.0 - keep.mean()
+    return y.reshape(b, s, d), {"aux_loss": aux_loss, "dropped": frac_dropped}
+
+
+def _moe_apply_grouped(p, x, cfg, policy: SsPropPolicy, groups: int):
+    """DP-local dispatch: all index ops carry a leading [G] group axis.
+
+    Token groups correspond to the data shards (G = dp size), so sorts,
+    scatters and combines never cross shards; the expert einsum contracts
+    the group-sharded buffer against model-sharded expert weights, which
+    GSPMD lowers to the canonical EP all-to-all.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_topk
+    tokens = b * s
+    g = groups
+    tg = tokens // g
+    xf = x.reshape(g, tg, d)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xf.astype(jnp.float32), p["router"]["w"]
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)  # [G, tg, k]
+    topw = topw / jnp.clip(topw.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((e,)).at[topi.reshape(-1)].add(1.0) / (tokens * k)
+    aux_loss = e * jnp.sum(me * ce)
+
+    cap = max(1, int(tg * k / e * cfg.capacity_factor))
+    flat_e = topi.reshape(g, tg * k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)  # [G, tg*k]
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    sorted_tok = order // k
+    grp_start = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e), side="left"))(
+        sorted_e
+    )  # [G, E]
+    pos = jnp.arange(tg * k)[None, :] - jnp.take_along_axis(grp_start, sorted_e, axis=1)
+    keep = pos < cap
+    pos_c = jnp.minimum(pos, cap - 1)
+
+    gidx = jnp.arange(g)[:, None]
+    buf = jnp.zeros((g, e, cap, d), x.dtype)
+    src = jnp.where(
+        keep[..., None], jnp.take_along_axis(xf, sorted_tok[..., None], axis=1), 0
+    ).astype(x.dtype)
+    buf = buf.at[gidx, sorted_e, pos_c].set(src)
+
+    # per-expert FFN, vmapped over (group, expert) — sparse_dense keeps
+    # the ssProp backward on every expert matmul.
+    per_expert = jax.vmap(_expert_ffn, in_axes=(0, 0, 0, 0, None, None))
+    out_buf = jax.vmap(per_expert, in_axes=(None, None, None, 0, None, None))(
+        p["gate"], p["up"], p["down"], buf, cfg.act, policy
+    )  # [G, E, cap, d]
+
+    gathered = out_buf[gidx, sorted_e, pos_c]  # [G, tg*k, d]
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    contrib = jnp.zeros((g, tg * k, d), jnp.float32).at[
+        gidx, order
+    ].set(gathered.astype(jnp.float32))
+    contrib = contrib.reshape(g, tg, k, d) * topw[..., None]
+    y = contrib.sum(axis=2).astype(x.dtype)
+
+    if "shared" in p:
+        y = y + layers.mlp_apply(p["shared"], xf, cfg.act, policy)
+
+    frac_dropped = 1.0 - keep.mean()
+    return y.reshape(b, s, d), {"aux_loss": aux_loss, "dropped": frac_dropped}

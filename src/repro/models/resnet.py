@@ -1,0 +1,247 @@
+"""ResNet-18/26/50 (He et al. 2016) with ssProp convolutions.
+
+Paper-faithful reproduction substrate: every convolution routes through
+:func:`repro.core.sparse_conv2d`; BatchNorm follows the paper's FLOPs
+model (Eq. 7). ResNet-26 is the paper's Q2 control: BasicBlocks in a
+(2, 3, 5, 2) layout, FLOPs-matched to a sparsely-trained ResNet-50.
+
+Functional pytree-params style, NCHW. BatchNorm runs in training mode
+with batch statistics (the paper trains from scratch; no EMA eval path is
+needed for the reproduction benchmarks, but running stats are kept).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_conv2d
+from repro.core.policy import SsPropPolicy
+
+LAYOUTS = {
+    # name: (block_kind, stage_sizes)
+    "resnet18": ("basic", (2, 2, 2, 2)),
+    "resnet26": ("basic", (2, 3, 5, 2)),  # paper Table 7 control
+    "resnet50": ("bottleneck", (3, 4, 6, 3)),
+}
+
+
+def _kaiming(key, shape):
+    fan_in = shape[1] * shape[2] * shape[3]
+    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
+
+
+def conv_init(key, c_out, c_in, k):
+    return {"w": _kaiming(key, (c_out, c_in, k, k))}
+
+
+def bn_init(c):
+    return {
+        "scale": jnp.ones((c,), jnp.float32),
+        "bias": jnp.zeros((c,), jnp.float32),
+        "mean": jnp.zeros((c,), jnp.float32),
+        "var": jnp.ones((c,), jnp.float32),
+    }
+
+
+def bn_apply(p, x, train: bool = True, momentum: float = 0.9):
+    """BatchNorm (NCHW). Returns (y, updated_stats)."""
+    if train:
+        mean = x.mean(axis=(0, 2, 3))
+        var = x.var(axis=(0, 2, 3))
+        new_stats = {
+            "mean": momentum * p["mean"] + (1 - momentum) * mean,
+            "var": momentum * p["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = p["mean"], p["var"]
+        new_stats = {"mean": p["mean"], "var": p["var"]}
+    inv = jax.lax.rsqrt(var + 1e-5)
+    y = (x - mean[None, :, None, None]) * inv[None, :, None, None]
+    return y * p["scale"][None, :, None, None] + p["bias"][None, :, None, None], new_stats
+
+
+def _basic_block_init(key, c_in, c_out, stride):
+    ks = jax.random.split(key, 3)
+    p = {
+        "conv1": conv_init(ks[0], c_out, c_in, 3),
+        "bn1": bn_init(c_out),
+        "conv2": conv_init(ks[1], c_out, c_out, 3),
+        "bn2": bn_init(c_out),
+    }
+    if stride != 1 or c_in != c_out:
+        p["down_conv"] = conv_init(ks[2], c_out, c_in, 1)
+        p["down_bn"] = bn_init(c_out)
+    return p
+
+
+def _bottleneck_init(key, c_in, c_mid, stride):
+    ks = jax.random.split(key, 4)
+    c_out = c_mid * 4
+    p = {
+        "conv1": conv_init(ks[0], c_mid, c_in, 1),
+        "bn1": bn_init(c_mid),
+        "conv2": conv_init(ks[1], c_mid, c_mid, 3),
+        "bn2": bn_init(c_mid),
+        "conv3": conv_init(ks[2], c_out, c_mid, 1),
+        "bn3": bn_init(c_out),
+    }
+    if stride != 1 or c_in != c_out:
+        p["down_conv"] = conv_init(ks[3], c_out, c_in, 1)
+        p["down_bn"] = bn_init(c_out)
+    return p
+
+
+def init_params(
+    name: str, key, num_classes: int = 10, in_channels: int = 3, small_stem: bool = True
+):
+    """small_stem: 3x3/s1 stem for CIFAR-scale inputs; 7x7/s2 for ImageNet."""
+    kind, stages = LAYOUTS[name]
+    keys = jax.random.split(key, 64)
+    ki = iter(keys)
+    stem_k = 3 if small_stem else 7
+    p: Dict[str, Any] = {
+        "stem": conv_init(next(ki), 64, in_channels, stem_k),
+        "stem_bn": bn_init(64),
+        "blocks": [],
+    }
+    widths = (64, 128, 256, 512)
+    c_in = 64
+    for si, (n, w) in enumerate(zip(stages, widths)):
+        for b in range(n):
+            stride = 2 if (b == 0 and si > 0) else 1
+            if kind == "basic":
+                blk = _basic_block_init(next(ki), c_in, w, stride)
+                c_in = w
+            else:
+                blk = _bottleneck_init(next(ki), c_in, w, stride)
+                c_in = w * 4
+            p["blocks"].append(blk)
+    p["head"] = {
+        "w": jax.random.normal(next(ki), (c_in, num_classes), jnp.float32)
+        * math.sqrt(2.0 / c_in),
+        "b": jnp.zeros((num_classes,), jnp.float32),
+    }
+    return p
+
+
+def block_strides(name: str):
+    """Static stride list matching init_params' block order."""
+    _, stages = LAYOUTS[name]
+    out = []
+    for si, n in enumerate(stages):
+        for b in range(n):
+            out.append(2 if (b == 0 and si > 0) else 1)
+    return out
+
+
+def _conv(p, x, stride, padding, policy, key=None):
+    return sparse_conv2d(x, p["w"], stride=stride, padding=padding, policy=policy, key=key)
+
+
+def _basic_apply(p, x, stride, policy, train):
+    h, _ = bn_apply(p["bn1"], _conv(p["conv1"], x, stride, 1, policy), train)
+    h = jax.nn.relu(h)
+    h, _ = bn_apply(p["bn2"], _conv(p["conv2"], h, 1, 1, policy), train)
+    if "down_conv" in p:
+        x, _ = bn_apply(p["down_bn"], _conv(p["down_conv"], x, stride, 0, policy), train)
+    return jax.nn.relu(h + x)
+
+
+def _bottleneck_apply(p, x, stride, policy, train):
+    h, _ = bn_apply(p["bn1"], _conv(p["conv1"], x, 1, 0, policy), train)
+    h = jax.nn.relu(h)
+    h, _ = bn_apply(p["bn2"], _conv(p["conv2"], h, stride, 1, policy), train)
+    h = jax.nn.relu(h)
+    h, _ = bn_apply(p["bn3"], _conv(p["conv3"], h, 1, 0, policy), train)
+    if "down_conv" in p:
+        x, _ = bn_apply(p["down_bn"], _conv(p["down_conv"], x, stride, 0, policy), train)
+    return jax.nn.relu(h + x)
+
+
+def forward(
+    name: str,
+    params,
+    x: jax.Array,
+    policy: SsPropPolicy = SsPropPolicy(),
+    *,
+    train: bool = True,
+    small_stem: bool = True,
+    dropout_rate: float = 0.0,
+    dropout_key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """x [B, C, H, W] -> logits [B, num_classes]."""
+    kind, _ = LAYOUTS[name]
+    stem_stride = 1 if small_stem else 2
+    stem_pad = 1 if small_stem else 3
+    h, _ = bn_apply(params["stem_bn"], _conv(params["stem"], x, stem_stride, stem_pad, policy), train)
+    h = jax.nn.relu(h)
+    if not small_stem:
+        h = -jax.lax.reduce_window(
+            -h, jnp.inf, jax.lax.min, (1, 1, 3, 3), (1, 1, 2, 2), "SAME"
+        )
+    dk = dropout_key
+    for blk, stride in zip(params["blocks"], block_strides(name)):
+        if kind == "basic":
+            h = _basic_apply(blk, h, stride, policy, train)
+        else:
+            h = _bottleneck_apply(blk, h, stride, policy, train)
+        if dropout_rate > 0.0 and train:
+            dk, sub = jax.random.split(dk)
+            keep = jax.random.bernoulli(sub, 1.0 - dropout_rate, h.shape)
+            h = h * keep / (1.0 - dropout_rate)
+    h = h.mean(axis=(2, 3))
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def flops_per_iter(name: str, batch: int, image: Tuple[int, int, int], drop_rate: float = 0.0):
+    """Backward FLOPs per iteration from the paper's Eq. 6/7 model.
+
+    Walks the actual layer shapes of this ResNet on ``image`` (C, H, W).
+    Returns (dense_flops, ssprop_flops_at_drop_rate).
+    """
+    from repro.core import flops as F
+
+    kind, stages = LAYOUTS[name]
+    c, hh, ww = image
+    small = hh <= 64
+    dense = sparse = 0
+
+    def add_conv(c_in, c_out, k, h_out, w_out):
+        nonlocal dense, sparse
+        dense += F.conv_backward_flops(batch, h_out, w_out, c_in, c_out, k)
+        sparse += F.conv_backward_flops_ssprop(batch, h_out, w_out, c_in, c_out, k, drop_rate)
+        bn = F.batchnorm_backward_flops(batch, h_out, w_out, c_out)
+        dense += bn
+        sparse += bn
+
+    if small:
+        add_conv(c, 64, 3, hh, ww)
+        h_cur, w_cur = hh, ww
+    else:
+        add_conv(c, 64, 7, hh // 2, ww // 2)
+        h_cur, w_cur = hh // 4, ww // 4  # stem stride + maxpool
+    c_in = 64
+    widths = (64, 128, 256, 512)
+    for si, (n, w) in enumerate(zip(stages, widths)):
+        for b in range(n):
+            stride = 2 if (b == 0 and si > 0) else 1
+            h_cur2, w_cur2 = h_cur // stride, w_cur // stride
+            if kind == "basic":
+                add_conv(c_in, w, 3, h_cur2, w_cur2)
+                add_conv(w, w, 3, h_cur2, w_cur2)
+                if stride != 1 or c_in != w:
+                    add_conv(c_in, w, 1, h_cur2, w_cur2)
+                c_out = w
+            else:
+                add_conv(c_in, w, 1, h_cur, w_cur)
+                add_conv(w, w, 3, h_cur2, w_cur2)
+                add_conv(w, w * 4, 1, h_cur2, w_cur2)
+                if stride != 1 or c_in != w * 4:
+                    add_conv(c_in, w * 4, 1, h_cur2, w_cur2)
+                c_out = w * 4
+            c_in = c_out
+            h_cur, w_cur = h_cur2, w_cur2
+    return dense, sparse

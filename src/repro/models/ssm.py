@@ -1,0 +1,181 @@
+"""Mamba-2 SSD (state-space duality) block — chunked scan + O(1) decode.
+
+Implements the chunk-parallel SSD algorithm (arXiv:2405.21060): within a
+chunk the recurrence is computed as a masked attention-like matmul
+(MXU-friendly); across chunks a small ``lax.scan`` carries the
+``[B, H, N, P]`` state. Decode is a single-token state update.
+
+Projections route through ``sparse_dense`` so ssProp applies; the scan
+itself has no output-channel matmul to shrink (DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_dense
+from repro.core.policy import SsPropPolicy
+from repro.models import layers
+
+_CONV_K = 4  # depthwise causal conv width (mamba default)
+
+
+def ssm_init(key, cfg, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.n_ssm_heads
+    conv_ch = di + 2 * n
+    return {
+        # in_proj -> [z, x, B, C, dt]
+        "in_proj": layers.dense_init(ks[0], d, 2 * di + 2 * n + h, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (_CONV_K, conv_ch), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm": layers.rmsnorm_init(di, dtype),
+        "out_proj": layers.dense_init(ks[5], di, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x [B, L, C], w [K, C] -> [B, L, C]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def _split_proj(cfg, proj):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z, xbc_dt = jnp.split(proj, [di], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [di + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, chunk):
+    """SSD chunk-parallel scan.
+
+    x [B, L, H, P], dt [B, L, H] (post-softplus), a_log [H],
+    b_mat/c_mat [B, L, N] (single group broadcast over heads).
+    Returns y [B, L, H, P] fp32.
+    """
+    bsz, l, h, p = x.shape
+    n = b_mat.shape[-1]
+    nc = l // chunk
+    a = -jnp.exp(a_log)  # [H], negative
+
+    xr = x.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    dtr = dt.reshape(bsz, nc, chunk, h)
+    br = b_mat.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cr = c_mat.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+
+    da = dtr * a  # [B, nc, Q, H]
+    cum = jnp.cumsum(da, axis=2)  # within-chunk cumulative decay
+
+    # ---- intra-chunk (masked attention-like) ----
+    # decay[i, j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # Mask the exponent (not the result): exp of a masked +large diff is
+    # inf, and where(mask, inf, 0) back-propagates inf*0 = NaN.
+    diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+    decay = jnp.exp(diff)
+    cb = jnp.einsum("bcin,bcjn->bcij", cr, br)  # [B,nc,Q,Q]
+    scores = cb[..., None] * decay * dtr[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xr)
+
+    # ---- chunk-final states ----
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,Q,H]
+    weighted = xr * (decay_to_end * dtr)[..., None]  # [B,nc,Q,H,P]
+    s_local = jnp.einsum("bcqn,bcqhp->bchnp", br, weighted)  # [B,nc,H,N,P]
+
+    # ---- cross-chunk recurrence ----
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B,nc,H]
+
+    def step(s_prev, args):
+        s_loc, cdec = args  # [B,H,N,P], [B,H]
+        s_out = s_prev
+        s_next = cdec[..., None, None] * s_prev + s_loc
+        return s_next, s_out
+
+    s0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, s_prevs = jax.lax.scan(
+        step,
+        s0,
+        (s_local.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)  # [B,nc,H,N,P]
+
+    # ---- inter-chunk contribution ----
+    in_decay = jnp.exp(cum)  # decay from chunk start to position i
+    y_inter = jnp.einsum("bcqn,bchnp->bcqhp", cr, s_prevs) * in_decay[..., None]
+
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    return y
+
+
+def ssm_apply(p, x, cfg, policy: SsPropPolicy, cache=None):
+    """Mamba-2 block. x [B, S, d].
+
+    cache (decode): {"conv": [B, K-1, conv_ch], "state": [B, H, N, P]}.
+    Returns (out [B, S, d], new_cache or None).
+    """
+    bsz, s, _ = x.shape
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    pd = cfg.ssm_headdim
+
+    proj = layers.dense_apply(p["in_proj"], x, policy)
+    z, xbc, dt = _split_proj(cfg, proj)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    new_cache = None
+    if cache is None:
+        xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        xbc = jax.nn.silu(xbc)
+        xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+        xh = xs.reshape(bsz, s, h, pd)
+        pad = (-s) % cfg.ssm_chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            bm = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+            cm = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        else:
+            dt_p, bm, cm = dt, bmat, cmat
+        y = ssd_chunked(xh, dt_p, p["A_log"], bm, cm, cfg.ssm_chunk)[:, :s]
+        y = y + xh[:, :s] * p["D"][None, None, :, None]
+    else:
+        # O(1) decode: roll conv state, single recurrence step.
+        conv_state = jnp.concatenate([cache["conv"], xbc], axis=1)  # [B, K, C]
+        xbc1 = (conv_state * p["conv_w"][None]).sum(axis=1, keepdims=True) + p["conv_b"]
+        xbc1 = jax.nn.silu(xbc1)
+        xs, bmat, cmat = jnp.split(xbc1, [di, di + n], axis=-1)
+        xh = xs.reshape(bsz, 1, h, pd).astype(jnp.float32)
+        a = -jnp.exp(p["A_log"])
+        da = jnp.exp(dt[:, 0] * a)  # [B, H]
+        s_new = da[..., None, None] * cache["state"] + jnp.einsum(
+            "bn,bhp->bhnp", bmat[:, 0].astype(jnp.float32), (dt[:, 0, :, None] * xh[:, 0])
+        )
+        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), s_new)
+        y = (y + xh[:, 0] * p["D"][None, :, None])[:, None]
+        new_cache = {"conv": conv_state[:, 1:], "state": s_new}
+
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = layers.rmsnorm_apply(p["norm"], y, cfg.norm_eps)
+    out = layers.dense_apply(p["out_proj"], y, policy)
+    return out, new_cache
+
+
+def ssm_cache_init(cfg, batch, dtype=jnp.float32):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, _CONV_K - 1, conv_ch), dtype),
+        "state": jnp.zeros(
+            (batch, cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_headdim), jnp.float32
+        ),
+    }

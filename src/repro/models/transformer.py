@@ -1,0 +1,326 @@
+"""Unified decoder/encoder-decoder stack for all assigned architectures.
+
+Layer heterogeneity (Jamba's 1:7 attn:mamba interleave, MoE-every-other,
+Whisper's enc-dec) is handled with a **period** abstraction: the layer
+pattern repeats every ``period_len`` layers; parameters are stacked
+``[n_periods, ...]`` per period-slot and the stack is a single
+``lax.scan`` over periods whose body unrolls the slots. This keeps the
+HLO one-period-sized (compile time sane at 512 devices) and composes
+with ``jax.checkpoint`` for activation memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.policy import SsPropPolicy
+from repro.models import layers, moe, ssm
+
+
+# ----------------------------------------------------------------------
+# period pattern
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Slot:
+    mixer: str  # "attn" | "ssm"
+    ffn: Optional[str]  # "mlp" | "moe" | None
+
+
+def period_pattern(cfg: ModelConfig) -> List[Slot]:
+    """The repeating layer pattern for one period."""
+    if cfg.family == "ssm":
+        return [Slot("ssm", None)]
+    plen = 1
+    if cfg.attn_every:
+        plen = cfg.attn_every
+    if cfg.is_moe and cfg.moe_every > 1:
+        while plen % cfg.moe_every:
+            plen += cfg.attn_every or 1
+    slots = []
+    for i in range(plen):
+        if cfg.attn_every and (i % cfg.attn_every != 0):
+            mixer = "ssm"
+        else:
+            mixer = "attn"
+        if cfg.is_moe and (i % cfg.moe_every == cfg.moe_offset):
+            ffn = "moe"
+        else:
+            ffn = "mlp"
+        slots.append(Slot(mixer, ffn))
+    return slots
+
+
+def n_periods(cfg: ModelConfig) -> int:
+    plen = len(period_pattern(cfg))
+    if cfg.n_layers % plen:
+        raise ValueError(f"{cfg.name}: n_layers={cfg.n_layers} not divisible by period {plen}")
+    return cfg.n_layers // plen
+
+
+# ----------------------------------------------------------------------
+# per-slot init / apply
+# ----------------------------------------------------------------------
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _slot_init(key, cfg: ModelConfig, slot: Slot):
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": layers.rmsnorm_init(cfg.d_model, dt)}
+    if slot.mixer == "attn":
+        p["attn"] = layers.attn_init(ks[0], cfg, dt)
+    else:
+        p["ssm"] = ssm.ssm_init(ks[0], cfg, dt)
+    if slot.ffn is not None:
+        p["norm2"] = layers.rmsnorm_init(cfg.d_model, dt)
+        if slot.ffn == "moe":
+            p["moe"] = moe.moe_init(ks[1], cfg, dt)
+        else:
+            p["mlp"] = layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt, gated=cfg.gated_mlp)
+    return p
+
+
+def _slot_apply(
+    p,
+    x,
+    cfg: ModelConfig,
+    slot: Slot,
+    policy: SsPropPolicy,
+    *,
+    positions=None,
+    cache=None,
+    cache_pos=None,
+):
+    h = layers.rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
+    new_cache = None
+    if slot.mixer == "attn":
+        out, new_cache = layers.attn_apply(
+            p["attn"],
+            h,
+            cfg,
+            policy,
+            causal=True,
+            positions=positions,
+            kv_cache=cache,
+            cache_pos=cache_pos,
+        )
+    else:
+        out, new_cache = ssm.ssm_apply(p["ssm"], h, cfg, policy, cache=cache)
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if slot.ffn is not None:
+        h2 = layers.rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+        if slot.ffn == "moe":
+            out2, metrics = moe.moe_apply(
+                p["moe"], h2, cfg, policy, full_capacity=cache is not None,
+                dp_groups=cfg.moe_dp_groups,
+            )
+            aux = metrics["aux_loss"]
+        else:
+            out2 = layers.mlp_apply(p["mlp"], h2, cfg.act, policy)
+        x = x + out2
+    return x, new_cache, aux
+
+
+# ----------------------------------------------------------------------
+# decoder stack
+# ----------------------------------------------------------------------
+
+
+def stack_init(key, cfg: ModelConfig):
+    """Stacked params: one entry per period-slot, leading axis n_periods."""
+    slots = period_pattern(cfg)
+    np_ = n_periods(cfg)
+    keys = jax.random.split(key, np_ * len(slots)).reshape(np_, len(slots), -1)
+    out = []
+    for s, slot in enumerate(slots):
+        init_one = lambda k, slot=slot: _slot_init(k, cfg, slot)
+        out.append(jax.vmap(init_one)(keys[:, s].reshape(np_, 2)))
+    return {"slots": out}
+
+
+def _slot_cache_init(cfg, slot: Slot, batch, max_seq, dtype):
+    if slot.mixer == "attn":
+        return {
+            "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+    return ssm.ssm_cache_init(cfg, batch, dtype)
+
+
+def stack_cache_init(cfg: ModelConfig, batch, max_seq, dtype=jnp.bfloat16):
+    slots = period_pattern(cfg)
+    np_ = n_periods(cfg)
+    caches = []
+    for slot in slots:
+        one = _slot_cache_init(cfg, slot, batch, max_seq, dtype)
+        caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (np_,) + a.shape), one))
+    return tuple(caches)  # matches the tuple structure scan ys produce
+
+
+def stack_apply(
+    params,
+    x,
+    cfg: ModelConfig,
+    policy: SsPropPolicy,
+    *,
+    positions=None,
+    caches=None,
+    cache_pos=None,
+):
+    """Run the full stack. Returns (x, new_caches, total_aux)."""
+    slots = period_pattern(cfg)
+    decode = caches is not None
+
+    def period_body(carry, xs):
+        h, aux = carry
+        slot_params, slot_caches = xs
+        new_slot_caches = []
+        for i, slot in enumerate(slots):
+            cache_i = slot_caches[i] if decode else None
+            h, nc, a = _slot_apply(
+                slot_params[i],
+                h,
+                cfg,
+                slot,
+                policy,
+                positions=positions,
+                cache=cache_i,
+                cache_pos=cache_pos,
+            )
+            aux = aux + a
+            new_slot_caches.append(nc if decode else None)
+        return (h, aux), tuple(new_slot_caches)
+
+    body = period_body
+    if cfg.remat and not decode:
+        body = jax.checkpoint(
+            period_body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+
+    xs = (params["slots"], caches if decode else None)
+    if cfg.scan_layers:
+        (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        np_ = n_periods(cfg)
+        ys = []
+        for pi in range(np_):
+            sp = jax.tree.map(lambda a: a[pi], params["slots"])
+            sc = jax.tree.map(lambda a: a[pi], caches) if decode else None
+            (x, aux), nc = body((x, aux), (sp, sc))
+            ys.append(nc)
+        new_caches = (
+            jax.tree.map(lambda *a: jnp.stack(a), *ys) if decode else None
+        )
+    return x, (new_caches if decode else None), aux
+
+
+# ----------------------------------------------------------------------
+# encoder (Whisper) — plain non-causal attn+mlp stack
+# ----------------------------------------------------------------------
+
+
+def encoder_init(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "norm1": layers.rmsnorm_init(cfg.d_model, dt),
+            "attn": layers.attn_init(k1, cfg, dt),
+            "norm2": layers.rmsnorm_init(cfg.d_model, dt),
+            "mlp": layers.mlp_init(k2, cfg.d_model, cfg.d_ff, dt, gated=cfg.gated_mlp),
+        }
+
+    keys = jax.random.split(key, cfg.n_enc_layers)
+    return jax.vmap(one)(keys)
+
+
+def encoder_apply(params, x, cfg, policy):
+    def body(h, p):
+        a, _ = layers.attn_apply(
+            p["attn"], layers.rmsnorm_apply(p["norm1"], h, cfg.norm_eps), cfg, policy,
+            causal=False,
+        )
+        h = h + a
+        m = layers.mlp_apply(
+            p["mlp"], layers.rmsnorm_apply(p["norm2"], h, cfg.norm_eps), cfg.act, policy
+        )
+        return h + m, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params)
+    else:
+        for i in range(cfg.n_enc_layers):
+            x, _ = body(x, jax.tree.map(lambda a: a[i], params))
+    return x
+
+
+def cross_decoder_init(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+
+    def one(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "norm1": layers.rmsnorm_init(cfg.d_model, dt),
+            "self": layers.attn_init(k1, cfg, dt),
+            "norm_x": layers.rmsnorm_init(cfg.d_model, dt),
+            "cross": layers.attn_init(k2, cfg, dt),
+            "norm2": layers.rmsnorm_init(cfg.d_model, dt),
+            "mlp": layers.mlp_init(k3, cfg.d_model, cfg.d_ff, dt, gated=cfg.gated_mlp),
+        }
+
+    keys = jax.random.split(key, cfg.n_layers)
+    return jax.vmap(one)(keys)
+
+
+def cross_decoder_apply(
+    params, x, enc_out, cfg, policy, *, positions=None, caches=None, cache_pos=None
+):
+    decode = caches is not None
+
+    def body(carry, xs):
+        h = carry
+        p, cache = xs
+        a, nc = layers.attn_apply(
+            p["self"], layers.rmsnorm_apply(p["norm1"], h, cfg.norm_eps), cfg, policy,
+            causal=True, positions=positions,
+            kv_cache=cache if decode else None, cache_pos=cache_pos,
+        )
+        h = h + a
+        c, _ = layers.attn_apply(
+            p["cross"], layers.rmsnorm_apply(p["norm_x"], h, cfg.norm_eps), cfg, policy,
+            causal=False, x_kv=enc_out, use_rope=False,
+        )
+        h = h + c
+        m = layers.mlp_apply(
+            p["mlp"], layers.rmsnorm_apply(p["norm2"], h, cfg.norm_eps), cfg.act, policy
+        )
+        return h + m, (nc if decode else 0.0)
+
+    if cfg.remat and not decode:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, new_caches = jax.lax.scan(body, x, (params, caches if decode else None))
+    else:
+        ys = []
+        for i in range(cfg.n_layers):
+            p_i = jax.tree.map(lambda a: a[i], params)
+            c_i = jax.tree.map(lambda a: a[i], caches) if decode else None
+            x, nc = body(x, (p_i, c_i))
+            ys.append(nc)
+        new_caches = jax.tree.map(lambda *a: jnp.stack(a), *ys) if decode else None
+    return x, (new_caches if decode else None)

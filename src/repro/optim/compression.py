@@ -1,0 +1,72 @@
+"""Top-k gradient compression with error feedback (DP collective lever).
+
+At 1000+-node scale the DP all-reduce of dense grads can dominate step
+time. This module compresses each gradient tensor to its top-k magnitude
+entries before the all-reduce and accumulates the residual locally
+(error feedback, Stich et al. 2018) so the update stays unbiased over
+time. Composes naturally with ssProp: ssProp already zeroes (1-D) of dW
+rows, so the compressor's effective k captures most remaining mass.
+
+Usage (inside the jitted train step, before psum/pmean over DP):
+    cgrads, new_residual = compress_tree(grads, residual, ratio=0.01)
+    # all-reduce cgrads (values are exact at kept coords, zero elsewhere)
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress(g: jax.Array, k: int) -> jax.Array:
+    """Keep the k largest-|.| entries of g (flattened), zero the rest."""
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    k = max(1, min(k, n))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    out = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return out.reshape(g.shape)
+
+
+def compress_tree(
+    grads: Any, residual: Any, *, ratio: float = 0.01, min_size: int = 4096
+) -> Tuple[Any, Any]:
+    """Error-feedback top-k over every leaf larger than ``min_size``.
+
+    Returns (compressed_grads, new_residual). Small tensors (norms,
+    biases) pass through uncompressed — their bytes are negligible and
+    their precision matters.
+    """
+
+    def one(g, r):
+        if g.size < min_size:
+            return g, jnp.zeros_like(g)
+        acc = g.astype(jnp.float32) + r
+        k = max(1, int(g.size * ratio))
+        kept = topk_compress(acc, k)
+        return kept.astype(g.dtype), acc - kept
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (
+        jax.tree.unflatten(treedef, [o[0] for o in outs]),
+        jax.tree.unflatten(treedef, [o[1] for o in outs]),
+    )
+
+
+def init_residual(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_bytes(params, ratio: float = 0.01, min_size: int = 4096) -> int:
+    """Bytes on the wire after compression (values + int32 indices)."""
+    total = 0
+    for p in jax.tree.leaves(params):
+        if p.size < min_size:
+            total += p.size * p.dtype.itemsize
+        else:
+            k = max(1, int(p.size * ratio))
+            total += k * (p.dtype.itemsize + 4)
+    return total

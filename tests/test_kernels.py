@@ -1,0 +1,82 @@
+"""Per-kernel validation: shape/dtype sweeps vs the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import gathered_matmul as gm
+from repro.kernels import ops, ref
+
+SHAPES_DX = [
+    # (M, N, D_in, kept_blocks)
+    (128, 256, 128, [0]),
+    (256, 512, 384, [0, 2, 3]),
+    (200, 512, 130, [1, 3]),  # non-multiples exercise padding
+    (64, 128, 64, [0]),
+]
+
+
+@pytest.mark.parametrize("m,n,d,blocks", SHAPES_DX)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dx_gathered(m, n, d, blocks, dtype):
+    k = jax.random.PRNGKey(0)
+    dy = jax.random.normal(k, (m, n), dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (d, n), dtype)
+    bidx = jnp.asarray(blocks, jnp.int32)
+    out = ops.dx_gathered(dy, w, bidx)
+    expect = ref.dx_gathered_ref(dy, w, bidx, 128)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out, expect, rtol=tol, atol=tol * 10)
+
+
+@pytest.mark.parametrize("m,n,d,blocks", SHAPES_DX)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dw_gathered_scatter(m, n, d, blocks, dtype):
+    k = jax.random.PRNGKey(2)
+    x = jax.random.normal(k, (m, d), dtype)
+    dy = jax.random.normal(jax.random.PRNGKey(3), (m, n), dtype)
+    bidx = jnp.asarray(blocks, jnp.int32)
+    out = ops.dw_gathered_scatter(x, dy, bidx, n)
+    cols = ref.expand_block_idx(bidx, 128)
+    expect = (
+        jnp.zeros((d, n), jnp.float32)
+        .at[:, cols]
+        .set(ref.dw_gathered_ref(x, dy, bidx, 128))
+    )
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(out, expect, rtol=tol, atol=tol * 10)
+    # dropped blocks must be exactly zero
+    dropped = sorted(set(range(n // 128)) - set(blocks))
+    for b in dropped:
+        assert np.abs(np.asarray(out)[:, b * 128 : (b + 1) * 128]).sum() == 0
+
+
+@pytest.mark.parametrize("m,n", [(256, 128), (300, 130), (512, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_importance_kernel(m, n, dtype):
+    dy = jax.random.normal(jax.random.PRNGKey(4), (m, n), dtype)
+    out = ops.importance(dy)
+    expect = ref.importance_ref(dy)
+    np.testing.assert_allclose(out, expect, rtol=2e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (200, 384, 130), (64, 256, 512)])
+def test_matmul_kernel(m, k, n):
+    a = jax.random.normal(jax.random.PRNGKey(5), (m, k))
+    b = jax.random.normal(jax.random.PRNGKey(6), (k, n))
+    np.testing.assert_allclose(
+        ops.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-5, atol=1e-3
+    )
+
+
+def test_kernel_blockspec_grid_shapes():
+    """Direct (unpadded) kernel invocation at several block sizes."""
+    for bm, bn in [(128, 128), (256, 128)]:
+        m, n, d = 512, 512, 512
+        dy = jax.random.normal(jax.random.PRNGKey(7), (m, n))
+        w = jax.random.normal(jax.random.PRNGKey(8), (d, n))
+        bidx = jnp.asarray([0, 3], jnp.int32)
+        out = gm.dx_gathered(dy, w, bidx, bm=bm, bn=bn, interpret=True)
+        np.testing.assert_allclose(
+            out, ref.dx_gathered_ref(dy, w, bidx, 128), rtol=1e-5, atol=1e-3
+        )

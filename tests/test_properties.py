@@ -1,0 +1,136 @@
+"""Hypothesis property tests on the system's invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import SsPropPolicy, flops, sparse_dense, sparsity
+from repro.core import schedulers
+from repro.core.policy import paper_default
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")
+
+
+@given(
+    c_in=st.integers(1, 512),
+    k=st.integers(1, 7),
+    bt=st.integers(1, 64),
+    hw=st.integers(1, 32),
+    c_out=st.integers(1, 256),
+    rate=st.floats(0.05, 0.95),
+)
+def test_eq9_savings_iff_above_lower_bound(c_in, k, bt, hw, c_out, rate):
+    """ssProp saves FLOPs exactly when D > 1/(4*C_in*K^2+1) (Eq. 10)."""
+    dense = flops.conv_backward_flops(bt, hw, hw, c_in, c_out, k)
+    sp = flops.conv_backward_flops_ssprop(bt, hw, hw, c_in, c_out, k, rate)
+    bound = flops.drop_rate_lower_bound(c_in, k)
+    if rate > bound + 1e-9:
+        assert sp < dense
+    elif rate < bound - 1e-9:
+        assert sp >= dense
+
+
+@given(
+    target=st.floats(0.0, 0.95),
+    total=st.integers(2, 200),
+    spe=st.integers(1, 50),
+    name=st.sampled_from(["constant", "linear", "cosine", "bar", "epoch_bar"]),
+)
+def test_scheduler_rates_bounded(target, total, spe, name):
+    """Every scheduler stays within [0, target] at every step."""
+    for s in range(0, total, max(total // 17, 1)):
+        r = schedulers.drop_rate_for_step(
+            name, step=s, steps_per_epoch=spe, total_steps=total, target=target
+        )
+        assert -1e-12 <= r <= target + 1e-12
+
+
+@given(
+    c=st.integers(2, 200),
+    rate=st.floats(0.0, 0.95),
+)
+def test_keep_count_bounds(c, rate):
+    pol = SsPropPolicy(rate)
+    k = pol.keep_count(c)
+    assert 1 <= k <= c
+    # keep fraction tracks 1-rate within rounding
+    assert abs(k - (1 - rate) * c) <= 0.5 + 1e-9
+
+
+@given(
+    m=st.integers(1, 12),
+    d_in=st.integers(1, 24),
+    d_out=st.integers(4, 48),
+    rate=st.floats(0.1, 0.9),
+    seed=st.integers(0, 2**20),
+)
+def test_sparse_dense_grad_subset_property(m, d_in, d_out, rate, seed):
+    """dW columns form a subset: kept ones equal the dense dW exactly,
+    dropped ones are zero — the defining invariant of ssProp."""
+    k = jax.random.PRNGKey(seed)
+    x = jax.random.normal(k, (m, d_in))
+    w = jax.random.normal(jax.random.fold_in(k, 1), (d_in, d_out))
+
+    def loss(w, pol):
+        return (sparse_dense(x, w, policy=pol) ** 2).sum()
+
+    dw_dense = jax.grad(loss)(w, SsPropPolicy(0.0))
+    dw_sp = jax.grad(loss)(w, paper_default(rate))
+    dw_sp = np.asarray(dw_sp)
+    dw_dense = np.asarray(dw_dense)
+    kept_cols = np.abs(dw_sp).sum(0) != 0
+    np.testing.assert_allclose(
+        dw_sp[:, kept_cols], dw_dense[:, kept_cols], rtol=1e-4, atol=1e-4
+    )
+    assert np.all(dw_sp[:, ~kept_cols] == 0)
+    assert kept_cols.sum() == paper_default(rate).keep_count(d_out)
+
+
+@given(
+    shape=st.sampled_from([(4, 6), (2, 3, 5), (2, 2, 2, 7)]),
+    axis=st.integers(-1, 0),
+    seed=st.integers(0, 1000),
+)
+def test_importance_permutation_equivariance(shape, axis, seed):
+    """Permuting channels permutes importance identically."""
+    dy = jax.random.normal(jax.random.PRNGKey(seed), shape)
+    c = shape[axis]
+    perm = np.random.RandomState(seed).permutation(c)
+    imp = np.asarray(sparsity.channel_importance(dy, axis))
+    dy_p = jnp.take(dy, jnp.asarray(perm), axis=axis)
+    imp_p = np.asarray(sparsity.channel_importance(dy_p, axis))
+    np.testing.assert_allclose(imp_p, imp[perm], rtol=1e-6)
+
+
+@given(rate=st.floats(0.0, 0.9), c=st.integers(1, 64))
+def test_mask_idempotent(rate, c):
+    """Masking twice == masking once (selection is deterministic)."""
+    dy = jax.random.normal(jax.random.PRNGKey(0), (8, c))
+    pol = SsPropPolicy(rate)
+    m1 = sparsity.mask_grad(dy, pol)
+    m2 = sparsity.mask_grad(m1, pol)
+    np.testing.assert_allclose(m1, m2, rtol=1e-6)
+
+
+@given(
+    ratio=st.floats(0.01, 0.5),
+    seed=st.integers(0, 100),
+)
+def test_compression_error_feedback_conserves_mass(ratio, seed):
+    """grad == compressed + residual exactly (error feedback invariant)."""
+    from repro.optim.compression import compress_tree, init_residual
+
+    g = {"a": jax.random.normal(jax.random.PRNGKey(seed), (64, 64))}
+    res = init_residual(g)
+    cg, new_res = compress_tree(g, res, ratio=ratio, min_size=16)
+    np.testing.assert_allclose(
+        np.asarray(cg["a"], np.float32) + np.asarray(new_res["a"]),
+        np.asarray(g["a"], np.float32),
+        rtol=1e-6,
+        atol=1e-6,
+    )

@@ -1,0 +1,271 @@
+"""Core ssProp behaviour: selection, gradients, schedulers, FLOPs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SsPropPolicy,
+    sparse_dense,
+    sparse_conv2d,
+    channel_importance,
+    select_topk_channels,
+    flops,
+)
+from repro.core import schedulers, sparsity
+from repro.core.policy import paper_default, tpu_default
+
+
+def _dense_grads(x, w, b, pol):
+    def loss(x, w, b):
+        return (sparse_dense(x, w, b, policy=pol) ** 2).sum()
+
+    return jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+
+
+@pytest.fixture(scope="module")
+def xwb():
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (16, 48))
+    w = jax.random.normal(jax.random.PRNGKey(1), (48, 96))
+    b = jax.random.normal(jax.random.PRNGKey(2), (96,))
+    return x, w, b
+
+
+class TestSelection:
+    def test_importance_matches_definition(self):
+        dy = jax.random.normal(jax.random.PRNGKey(3), (4, 7, 9))
+        imp = channel_importance(dy, channel_axis=1)
+        ref = jnp.abs(dy).mean(axis=(0, 2))
+        np.testing.assert_allclose(imp, ref, rtol=1e-6)
+
+    def test_topk_keeps_largest(self):
+        imp = jnp.array([0.1, 5.0, 0.2, 3.0, 0.01])
+        idx = select_topk_channels(imp, 2)
+        assert set(np.asarray(idx).tolist()) == {1, 3}
+        assert np.all(np.diff(np.asarray(idx)) > 0)  # sorted
+
+    def test_block_selection_alignment(self):
+        imp = jnp.arange(256.0)
+        bidx = sparsity.select_topk_blocks(imp, 128, 1)
+        assert np.asarray(bidx).tolist() == [1]  # second block has larger mean
+
+    def test_keep_count(self):
+        pol = SsPropPolicy(0.8)
+        assert pol.keep_count(64) == 13
+        polb = tpu_default(0.5)
+        assert polb.keep_count(256) == 1  # 2 blocks -> keep 1
+
+
+class TestDenseGrad:
+    def test_dense_policy_equals_autodiff(self, xwb):
+        x, w, b = xwb
+        g = _dense_grads(x, w, b, SsPropPolicy(0.0))
+        gp = jax.grad(lambda x, w, b: ((x @ w + b) ** 2).sum(), argnums=(0, 1, 2))(
+            x, w, b
+        )
+        for a, r in zip(g, gp):
+            np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-3)
+
+    @pytest.mark.parametrize("rate", [0.25, 0.5, 0.8])
+    def test_gather_equals_mask_oracle(self, xwb, rate):
+        x, w, b = xwb
+        g_gather = _dense_grads(x, w, b, paper_default(rate))
+        g_mask = _dense_grads(x, w, b, SsPropPolicy(rate, mask_mode=True))
+        for a, r in zip(g_gather, g_mask):
+            np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4)
+
+    def test_dropped_channels_zero_grad(self, xwb):
+        x, w, b = xwb
+        pol = paper_default(0.5)
+        _, dw, db = _dense_grads(x, w, b, pol)
+        zero_cols = int((np.abs(np.asarray(dw)).sum(0) == 0).sum())
+        assert zero_cols == 96 - pol.keep_count(96)
+        assert int((np.asarray(db) == 0).sum()) >= zero_cols
+
+    def test_kept_channels_are_most_important(self, xwb):
+        x, w, b = xwb
+        pol = paper_default(0.5)
+
+        def loss(x, w, b):
+            return (sparse_dense(x, w, b, policy=pol) ** 2).sum()
+
+        # recover dy at output: dL/dy = 2y
+        y = x @ w + b
+        imp = np.asarray(jnp.abs(2 * y).mean(0))
+        _, dw, _ = jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+        kept = np.abs(np.asarray(dw)).sum(0) != 0
+        k = pol.keep_count(96)
+        topk = set(np.argsort(-imp)[:k].tolist())
+        assert set(np.where(kept)[0].tolist()) == topk
+
+    def test_random_selection_differs_from_topk(self, xwb):
+        x, w, b = xwb
+        pol = SsPropPolicy(0.5, selection="random")
+        key = jax.random.PRNGKey(7)
+
+        def loss(x, w, b):
+            return (sparse_dense(x, w, b, policy=pol, key=key) ** 2).sum()
+
+        _, dw_r, _ = jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+        _, dw_t, _ = _dense_grads(x, w, b, paper_default(0.5))
+        assert not np.allclose(dw_r, dw_t)
+
+    def test_forward_unchanged_by_policy(self, xwb):
+        x, w, b = xwb
+        y0 = sparse_dense(x, w, b, policy=SsPropPolicy(0.0))
+        y1 = sparse_dense(x, w, b, policy=paper_default(0.95))
+        np.testing.assert_allclose(y0, y1, rtol=1e-6)
+
+    def test_block_granularity_pallas_path(self, xwb):
+        x, w, b = xwb
+        # pad to block-size-friendly dims
+        x = jnp.pad(x, ((0, 0), (0, 80)))  # 128 in
+        w = jnp.pad(w, ((0, 80), (0, 160)))  # 128 -> 256
+        b = jnp.pad(b, (0, 160))
+        pol = dataclasses.replace(tpu_default(0.5), use_pallas=True)
+        ref = dataclasses.replace(tpu_default(0.5), mask_mode=True)
+        g1 = _dense_grads(x, w, b, pol)
+        g2 = _dense_grads(x, w, b, ref)
+        for a, r in zip(g1, g2):
+            np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-3)
+
+
+class TestConvGrad:
+    @pytest.mark.parametrize("stride,padding", [(1, 1), (2, 1), (1, 0)])
+    def test_gather_equals_mask_oracle(self, stride, padding):
+        k = jax.random.PRNGKey(0)
+        x = jax.random.normal(k, (2, 3, 12, 12))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 3, 3, 3))
+        b = jnp.zeros((16,))
+
+        def loss(x, w, b, pol):
+            y = sparse_conv2d(x, w, b, stride=stride, padding=padding, policy=pol)
+            return (y**2).sum()
+
+        g1 = jax.grad(loss, argnums=(0, 1, 2))(x, w, b, paper_default(0.5))
+        g2 = jax.grad(loss, argnums=(0, 1, 2))(x, w, b, SsPropPolicy(0.5, mask_mode=True))
+        for a, r in zip(g1, g2):
+            np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4)
+
+    def test_groups_supported(self):
+        k = jax.random.PRNGKey(0)
+        x = jax.random.normal(k, (2, 8, 8, 8))
+        w = jax.random.normal(jax.random.PRNGKey(1), (16, 4, 3, 3))  # groups=2
+
+        def loss(x, w):
+            return (
+                sparse_conv2d(x, w, stride=1, padding=1, groups=2, policy=paper_default(0.5)) ** 2
+            ).sum()
+
+        g = jax.grad(loss, argnums=(0, 1))(x, w)
+        assert all(np.isfinite(np.asarray(t)).all() for t in g)
+
+
+class TestSchedulers:
+    def test_epoch_bar_parity(self):
+        rates = [schedulers.epoch_bar_schedule(e, 0.8) for e in range(6)]
+        assert rates == [0.0, 0.8, 0.0, 0.8, 0.0, 0.8]
+
+    def test_average_rate_epoch_bar_is_half_target(self):
+        avg = schedulers.average_rate(
+            "epoch_bar", total_steps=100, steps_per_epoch=10, target=0.8
+        )
+        assert abs(avg - 0.4) < 1e-9  # the paper's "~40% saved"
+
+    def test_linear_cosine_monotone(self):
+        for name in ("linear", "cosine"):
+            vals = [
+                schedulers.drop_rate_for_step(
+                    name, step=s, steps_per_epoch=10, total_steps=50, target=0.8
+                )
+                for s in range(50)
+            ]
+            assert vals[0] == 0.0
+            assert abs(vals[-1] - 0.8) < 1e-9
+            assert all(b >= a - 1e-12 for a, b in zip(vals, vals[1:]))
+
+    def test_bar_is_step_function(self):
+        vals = [
+            schedulers.drop_rate_for_step(
+                "bar", step=s, steps_per_epoch=10, total_steps=100, target=0.6
+            )
+            for s in range(100)
+        ]
+        assert vals[:50] == [0.0] * 50
+        assert vals[50:] == [0.6] * 50
+
+    def test_periodic_bar(self):
+        vals = [schedulers.periodic_bar_schedule(s, 30, 0.8) for s in range(60)]
+        assert vals[:15] == [0.0] * 15
+        assert vals[15:30] == [0.8] * 15
+        assert vals[30:45] == [0.0] * 15
+
+    def test_bucketing(self):
+        pol = SsPropPolicy(0.0)
+        assert pol.bucketed(0.79).drop_rate == 0.8
+        assert pol.bucketed(0.05).drop_rate == 0.0
+
+
+class TestFlops:
+    def test_eq6_example(self):
+        # hand-computed: M=2*4*4=32, N=3*9=27 -> 32*(4*27+1)*8
+        assert flops.conv_backward_flops(2, 4, 4, 3, 8, 3) == 32 * 109 * 8
+
+    def test_eq9_reduces_to_eq6_at_zero(self):
+        d = flops.conv_backward_flops(4, 8, 8, 16, 32, 3)
+        s = flops.conv_backward_flops_ssprop(4, 8, 8, 16, 32, 3, 0.0)
+        # drop 0 still pays the importance reduction: +M per channel
+        assert s == d + 4 * 8 * 8 * 32
+
+    def test_lower_bound_eq10(self):
+        assert abs(flops.drop_rate_lower_bound(1, 3) - 1 / 37) < 1e-12
+        assert flops.drop_rate_lower_bound(1, 3) <= 0.0271
+
+    def test_paper_resnet_numbers(self):
+        """Table 4: CIFAR ResNet-18 285.32B, ResNet-50 669.75B (±0.5%)."""
+        from repro.models import resnet
+
+        d18, _ = resnet.flops_per_iter("resnet18", 128, (3, 32, 32))
+        d50, _ = resnet.flops_per_iter("resnet50", 128, (3, 32, 32))
+        assert abs(d18 / 1e9 - 285.32) / 285.32 < 0.005
+        assert abs(d50 / 1e9 - 669.75) / 669.75 < 0.005
+
+    def test_ssprop_40pct_saving_at_bar_08(self):
+        """Eq. 9 at the schedule-average rate 0.4 ≈ 40% saved."""
+        d = flops.conv_backward_flops(128, 16, 16, 64, 128, 3)
+        s = flops.conv_backward_flops_ssprop(128, 16, 16, 64, 128, 3, 0.4)
+        assert 0.38 < flops.savings_fraction(d, s) < 0.41
+
+
+class TestTPLocalSelection:
+    """§Perf iteration 1: TP-local per-shard top-k (comm-free gather)."""
+
+    def test_balanced_and_subset_of_dense(self, xwb):
+        x, _, _ = xwb
+        w = jax.random.normal(jax.random.PRNGKey(9), (48, 128))
+        b = jax.random.normal(jax.random.PRNGKey(10), (128,))
+        pol = dataclasses.replace(paper_default(0.5), tp_shards=4)
+        _, dw, _ = _dense_grads(x, w, b, pol)
+        kept = (np.abs(np.asarray(dw)).sum(0) != 0).reshape(4, 32).sum(1)
+        assert (kept == kept[0]).all()  # balanced across shards
+        dwd = _dense_grads(x, w, b, SsPropPolicy(0.0))[1]
+        mask = np.abs(np.asarray(dw)).sum(0) != 0
+        np.testing.assert_allclose(
+            np.asarray(dw)[:, mask], np.asarray(dwd)[:, mask], rtol=1e-4, atol=1e-3
+        )
+
+    def test_block_granularity_per_shard(self, xwb):
+        x, _, _ = xwb
+        w = jax.random.normal(jax.random.PRNGKey(11), (48, 256))
+        b = jax.random.normal(jax.random.PRNGKey(12), (256,))
+        pol = dataclasses.replace(
+            tpu_default(0.5), block_size=32, tp_shards=4
+        )
+        _, dw, _ = _dense_grads(x, w, b, pol)
+        kept_blocks = (
+            (np.abs(np.asarray(dw)).sum(0) != 0).reshape(8, 32).any(1).sum()
+        )
+        assert kept_blocks == 4  # 8 blocks, keep 1 per shard x 4 shards
