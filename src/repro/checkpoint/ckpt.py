@@ -108,6 +108,9 @@ class AsyncCheckpointer:
             self._thread = None
 
 
+Saver = AsyncCheckpointer
+
+
 def list_steps(ckpt_dir: str) -> List[int]:
     """Committed checkpoint steps, ascending."""
     if not os.path.isdir(ckpt_dir):
@@ -126,6 +129,33 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _shardings_by_key(items, shardings) -> List[Any]:
+    """Per-leaf shardings aligned to ``items`` by pytree path.
+
+    ``shardings`` may be a single Sharding (applied everywhere), a full
+    pytree, or a PARTIAL pytree — any subtree it omits (or sets to None)
+    restores unsharded. Path-keyed matching (not positional zip) is what
+    makes the partial case safe: a ``{"params": p_sh}`` pytree must not
+    leak param shardings onto the optimizer leaves.
+    """
+    if shardings is None or hasattr(shardings, "device_set"):
+        return [shardings] * len(items)
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        shardings, is_leaf=lambda x: hasattr(x, "device_set")
+    )
+    by_key = {jax.tree_util.keystr(k): v for k, v in flat}
+    leaf_keys = {k for k, _ in items}
+    unmatched = sorted(set(by_key) - leaf_keys)
+    if unmatched:
+        # a typo'd key would otherwise silently restore the whole tree
+        # unsharded onto the default device
+        raise ValueError(
+            f"shardings entries match no checkpoint leaf: {unmatched[:5]}"
+            f" (leaves look like: {sorted(leaf_keys)[:3]})"
+        )
+    return [by_key.get(k) for k, _ in items]
+
+
 def restore(
     ckpt_dir: str,
     step: int,
@@ -135,18 +165,15 @@ def restore(
 ) -> Any:
     """Restore into the structure of ``like``.
 
-    ``shardings``: optional matching pytree of jax.sharding.Sharding (or a
-    single sharding) — enables elastic restore onto any mesh.
+    ``shardings``: optional pytree of jax.sharding.Sharding (or a single
+    sharding) — enables elastic restore onto any mesh. May be partial:
+    leaves without a matching entry are restored unsharded.
     """
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
     with open(os.path.join(path, "shard_0.msgpack"), "rb") as f:
         payload = msgpack.unpackb(f.read(), strict_map_key=False)
     items, treedef = _flatten(like)
-    flat_sh = (
-        jax.tree.leaves(shardings)
-        if shardings is not None and not hasattr(shardings, "device_set")
-        else [shardings] * len(items)
-    )
+    flat_sh = _shardings_by_key(items, shardings)
     out = []
     for (k, proto), sh in zip(items, flat_sh):
         arr = _decode(payload[k])

@@ -1,0 +1,51 @@
+"""Distributed training layer: sharding rules + fault tolerance.
+
+``repro.dist.sharding`` holds the production partition-spec rules that
+train.py / dryrun.py / serve paths all share. Specs are assigned by
+parameter *name* over the abstract param pytree and then repaired
+against the concrete mesh by :func:`sharding.fit_spec`, so one rule
+table covers every registry architecture at every mesh size.
+
+Sharding rule table (tensor → mesh axis placement):
+
+  ===========================  ==========================  ============
+  tensor                       shape                       spec
+  ===========================  ==========================  ============
+  embed table                  [V, d]                      ("model", -)
+  attn q/k/v kernel            [np, d, H*hd]               (-, -, "model")
+  attn o kernel                [np, H*hd, d]               (-, "model", -)
+  mlp up/gate kernel           [np, d, ff]                 (-, -, "model")
+  mlp down kernel              [np, ff, d]                 (-, "model", -)
+  MoE expert gate/up           [np, E, d, ff]              (-, "model", -, -)
+  MoE expert down              [np, E, ff, d]              (-, "model", -, -)
+  ssm in_proj kernel           [np, d, X]                  (-, -, "model")
+  ssm out_proj kernel          [np, di, d]                 (-, "model", -)
+  norms / biases / router      any                         replicated
+  batch inputs                 [B, ...]                    (dp, -, ...)
+  KV cache k/v                 [np, B, T, KV, hd]          (-, dp, -, "model", -)
+    (seq_shard=True moves "model" to the T dim for long decode)
+  ===========================  ==========================  ============
+
+``dp`` is the data-parallel axis group — ``("pod", "data")`` on the
+multi-pod mesh, ``"data"`` otherwise. Any placement whose dim is not
+divisible by the mesh axis size is relocated by ``fit_spec`` to the
+nearest divisible free dim (ties prefer the later dim), falling back to
+replication when no dim is legal.
+
+``repro.dist.fault`` implements the file-based fault-tolerance
+protocol used by the training driver:
+
+  * ``Heartbeat`` — each rank touches ``<dir>/rank_<r>`` at most every
+    ``interval_s`` seconds; the file mtime IS the liveness signal (no
+    server, works on any shared filesystem).
+  * ``HeartbeatMonitor.dead_ranks()`` — ranks whose heartbeat file
+    mtime is older than ``timeout_s``.
+  * ``StragglerTracker`` — per-rank step-time EWMA; a rank is a
+    straggler when its EWMA exceeds ``slack`` × the median EWMA of
+    the other ranks (leave-one-out, so it can't shift its own
+    baseline).
+  * ``RestartPolicy.run(attempt)`` — bounded-restart supervisor with
+    exponential backoff; the driver resumes from the latest committed
+    checkpoint on each attempt.
+"""
+from repro.dist import compat as _compat  # noqa: F401  (installs jax shims)

@@ -1,0 +1,34 @@
+"""jax version compatibility for the distributed layer.
+
+The production code targets the modern jax mesh API (``jax.set_mesh``,
+``jax.sharding.AxisType``); CI pins an older jax where a ``Mesh`` is
+itself the context manager and meshes have no axis types. ``install()``
+backfills the small API surface we rely on so the same driver code runs
+on both. It is idempotent and never overwrites a real jax symbol.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+@contextlib.contextmanager
+def _set_mesh(mesh):
+    """Old-jax stand-in for ``jax.set_mesh``: enter the physical mesh.
+
+    ``with``-usage ONLY. Modern jax also allows the bare-call global
+    setter form ``jax.set_mesh(mesh)``; old jax has no global mesh to
+    set, so on the shim that form would be a silent no-op — always
+    write ``with jax.set_mesh(mesh):`` in this codebase.
+    """
+    with mesh:
+        yield mesh
+
+
+def install() -> None:
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _set_mesh
+
+
+install()

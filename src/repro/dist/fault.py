@@ -1,0 +1,159 @@
+"""File-based fault tolerance: heartbeats, stragglers, bounded restart.
+
+The protocol needs nothing but a shared filesystem (the checkpoint
+directory): each rank touches ``<dir>/rank_<r>``; a monitor reads the
+mtimes. See the module docstring of ``repro.dist`` for the full
+contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import statistics
+import time
+from typing import Callable, Dict, List, Optional
+
+_PREFIX = "rank_"
+
+
+class Heartbeat:
+    """One rank's liveness signal: touch ``<dir>/rank_<r>`` on beat().
+
+    ``interval_s`` throttles filesystem traffic from the train loop —
+    ``beat()`` is a no-op until the interval has elapsed (``force=True``
+    bypasses the throttle, e.g. the first beat after (re)start).
+    """
+
+    def __init__(self, hb_dir: str, rank: int, interval_s: float = 5.0):
+        self.hb_dir = hb_dir
+        self.rank = rank
+        self.interval_s = interval_s
+        self.path = os.path.join(hb_dir, f"{_PREFIX}{rank:05d}")
+        self._last = 0.0
+
+    def beat(self, *, force: bool = False) -> bool:
+        now = time.time()
+        if not force and now - self._last < self.interval_s:
+            return False
+        os.makedirs(self.hb_dir, exist_ok=True)
+        with open(self.path, "w") as f:
+            f.write(str(now))
+        self._last = now
+        return True
+
+
+class HeartbeatMonitor:
+    """Reads every rank's heartbeat mtime; stale ⇒ dead.
+
+    Mtimes are compared against the monitor's ``time.time()``. On a
+    network filesystem whose server clock is skewed from the monitor
+    host, pass an explicit ``now`` to ``dead_ranks`` (e.g. the mtime
+    of a file the monitor itself just touched on the same filesystem)
+    so both sides of the comparison share one clock.
+    """
+
+    def __init__(self, hb_dir: str, timeout_s: float = 60.0):
+        self.hb_dir = hb_dir
+        self.timeout_s = timeout_s
+
+    def last_seen(self) -> Dict[int, float]:
+        """rank → heartbeat file mtime (empty when no dir/beats yet)."""
+        out: Dict[int, float] = {}
+        if not os.path.isdir(self.hb_dir):
+            return out
+        for name in os.listdir(self.hb_dir):
+            if not name.startswith(_PREFIX):
+                continue
+            try:
+                rank = int(name[len(_PREFIX):])
+                out[rank] = os.path.getmtime(os.path.join(self.hb_dir, name))
+            except (ValueError, OSError):
+                continue  # foreign file, or beat racing the scan
+        return out
+
+    def dead_ranks(self, now: Optional[float] = None) -> List[int]:
+        now = time.time() if now is None else now
+        return sorted(
+            r for r, t in self.last_seen().items() if now - t > self.timeout_s
+        )
+
+
+class StragglerTracker:
+    """Per-rank step-time EWMA; a rank is a straggler when its EWMA
+    exceeds ``slack`` × the median EWMA of the *other* ranks.
+
+    The leave-one-out median keeps a slow rank from shifting the
+    baseline it is judged against (decisive at 2-3 ranks, where a
+    fleet-wide median would absorb the outlier). Ranks with fewer than
+    ``min_records`` observations are not judged (warmup/compile steps).
+    """
+
+    def __init__(self, slack: float = 2.0, alpha: float = 0.2, min_records: int = 3):
+        self.slack = slack
+        self.alpha = alpha
+        self.min_records = min_records
+        self._ewma: Dict[int, float] = {}
+        self._n: Dict[int, int] = {}
+
+    def record(self, rank: int, step_time_s: float) -> None:
+        prev = self._ewma.get(rank)
+        self._ewma[rank] = (
+            step_time_s
+            if prev is None
+            else (1.0 - self.alpha) * prev + self.alpha * step_time_s
+        )
+        self._n[rank] = self._n.get(rank, 0) + 1
+
+    def ewma(self, rank: int) -> Optional[float]:
+        return self._ewma.get(rank)
+
+    def stragglers(self) -> List[int]:
+        judged = {
+            r: t
+            for r, t in self._ewma.items()
+            if self._n.get(r, 0) >= self.min_records
+        }
+        if len(judged) < 2:
+            return []  # a lone rank is its own baseline
+        out = []
+        for r, t in judged.items():
+            # leave-one-out baseline: a slow rank must not shift the
+            # median it is judged against (matters most at 2-3 ranks)
+            others = [v for q, v in judged.items() if q != r]
+            if t > self.slack * statistics.median(others):
+                out.append(r)
+        return sorted(out)
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    """Bounded-restart supervisor with exponential backoff.
+
+    ``run(attempt)`` calls ``attempt(attempt_idx)`` until it returns;
+    on an exception it backs off and retries up to ``max_restarts``
+    times, then re-raises. The driver's attempt function restores from
+    the latest committed checkpoint, so each retry resumes rather than
+    recomputes.
+    """
+
+    max_restarts: int = 3
+    backoff_s: float = 1.0
+    backoff_mult: float = 2.0
+
+    def run(
+        self,
+        attempt: Callable[[int], object],
+        *,
+        on_restart: Optional[Callable[[int, BaseException], None]] = None,
+    ):
+        delay = self.backoff_s
+        for i in range(self.max_restarts + 1):
+            try:
+                return attempt(i)
+            except Exception as e:
+                if i >= self.max_restarts:
+                    raise
+                if on_restart is not None:
+                    on_restart(i, e)
+                time.sleep(delay)
+                delay *= self.backoff_mult

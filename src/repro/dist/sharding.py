@@ -1,0 +1,201 @@
+"""Production partition-spec rules over abstract param/input pytrees.
+
+Rules are assigned by parameter name (path in the pytree) and expressed
+as mesh-independent :class:`~jax.sharding.PartitionSpec` trees
+(:func:`param_specs`); the mesh-aware entry points
+(:func:`param_shardings`, :func:`opt_state_shardings`,
+:func:`batch_shardings`, :func:`cache_shardings`) turn them into
+``NamedSharding``s after repairing illegal placements with
+:func:`fit_spec`. See ``repro/dist/__init__.py`` for the rule table.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+# attention module names across the decoder / encoder / cross-decoder
+_ATTN_KEYS = ("attn", "self", "cross")
+# kernels sharded on their LAST dim (output features)
+_COL_PARALLEL = ("q", "k", "v", "up", "gate", "in_proj")
+# kernels sharded on dim -2 (input features)
+_ROW_PARALLEL = ("o", "down", "out_proj")
+
+
+def _keystr(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def _axis_size(mesh, axis) -> int:
+    """Size of one spec entry: a mesh axis name or a tuple of them."""
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def fit_spec(spec: P, shape: Sequence[int], mesh) -> P:
+    """Repair ``spec`` so every assignment divides its dim on ``mesh``.
+
+    An axis assigned to a non-divisible dim is relocated to the nearest
+    free (None) dim that IS divisible — e.g. 16-way ``model`` on an
+    8-head kv dim moves to the adjacent head_dim; ``data`` on a batch=1
+    decode moves to the seq dim. Ties prefer the later (inner) dim.
+    With no legal dim the axis is dropped (replicated) — always safe,
+    never wrong, just less parallel. A spec longer than the shape is
+    truncated (its extra axes are dropped the same way).
+    """
+    entries = list(spec)[: len(shape)] + [None] * (len(shape) - len(spec))
+    for i, axis in enumerate(entries):
+        if axis is None:
+            continue
+        n = _axis_size(mesh, axis)
+        if n <= 1 or shape[i] % n == 0:
+            continue
+        entries[i] = None
+        cands = [
+            j
+            for j, e in enumerate(entries)
+            if e is None and shape[j] % n == 0
+        ]
+        if cands:
+            best = min(cands, key=lambda j: (abs(j - i), 0 if j > i else 1))
+            entries[best] = axis
+    return P(*entries)
+
+
+def _rule_for(path, leaf) -> P:
+    """Mesh-independent spec for one named parameter leaf."""
+    ndim = getattr(leaf, "ndim", None)
+    if ndim is None:
+        ndim = len(getattr(leaf, "shape", ()))
+    none = [None] * ndim
+    keys = [
+        str(k.key)
+        for k in path
+        if hasattr(k, "key")  # DictKey; skip SequenceKey indices
+    ]
+
+    if "embed" in keys and keys[-1] == "table":
+        # [V, d]: vocab-sharded embedding + tied unembedding
+        sp = list(none)
+        sp[0] = "model"
+        return P(*sp)
+
+    if keys and keys[-1] == "w" and "router" not in keys:
+        name = keys[-2] if len(keys) >= 2 else ""
+        if name in _COL_PARALLEL and ndim >= 2:
+            sp = list(none)
+            sp[-1] = "model"
+            return P(*sp)
+        if name in _ROW_PARALLEL and ndim >= 2:
+            sp = list(none)
+            sp[-2] = "model"
+            return P(*sp)
+
+    if "moe" in keys and keys[-1] in ("gate", "up", "down") and ndim >= 3:
+        # stacked expert tensors [np, E, d, ff] / [np, E, ff, d]:
+        # expert-parallel over the model axis
+        sp = list(none)
+        sp[1] = "model"
+        return P(*sp)
+
+    # norms, biases, router, ssm conv/A/dt/D scalars: replicated
+    return P(*none)
+
+
+def param_specs(a_params: Any, *, replicate_kv: bool = False) -> Any:
+    """PartitionSpec pytree matching ``a_params`` (abstract or concrete).
+
+    ``replicate_kv=True`` replicates the k/v projection kernels —
+    serving configs keep kv-heads < TP degree, and replicated kv avoids
+    GSPMD resharding the score tensor every layer (§Perf iteration 4).
+    """
+
+    def one(path, leaf):
+        sp = _rule_for(path, leaf)
+        if replicate_kv:
+            keys = [str(k.key) for k in path if hasattr(k, "key")]
+            in_attn = any(k in _ATTN_KEYS for k in keys)
+            if in_attn and len(keys) >= 2 and keys[-2] in ("k", "v"):
+                return P(*([None] * len(sp)))
+        return sp
+
+    return jax.tree_util.tree_map_with_path(one, a_params)
+
+
+def param_shardings(
+    mesh, a_params: Any, *, replicate_kv: bool = False
+) -> Any:
+    """NamedSharding pytree for the params of one model on ``mesh``."""
+    specs = param_specs(a_params, replicate_kv=replicate_kv)
+    return jax.tree.map(
+        lambda a, s: NamedSharding(mesh, fit_spec(s, a.shape, mesh)),
+        a_params,
+        specs,
+    )
+
+
+def opt_state_shardings(mesh, a_params: Any, **kw) -> Any:
+    """Adam m/v mirror the param layout (same shapes, fp32)."""
+    return param_shardings(mesh, a_params, **kw)
+
+
+def replicated(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def _batch_axis(mesh):
+    dpax = dp_axes(mesh)
+    if not dpax:
+        return None
+    return dpax if len(dpax) > 1 else dpax[0]
+
+
+def batch_shardings(mesh, batch: Any) -> Any:
+    """Inputs: leading (batch) dim over the data-parallel axes."""
+    baxis = _batch_axis(mesh)
+
+    def one(a):
+        ndim = getattr(a, "ndim", 0)
+        if not ndim:
+            return replicated(mesh)
+        spec = P(*([baxis] + [None] * (ndim - 1)))
+        return NamedSharding(mesh, fit_spec(spec, a.shape, mesh))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_shardings(mesh, a_cache: Any, *, seq_shard: bool = False) -> Any:
+    """Decode caches: batch over dp; kv-heads (or seq) over model.
+
+    Cache leaves are period-stacked ``[np, B, ...]``. Attention k/v
+    ``[np, B, T, KV, hd]`` put ``model`` on the kv-head dim, or on the
+    seq dim with ``seq_shard=True`` (long-context decode: partial
+    softmax over a seq-sharded cache, §Perf iteration 3). SSM states
+    ``[np, B, H, N, P]`` shard the head dim; conv buffers shard their
+    channel dim.
+    """
+    baxis = _batch_axis(mesh)
+
+    def one(path, a):
+        ndim = getattr(a, "ndim", 0)
+        entries = [None] * ndim
+        if ndim >= 2:
+            entries[1] = baxis
+        keys = [str(k.key) for k in path if hasattr(k, "key")]
+        name = keys[-1] if keys else ""
+        if name in ("k", "v") and ndim >= 5:
+            entries[2 if seq_shard else 3] = "model"
+        elif name == "state" and ndim >= 3:
+            entries[2] = "model"
+        elif name == "conv" and ndim >= 3:
+            entries[-1] = "model"
+        return NamedSharding(mesh, fit_spec(P(*entries), a.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, a_cache)

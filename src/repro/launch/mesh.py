@@ -9,21 +9,32 @@ from __future__ import annotations
 
 import jax
 
+from repro.dist import compat as _compat  # noqa: F401  (installs jax shims)
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+
+def _make_mesh(shape, axes):
+    """jax.make_mesh across jax versions (axis_types is newer-only)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                shape, axes, axis_types=(axis_type.Auto,) * len(axes)
+            )
+        except TypeError:  # pragma: no cover - mid-vintage jax
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over the real local devices (tests, examples)."""
-    return jax.make_mesh((data, model), ("data", "model"), axis_types=_auto(2))
+    return _make_mesh((data, model), ("data", "model"))
 
 
 def dp_axes(mesh) -> tuple:

@@ -174,7 +174,10 @@ def run(args) -> dict:
 def main():
     args = build_parser().parse_args()
     out = run(args)
-    print(f"[train] done. final loss {out['final_loss']:.4f}")
+    if out["final_loss"] is None:
+        print("[train] nothing to do: already at the target step")
+    else:
+        print(f"[train] done. final loss {out['final_loss']:.4f}")
 
 
 if __name__ == "__main__":

@@ -5,5 +5,25 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", False)
+
+# The two multi-minute system tests (full CPU train runs); deselect with
+# `-m "not slow"` for the fast CI lane.
+_SLOW = {
+    "test_ssprop_trains_comparably_to_dense",
+    "test_train_cli_crash_resume",
+}
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-minute end-to-end test (fast lane skips these)"
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if item.name in _SLOW:
+            item.add_marker(pytest.mark.slow)

@@ -1,0 +1,306 @@
+"""Unit tests for repro.dist: fit_spec, the spec rule table, fault
+tolerance edge cases, and the checkpoint paths test_system.py only
+exercises indirectly (partial shardings restore, async-save flush)."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.configs.registry import get_config
+from repro.dist import sharding as shd
+from repro.dist.fault import Heartbeat, HeartbeatMonitor, RestartPolicy, StragglerTracker
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+
+
+class FakeMesh:
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+# ----------------------------------------------------------------------
+# fit_spec
+# ----------------------------------------------------------------------
+
+
+class TestFitSpec:
+    def test_legal_spec_passes_through(self):
+        mesh = FakeMesh(model=4, data=2)
+        sp = shd.fit_spec(P("data", None, "model"), (8, 3, 16), mesh)
+        assert sp == P("data", None, "model")
+
+    def test_relocates_to_nearest_divisible_dim(self):
+        mesh = FakeMesh(model=16)
+        # 16-way model on dim of size 8: both neighbours legal, later wins
+        sp = shd.fit_spec(P(None, "model", None), (32, 8, 32), mesh)
+        assert sp == P(None, None, "model")
+        # only the earlier neighbour is legal
+        sp = shd.fit_spec(P(None, "model", None), (32, 8, 3), mesh)
+        assert sp == P("model", None, None)
+
+    def test_no_legal_dim_falls_back_to_replicated(self):
+        mesh = FakeMesh(model=16)
+        sp = shd.fit_spec(P("model", None), (3, 5), mesh)
+        assert sp == P(None, None)
+
+    def test_tuple_axis_uses_product_size(self):
+        mesh = FakeMesh(pod=2, data=16)
+        # ('pod','data') = 32-way on batch 8 -> moves to the seq dim
+        sp = shd.fit_spec(P(("pod", "data"), None), (8, 64), mesh)
+        assert sp == P(None, ("pod", "data"))
+
+    def test_short_spec_is_padded(self):
+        mesh = FakeMesh(data=2)
+        sp = shd.fit_spec(P("data"), (4, 8, 3), mesh)
+        assert sp == P("data", None, None)
+
+    def test_spec_longer_than_shape_is_truncated(self):
+        mesh = FakeMesh(model=4)
+        sp = shd.fit_spec(P(None, None, "model"), (8, 16), mesh)
+        assert sp == P(None, None)
+
+    def test_size_one_axis_always_legal(self):
+        mesh = FakeMesh(model=1)
+        sp = shd.fit_spec(P("model", None), (3, 5), mesh)
+        assert sp == P("model", None)
+
+
+# ----------------------------------------------------------------------
+# param_specs rule table
+# ----------------------------------------------------------------------
+
+
+def _specs_by_path(arch):
+    cfg = get_config(arch)
+    a_params, _ = steps_lib.abstract_state(cfg)
+    specs = shd.param_specs(a_params)
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+    return {jax.tree_util.keystr(k): v for k, v in flat}
+
+
+class TestParamSpecs:
+    def test_dense_arch_rules(self):
+        by_path = _specs_by_path("mistral-large-123b")
+        for proj in ("q", "k", "v"):
+            vs = [v for k, v in by_path.items() if f"['attn']['{proj}']['w']" in k]
+            assert vs and all(v[-1] == "model" for v in vs)
+        ow = [v for k, v in by_path.items() if "['attn']['o']['w']" in k]
+        assert ow and all(v[-2] == "model" for v in ow)
+        up = [v for k, v in by_path.items() if "['mlp']['up']['w']" in k]
+        assert up and all(v[-1] == "model" for v in up)
+        dn = [v for k, v in by_path.items() if "['mlp']['down']['w']" in k]
+        assert dn and all(v[-2] == "model" for v in dn)
+        norms = [v for k, v in by_path.items() if "norm" in k]
+        assert norms and all(all(e is None for e in v) for v in norms)
+
+    def test_moe_arch_rules(self):
+        by_path = _specs_by_path("kimi-k2-1t-a32b")
+        for t in ("gate", "up", "down"):
+            vs = [v for k, v in by_path.items() if f"['moe']['{t}']" in k and "shared" not in k]
+            assert vs and all(v[1] == "model" for v in vs)
+        router = [v for k, v in by_path.items() if "router" in k]
+        assert router and all(all(e is None for e in v) for v in router)
+
+    def test_ssm_arch_rules(self):
+        by_path = _specs_by_path("mamba2-1.3b")
+        inp = [v for k, v in by_path.items() if "['in_proj']['w']" in k]
+        assert inp and all(v[-1] == "model" for v in inp)
+        outp = [v for k, v in by_path.items() if "['out_proj']['w']" in k]
+        assert outp and all(v[-2] == "model" for v in outp)
+        conv = [v for k, v in by_path.items() if "conv" in k]
+        assert conv and all(all(e is None for e in v) for v in conv)
+
+    def test_embed_sharded_on_vocab(self):
+        for arch in ("mistral-large-123b", "kimi-k2-1t-a32b", "mamba2-1.3b"):
+            by_path = _specs_by_path(arch)
+            emb = [v for k, v in by_path.items() if "embed" in k]
+            assert emb and emb[0][0] == "model"
+
+    def test_replicate_kv_option(self):
+        cfg = get_config("qwen2.5-3b")
+        a_params, _ = steps_lib.abstract_state(cfg)
+        specs = shd.param_specs(a_params, replicate_kv=True)
+        flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+        by_path = {jax.tree_util.keystr(k): v for k, v in flat}
+        for proj, expect_model in (("k", False), ("v", False), ("q", True)):
+            vs = [v for k, v in by_path.items() if f"['attn']['{proj}']['w']" in k]
+            assert vs
+            for v in vs:
+                assert (v[-1] == "model") == expect_model
+
+    def test_param_shardings_all_legal_on_host_mesh(self):
+        mesh = make_host_mesh(1, 1)
+        cfg = get_config("qwen2.5-3b").reduced()
+        a_params, _ = steps_lib.abstract_state(cfg)
+        shardings = shd.param_shardings(mesh, a_params)
+        leaves = jax.tree.leaves(shardings)
+        assert leaves and all(
+            isinstance(s, jax.sharding.NamedSharding) for s in leaves
+        )
+
+
+# ----------------------------------------------------------------------
+# fault tolerance edge cases
+# ----------------------------------------------------------------------
+
+
+class TestHeartbeat:
+    def test_empty_dir_no_dead_ranks(self, tmp_path):
+        mon = HeartbeatMonitor(str(tmp_path), timeout_s=0.0)
+        assert mon.dead_ranks() == []
+        # a directory that doesn't exist yet is also fine
+        mon = HeartbeatMonitor(str(tmp_path / "missing"), timeout_s=0.0)
+        assert mon.dead_ranks() == []
+
+    def test_single_rank_alive_then_dead(self, tmp_path):
+        d = str(tmp_path)
+        hb = Heartbeat(d, rank=0, interval_s=0.0)
+        hb.beat(force=True)
+        assert HeartbeatMonitor(d, timeout_s=3600.0).dead_ranks() == []
+        assert HeartbeatMonitor(d, timeout_s=-1.0).dead_ranks() == [0]
+
+    def test_interval_throttles_beats(self, tmp_path):
+        hb = Heartbeat(str(tmp_path), rank=1, interval_s=3600.0)
+        assert hb.beat() is True
+        assert hb.beat() is False  # throttled
+        assert hb.beat(force=True) is True
+
+    def test_foreign_files_ignored(self, tmp_path):
+        d = str(tmp_path)
+        (tmp_path / "rank_notanumber").write_text("x")
+        (tmp_path / "unrelated.txt").write_text("x")
+        Heartbeat(d, rank=2, interval_s=0.0).beat(force=True)
+        assert HeartbeatMonitor(d, timeout_s=-1.0).dead_ranks() == [2]
+
+
+class TestStragglerTracker:
+    def test_single_rank_never_straggles(self):
+        t = StragglerTracker(slack=2.0)
+        for _ in range(10):
+            t.record(0, 100.0)
+        assert t.stragglers() == []
+
+    def test_warmup_records_not_judged(self):
+        t = StragglerTracker(slack=2.0, min_records=3)
+        t.record(0, 1.0)
+        t.record(1, 50.0)
+        assert t.stragglers() == []
+
+    def test_slack_boundary(self):
+        # EWMA exactly at slack x median is NOT a straggler; above is.
+        t = StragglerTracker(slack=2.0, alpha=1.0, min_records=1)
+        for r in (0, 1, 2):
+            t.record(r, 1.0)
+        t.record(3, 2.0)
+        assert t.stragglers() == []  # 2.0 == 2.0 * median(1.0)
+        t.record(3, 2.0 + 1e-6)
+        assert t.stragglers() == [3]
+
+    def test_two_rank_fleet_flags_the_slow_rank(self):
+        # leave-one-out baseline: the slow rank must not shift the
+        # median it is judged against
+        t = StragglerTracker(slack=2.0, alpha=1.0, min_records=1)
+        t.record(0, 1.0)
+        t.record(1, 1000.0)
+        assert t.stragglers() == [1]
+
+    def test_recovered_rank_drops_off(self):
+        t = StragglerTracker(slack=2.0, alpha=1.0, min_records=1)
+        for r in range(4):
+            t.record(r, 1.0)
+        t.record(3, 10.0)
+        assert t.stragglers() == [3]
+        t.record(3, 1.0)  # alpha=1.0 -> instant recovery
+        assert t.stragglers() == []
+
+
+class TestRestartPolicy:
+    def test_retries_then_succeeds(self):
+        calls = []
+
+        def attempt(i):
+            calls.append(i)
+            if i < 2:
+                raise RuntimeError("boom")
+            return "ok"
+
+        pol = RestartPolicy(max_restarts=3, backoff_s=0.0)
+        restarts = []
+        out = pol.run(attempt, on_restart=lambda i, e: restarts.append(i))
+        assert out == "ok"
+        assert calls == [0, 1, 2]
+        assert restarts == [0, 1]
+
+    def test_exhausted_restarts_reraise(self):
+        pol = RestartPolicy(max_restarts=1, backoff_s=0.0)
+        with pytest.raises(RuntimeError, match="always"):
+            pol.run(lambda i: (_ for _ in ()).throw(RuntimeError("always")))
+
+
+# ----------------------------------------------------------------------
+# checkpoint: partial shardings restore + async-save flush
+# ----------------------------------------------------------------------
+
+
+class TestCkptPaths:
+    def test_restore_with_partial_shardings(self, tmp_path):
+        d = str(tmp_path)
+        params = {"w": jnp.arange(8.0).reshape(2, 4)}
+        m = {"w": jnp.ones((2, 4))}
+        v = {"w": jnp.full((2, 4), 2.0)}
+        ckpt_lib.save(d, 3, {"params": params, "m": m, "v": v})
+
+        mesh = make_host_mesh(1, 1)
+        sh = jax.sharding.NamedSharding(mesh, P(None, None))
+        like = {"params": params, "m": m, "v": v}
+        # partial: only params carries a sharding; m/v restore unsharded
+        r = ckpt_lib.restore(d, 3, like, shardings={"params": {"w": sh}})
+        np.testing.assert_array_equal(np.asarray(r["params"]["w"]), params["w"])
+        np.testing.assert_array_equal(np.asarray(r["m"]["w"]), m["w"])
+        np.testing.assert_array_equal(np.asarray(r["v"]["w"]), v["w"])
+        assert r["params"]["w"].sharding.is_equivalent_to(sh, 2)
+
+    def test_restore_rejects_unmatched_shardings_keys(self, tmp_path):
+        d = str(tmp_path)
+        ckpt_lib.save(d, 1, {"params": {"w": jnp.ones(4)}})
+        mesh = make_host_mesh(1, 1)
+        sh = jax.sharding.NamedSharding(mesh, P(None))
+        with pytest.raises(ValueError, match="match no checkpoint leaf"):
+            ckpt_lib.restore(
+                d, 1, {"params": {"w": jnp.ones(4)}},
+                shardings={"param": {"w": sh}},  # typo'd key
+            )
+
+    def test_restore_with_single_sharding_broadcast(self, tmp_path):
+        d = str(tmp_path)
+        tree = {"a": jnp.ones(4), "b": jnp.zeros((2, 2))}
+        ckpt_lib.save(d, 1, tree)
+        mesh = make_host_mesh(1, 1)
+        sh = jax.sharding.NamedSharding(mesh, P())
+        r = ckpt_lib.restore(d, 1, tree, shardings=sh)
+        np.testing.assert_array_equal(np.asarray(r["a"]), tree["a"])
+        np.testing.assert_array_equal(np.asarray(r["b"]), tree["b"])
+
+    def test_saver_wait_flushes_last_async_save(self, tmp_path):
+        d = str(tmp_path)
+        saver = ckpt_lib.Saver(d, keep=10)
+        for s in (1, 2, 3):
+            saver.save(s, {"x": jnp.full((4,), float(s))})
+        saver.wait()
+        assert saver.last_path is not None
+        assert ckpt_lib.list_steps(d) == [1, 2, 3]
+        r = ckpt_lib.restore(d, 3, {"x": jnp.zeros(4)})
+        np.testing.assert_array_equal(np.asarray(r["x"]), np.full((4,), 3.0))
+
+    def test_saver_wait_idempotent_and_safe_before_save(self, tmp_path):
+        saver = ckpt_lib.Saver(str(tmp_path))
+        saver.wait()  # no save in flight: must not raise
+        saver.save(1, {"x": jnp.ones(2)})
+        saver.wait()
+        saver.wait()
+        assert ckpt_lib.latest_step(str(tmp_path)) == 1

@@ -1,9 +1,13 @@
 """Hypothesis property tests on the system's invariants."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import SsPropPolicy, flops, sparse_dense, sparsity
