@@ -2,9 +2,12 @@
 
 (a) drop-rate sweep, (b) top-k vs random selection, (c) schedulers
 (constant / linear / cosine / bar) at a fixed target, (d) scheduler
-period. Reproduces the paper's qualitative findings: accuracy falls with
-rate; random falls faster than top-k; schedulers beat constant; the
-2-epoch bar is at least as good as iteration-periodic bars.
+period, (e) backward-engine path — channel top-k vs 32-channel blocks
+vs blocks through the Pallas gathered kernels (interpret mode on CPU).
+Reproduces the paper's qualitative findings: accuracy falls with rate;
+random falls faster than top-k; schedulers beat constant; the 2-epoch
+bar is at least as good as iteration-periodic bars; and the TPU-native
+block/Pallas paths track the channel path's accuracy.
 """
 import dataclasses
 
@@ -12,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core.policy import SsPropPolicy, paper_default
+from repro.core.policy import SsPropPolicy, paper_default, tpu_default
 from repro.core.schedulers import drop_rate_for_step
 from repro.data.pipeline import ImagePipeline, ImagePipelineConfig
 from repro.models import resnet
@@ -23,7 +26,7 @@ _STEPS = 16
 _SPE = 4  # steps per "epoch"
 
 
-def _train(rate_fn, selection="topk", steps=_STEPS, seed=0):
+def _train(rate_fn, selection="topk", steps=_STEPS, seed=0, policy_fn=None):
     pipe = ImagePipeline(ImagePipelineConfig((3, 16, 16), 10, 32, seed=7), n_train=256)
     params = resnet.init_params(_NAME, jax.random.PRNGKey(seed), num_classes=10)
     opt = adam.init(params)
@@ -33,11 +36,12 @@ def _train(rate_fn, selection="topk", steps=_STEPS, seed=0):
     def get_step(rate):
         key = round(rate, 2)
         if key not in cache:
-            pol = (
-                SsPropPolicy(0.0)
-                if rate == 0
-                else dataclasses.replace(paper_default(rate), selection=selection)
-            )
+            if rate == 0:
+                pol = SsPropPolicy(0.0)
+            elif policy_fn is not None:
+                pol = policy_fn(rate)
+            else:
+                pol = dataclasses.replace(paper_default(rate), selection=selection)
 
             def loss_fn(p, x, y, k):
                 logits = resnet.forward(_NAME, p, x, pol)
@@ -45,9 +49,9 @@ def _train(rate_fn, selection="topk", steps=_STEPS, seed=0):
 
             @jax.jit
             def step(p, o, x, y, k):
-                l, g = jax.value_and_grad(loss_fn)(p, x, y, k)
+                lv, g = jax.value_and_grad(loss_fn)(p, x, y, k)
                 p2, o2, _ = adam.apply_updates(ocfg, p, g, o)
-                return p2, o2, l
+                return p2, o2, lv
 
             cache[key] = step
         return cache[key]
@@ -57,7 +61,7 @@ def _train(rate_fn, selection="topk", steps=_STEPS, seed=0):
         b = jax.tree.map(jnp.asarray, pipe.batch_at(i))
         key, sub = jax.random.split(key)
         step = get_step(rate_fn(i))
-        params, opt, l = step(params, opt, b["images"], b["labels"], sub)
+        params, opt, loss = step(params, opt, b["images"], b["labels"], sub)
     ev = pipe.eval_batch(128)
     logits = resnet.forward(_NAME, params, jnp.asarray(ev["images"]), SsPropPolicy(0.0), train=False)
     return float((jnp.argmax(logits, -1) == jnp.asarray(ev["labels"])).mean())
@@ -89,3 +93,16 @@ def run():
             )
         )
         emit(f"fig2d/period_{period}", 0.0, f"acc={acc:.3f}")
+    # (e) backward-engine paths at 0.8: channel top-k (paper) vs block
+    # granularity vs block + Pallas gathered kernels — the conv rows run
+    # through core/backward.py's unified pipeline in all three.
+    engine_paths = {
+        "channel": lambda r: paper_default(r),
+        "block": lambda r: dataclasses.replace(tpu_default(r), block_size=32),
+        "block_pallas": lambda r: dataclasses.replace(
+            tpu_default(r), block_size=32, use_pallas=True
+        ),
+    }
+    for pname, pfn in engine_paths.items():
+        acc = _train(lambda i: 0.8, policy_fn=pfn)
+        emit(f"fig2e/engine_{pname}", 0.0, f"acc={acc:.3f}")

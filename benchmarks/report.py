@@ -3,7 +3,6 @@ results JSONs. Run after the dry-run matrix + probes:
 
   PYTHONPATH=src python -m benchmarks.report
 """
-import glob
 import json
 import os
 import sys

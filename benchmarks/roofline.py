@@ -25,6 +25,7 @@ Hardware: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
 """
 import argparse
 import dataclasses
+import functools
 import json
 import os
 import sys
@@ -36,10 +37,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import SHAPES
 from repro.configs.registry import ARCH_IDS, get_config
-from repro.core.policy import SsPropPolicy, tpu_default
+from repro.core.policy import SsPropPolicy, paper_default, tpu_default
 from repro.data.pipeline import input_specs
 from repro.launch import steps as steps_lib
-from repro.models import model as lm, transformer
+from repro.models import transformer
 from repro.optim import adam
 
 PEAK_FLOPS = 197e12  # bf16 / chip
@@ -201,6 +202,85 @@ def model_flops(cfg, shape) -> float:
     return 2.0 * n * shape.global_batch  # decode: one token per request
 
 
+_CONV_POLICIES = {
+    "dense": lambda: SsPropPolicy(0.0),
+    "ssprop_channel": lambda: paper_default(0.8),
+    "ssprop_block": lambda: tpu_default(0.8),
+    "ssprop_block_pallas": lambda: dataclasses.replace(
+        tpu_default(0.8), use_pallas=True
+    ),
+}
+
+_CONV_CELLS = [
+    # (model, batch, image) — paper Table 4/5 shapes
+    ("resnet18", 128, (3, 32, 32)),
+    ("resnet50", 128, (3, 32, 32)),
+    ("ddpm", 128, (1, 32, 32)),
+]
+
+
+def _conv_flops(model: str, batch: int, image, policy: SsPropPolicy):
+    from repro.models import ddpm, resnet
+
+    if model == "ddpm":
+        return ddpm.flops_per_iter(batch, image, policy=policy)
+    return resnet.flops_per_iter(model, batch, image, policy=policy)
+
+
+@functools.lru_cache(maxsize=None)
+def _conv_param_bytes(model: str, image) -> float:
+    from repro.models import ddpm, resnet
+
+    if model == "ddpm":
+        shapes = jax.eval_shape(
+            lambda k: ddpm.init_params(k, channels=image[0]), jax.random.PRNGKey(0)
+        )
+    else:
+        shapes = jax.eval_shape(
+            lambda k: resnet.init_params(model, k, in_channels=image[0]),
+            jax.random.PRNGKey(0),
+        )
+    return float(
+        sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(shapes))
+    )
+
+
+def conv_roofline_row(model: str, batch: int, image, policy_name: str):
+    """Backward-pass roofline terms for a conv model under one policy.
+
+    Compute comes from the policy-aware Eq. 6/9 model
+    (``conv_backward_flops_policy``): block granularity counts whole
+    kept blocks and the Pallas path counts its 128-aligned tile padding,
+    so the block/Pallas rows genuinely reflect what the unified backward
+    engine executes, not the nominal channel top-k rate. The memory term
+    is a weights-only lower bound (grad write + read + param read).
+    """
+    policy = _CONV_POLICIES[policy_name]()
+    dense_f, policy_f = _conv_flops(model, batch, image, policy)
+    p_bytes = _conv_param_bytes(model, image)
+    compute_t = policy_f / PEAK_FLOPS
+    memory_t = 3 * p_bytes / HBM_BW
+    return {
+        "arch": model,
+        "shape": f"b{batch}x{image[1]}",
+        "policy": policy_name,
+        "status": "ok",
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "dominant": "compute" if compute_t >= memory_t else "memory",
+        "dense_flops": dense_f,
+        "policy_flops": policy_f,
+        "saved": 1.0 - policy_f / dense_f,
+    }
+
+
+def iter_conv_rows():
+    """All (model × policy) conv roofline rows — shared by run()/main()."""
+    for model, batch, image in _CONV_CELLS:
+        for pname in _CONV_POLICIES:
+            yield conv_roofline_row(model, batch, image, pname)
+
+
 def _load_dryrun(arch, shape_name, mesh, policy):
     f = os.path.join(DRYRUN_DIR, f"{arch}__{shape_name}__{mesh}__{policy}.json")
     if not os.path.exists(f):
@@ -263,6 +343,15 @@ def run():
                 f"mem_s={row['memory_s']:.4f};coll_s={row['collective_s']:.4f};"
                 f"useful={row['useful_ratio']:.3f}",
             )
+    # conv rows: the op the paper is about, through the policy-aware
+    # FLOPs model (channel vs block vs block+Pallas keep counts).
+    for row in iter_conv_rows():
+        emit(
+            f"roofline/conv/{row['arch']}/{row['policy']}",
+            row["compute_s"] * 1e6,
+            f"dom={row['dominant']};saved={row['saved']:.3f};"
+            f"mem_s={row['memory_s']:.4f}",
+        )
 
 
 def main():
@@ -271,9 +360,23 @@ def main():
     ap.add_argument("--shape")
     ap.add_argument("--policy", default="ssprop")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--conv", action="store_true",
+                    help="emit the conv-model rows (policy-aware FLOPs)")
     ap.add_argument("--json", default="")
     args = ap.parse_args()
     rows = []
+    if args.conv:
+        for row in iter_conv_rows():
+            rows.append(row)
+            print(
+                f"{row['arch']:10s} {row['shape']:8s} {row['policy']:20s} "
+                f"comp={row['compute_s']:.4f}s mem={row['memory_s']:.4f}s "
+                f"saved={row['saved']:.3f} dom={row['dominant']}"
+            )
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(rows, f, indent=1)
+        return
     cells = (
         [(a, s) for a in ARCH_IDS for s in SHAPES]
         if args.all

@@ -43,9 +43,9 @@ def _step(name, image, batch, policy):
 
     @jax.jit
     def step(p, o, x, y):
-        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        lv, g = jax.value_and_grad(loss_fn)(p, x, y)
         p2, o2, _ = adam.apply_updates(cfg, p, g, o)
-        return p2, o2, l
+        return p2, o2, lv
 
     x = jax.random.normal(jax.random.PRNGKey(1), (batch,) + image)
     y = jax.random.randint(jax.random.PRNGKey(2), (batch,), 0, 10)

@@ -1,7 +1,6 @@
 """Paper Table 5: DDPM generation backward-FLOPs, dense vs ssProp,
 plus a measured reduced train step (time-parity claim)."""
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 from repro.core.policy import SsPropPolicy, paper_default
@@ -37,9 +36,9 @@ def run():
     def make(policy):
         @jax.jit
         def step(p, o, x, rng):
-            l, g = jax.value_and_grad(lambda p: ddpm.loss_fn(p, sched, x, rng, policy))(p)
+            lv, g = jax.value_and_grad(lambda p: ddpm.loss_fn(p, sched, x, rng, policy))(p)
             p2, o2, _ = adam.apply_updates(ocfg, p, g, o)
-            return p2, o2, l
+            return p2, o2, lv
 
         rng = jax.random.PRNGKey(2)
         return lambda: step(params, opt, x0, rng)

@@ -8,7 +8,6 @@ datasets; the trend is the claim we can verify offline).
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit
 from repro.core import flops as F
@@ -34,9 +33,9 @@ def _run_mode(drop_ssprop, drop_dropout, steps=24, seed=0):
 
     @jax.jit
     def step(p, o, x, y, key):
-        l, g = jax.value_and_grad(loss_fn)(p, x, y, key)
+        lv, g = jax.value_and_grad(loss_fn)(p, x, y, key)
         p2, o2, _ = adam.apply_updates(ocfg, p, g, o)
-        return p2, o2, l
+        return p2, o2, lv
 
     key = jax.random.PRNGKey(100 + seed)
     train_loss = None

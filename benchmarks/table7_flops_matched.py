@@ -28,18 +28,18 @@ def _train(name, policy, steps=16, seed=0):
 
     @jax.jit
     def step(p, o, x, y):
-        l, g = jax.value_and_grad(loss_fn)(p, x, y)
+        lv, g = jax.value_and_grad(loss_fn)(p, x, y)
         p2, o2, _ = adam.apply_updates(ocfg, p, g, o)
-        return p2, o2, l
+        return p2, o2, lv
 
-    l = None
+    loss = None
     for i in range(steps):
         b = jax.tree.map(jnp.asarray, pipe.batch_at(i))
-        params, opt, l = step(params, opt, b["images"], b["labels"])
+        params, opt, loss = step(params, opt, b["images"], b["labels"])
     ev = pipe.eval_batch(128)
     logits = resnet.forward(name, params, jnp.asarray(ev["images"]), SsPropPolicy(0.0), train=False)
     acc = float((jnp.argmax(logits, -1) == jnp.asarray(ev["labels"])).mean())
-    return float(l), acc
+    return float(loss), acc
 
 
 def run():
@@ -55,5 +55,5 @@ def run():
         ("resnet50", SsPropPolicy(0.0), "dense"),
         ("resnet50", paper_default(0.8), "ssprop"),
     ]:
-        l, acc = _train(name, pol)
-        emit(f"table7/train/{name}/{tag}", 0.0, f"loss={l:.3f};acc={acc:.3f}")
+        lv, acc = _train(name, pol)
+        emit(f"table7/train/{name}/{tag}", 0.0, f"loss={lv:.3f};acc={acc:.3f}")

@@ -57,11 +57,11 @@ def main():
 
                 @jax.jit
                 def f(p, o, x, rng):
-                    l, g = jax.value_and_grad(
+                    lv, g = jax.value_and_grad(
                         lambda p: ddpm.loss_fn(p, sched, x, rng, pol)
                     )(p)
                     p2, o2, _ = adam.apply_updates(ocfg, p, g, o)
-                    return p2, o2, l
+                    return p2, o2, lv
 
                 jits[rate] = f
             return jits[rate]
@@ -74,9 +74,9 @@ def main():
             )
             x = synth_images(i, args.batch, args.size)
             rng, sub = jax.random.split(rng)
-            params, opt, l = get(rate)(params, opt, x, sub)
+            params, opt, loss = get(rate)(params, opt, x, sub)
             if (i + 1) % args.steps_per_epoch == 0:
-                print(f"[{mode}] step {i+1:4d} loss={float(l):.4f}")
+                print(f"[{mode}] step {i+1:4d} loss={float(loss):.4f}")
 
         if mode == "ssprop":
             samples = ddpm.sample(

@@ -52,16 +52,16 @@ def train(policy_for_step, steps=200, seed=0):
         if pol.drop_rate not in steps_fns:
             @jax.jit
             def f(p):
-                l, g = jax.value_and_grad(loss_fn)(p, pol)
-                return jax.tree.map(lambda a, b: a - 0.1 * b, p, g), l
+                lv, g = jax.value_and_grad(loss_fn)(p, pol)
+                return jax.tree.map(lambda a, b: a - 0.1 * b, p, g), lv
             steps_fns[pol.drop_rate] = f
         return steps_fns[pol.drop_rate]
 
     hist = []
     for i in range(steps):
         pol = policy_for_step(i)
-        params, l = step_fn(pol)(params)
-        hist.append(float(l))
+        params, loss = step_fn(pol)(params)
+        hist.append(float(loss))
     return hist
 
 

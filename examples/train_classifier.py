@@ -17,7 +17,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.policy import SsPropPolicy, paper_default
 from repro.core.schedulers import average_rate, drop_rate_for_step
@@ -59,9 +58,9 @@ def main():
 
                 @jax.jit
                 def f(p, o, x, y):
-                    l, g = jax.value_and_grad(loss_fn)(p, x, y, pol)
+                    lv, g = jax.value_and_grad(loss_fn)(p, x, y, pol)
                     p2, o2, _ = adam.apply_updates(ocfg, p, g, o)
-                    return p2, o2, l
+                    return p2, o2, lv
 
                 jits[rate] = f
             return jits[rate]
@@ -82,7 +81,7 @@ def main():
         t0 = time.time()
         for i in range(args.steps):
             b = jax.tree.map(jnp.asarray, pipe.batch_at(i))
-            params, opt, l = get(rate_fn(i))(params, opt, b["images"], b["labels"])
+            params, opt, loss = get(rate_fn(i))(params, opt, b["images"], b["labels"])
             if (i + 1) % args.steps_per_epoch == 0:
                 ev = pipe.eval_batch(256)
                 logits = resnet.forward(
@@ -90,7 +89,7 @@ def main():
                     SsPropPolicy(0.0), train=False,
                 )
                 acc = float((jnp.argmax(logits, -1) == jnp.asarray(ev["labels"])).mean())
-                print(f"[{mode}] step {i+1:4d} loss={float(l):.4f} eval_acc={acc:.3f}")
+                print(f"[{mode}] step {i+1:4d} loss={float(loss):.4f} eval_acc={acc:.3f}")
         results[mode] = (time.time() - t0, acc)
 
     avg = average_rate(

@@ -12,7 +12,7 @@ Input shapes are global; the four assigned shape cells live in
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

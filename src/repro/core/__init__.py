@@ -2,14 +2,23 @@
 
 The paper's contribution as a composable JAX module:
 
-* :mod:`repro.core.sparsity`   — channel importance + top-k selection.
+* :mod:`repro.core.backward`   — the unified channel-sparse backward
+  engine: one pipeline (importance → selection → gather → shrunk
+  contraction → compact-gradient scatter, plus the mask-mode oracle,
+  ``bwd_dtype`` casting, TP-local selection, and Pallas routing) that
+  both ops below plug into via :class:`~repro.core.backward.ChannelSparseOp`.
+* :mod:`repro.core.sparsity`   — channel importance + top-k selection
+  (:class:`~repro.core.sparsity.Selection` carries the ragged-tail
+  validity mask and per-shard balanced form).
 * :mod:`repro.core.schedulers` — drop-rate schedulers (constant, linear,
   cosine, bar, 2-epoch bar).
-* :mod:`repro.core.dense`      — ``sparse_dense``: matmul with
-  channel-sparse backward (custom_vjp).
-* :mod:`repro.core.conv`       — ``sparse_conv2d``: convolution with
-  channel-sparse backward (custom_vjp).
-* :mod:`repro.core.flops`      — the paper's FLOPs model (Eq. 6-11).
+* :mod:`repro.core.dense`      — ``sparse_dense``: matmul adapter over
+  the engine (custom_vjp).
+* :mod:`repro.core.conv`       — ``sparse_conv2d``: convolution adapter
+  over the engine; lowers to im2col canonical form for the Pallas
+  gathered kernels (``kernels/im2col.py``).
+* :mod:`repro.core.flops`      — the paper's FLOPs model (Eq. 6-11) and
+  the policy-aware counts (block rounding, Pallas tile padding).
 * :mod:`repro.core.policy`     — ``SsPropPolicy`` configuration object.
 """
 from repro.core.policy import SsPropPolicy
@@ -22,16 +31,21 @@ from repro.core.schedulers import (
     linear_schedule,
 )
 from repro.core.sparsity import (
+    Selection,
     channel_importance,
     select_topk_channels,
     select_topk_blocks,
 )
+from repro.core.backward import ChannelSparseOp, channel_sparse_backward
 from repro.core.dense import sparse_dense
 from repro.core.conv import sparse_conv2d
 from repro.core import flops
 
 __all__ = [
     "SsPropPolicy",
+    "Selection",
+    "ChannelSparseOp",
+    "channel_sparse_backward",
     "sparse_dense",
     "sparse_conv2d",
     "channel_importance",

@@ -1,0 +1,221 @@
+"""The channel-sparse backward engine (paper Fig. 1(a), one implementation).
+
+Both ``sparse_dense`` and ``sparse_conv2d`` used to carry their own copy
+of the ssProp backward pipeline; they now delegate to
+:func:`channel_sparse_backward`, which owns every op-independent stage:
+
+  1. ``bwd_dtype`` casting of the output cotangent,
+  2. importance → policy-driven channel/block selection (including the
+     ragged-tail ``valid`` mask and shard-balanced selection for TP /
+     grouped convs),
+  3. the ``mask_mode`` oracle (same selection, materialized as a mask
+     over a full-size contraction),
+  4. the gather of kept channels and the scatter of compact dW/db back
+     into full-size zero buffers (``.add``-based, so clamped tail
+     duplicates cannot overwrite the last real channel),
+  5. routing to the Pallas gathered kernels when the op can lower itself
+     to the canonical 2-D form (``use_pallas`` + block granularity).
+
+Ops plug in through :class:`ChannelSparseOp`, providing only their
+linear algebra: the full-size contraction, the shrunk (gathered)
+contraction, and optionally a :class:`CanonicalForm` — the im2col-style
+``X2 [M, D_flat] / W2 [D_flat, C_out] / dY2 [M, C_out]`` view that the
+Pallas ``dx_gathered`` / ``dw_gathered_scatter`` kernels consume — and a
+TP fast path for comm-free sharded gathers.
+
+Selection consistency is the engine's core guarantee: mask mode and
+gather mode share one :class:`repro.core.sparsity.Selection` per call,
+so gather-mode output equals the mask-mode oracle to accumulation
+tolerance across every configuration (the property the parity test grid
+pins down).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparsity
+from repro.core.policy import SsPropPolicy
+
+
+@dataclasses.dataclass
+class CanonicalForm:
+    """An op lowered to the 2-D matmul form the Pallas kernels speak.
+
+    ``x2 [M, D_flat]``, ``w2 [D_flat, C_out]``, ``dy2 [M, C_out]`` with
+    rows of ``x2``/``dy2`` aligned (same (batch, position) ordering).
+    ``dx_from`` / ``dw_from`` lift the canonical gradients — dX2
+    ``[M, D_flat]`` and full-size dW2 ``[D_flat, C_out]`` — back to the
+    op's native shapes (dense: reshape; conv: col2im / OIHW reshape).
+    """
+
+    x2: jax.Array
+    w2: jax.Array
+    dy2: jax.Array
+    dx_from: Callable[[jax.Array], jax.Array]
+    dw_from: Callable[[jax.Array], jax.Array]
+
+
+class ChannelSparseOp:
+    """Adapter protocol: the op-specific linear algebra.
+
+    Attributes:
+      c_out: number of output channels (the sparsified axis).
+      channel_axis: position of the channel axis in ``dy``.
+      dw_channel_axis: position of the output-channel axis in ``dw``.
+
+    ``__init__`` installs the shared ``bwd_dtype`` machinery: ``_acc``
+    (the accumulation dtype) and ``_cast`` (casts contraction operands
+    into it when ``bwd_dtype`` is set, identity otherwise — natural
+    promotion is left alone for the default fp32 backward).
+    """
+
+    c_out: int
+    channel_axis: int
+    dw_channel_axis: int
+
+    def __init__(self, policy: SsPropPolicy):
+        self.policy = policy
+        self._acc = _acc_dtype(policy)
+        self._cast = (
+            (lambda a: a.astype(self._acc)) if policy.bwd_dtype else (lambda a: a)
+        )
+
+    def selection_shards(self, policy: SsPropPolicy) -> int:
+        """How many contiguous channel groups selection must balance over
+        (1 = global top-k). Ops fold structural constraints (conv groups)
+        and the policy's TP degree into this."""
+        return 1
+
+    def contract_full(self, dy_eff: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """(dX, dW) from a full-size (possibly masked) cotangent."""
+        raise NotImplementedError
+
+    def contract_gathered(
+        self, dy_k: jax.Array, sel: sparsity.Selection
+    ) -> Tuple[jax.Array, jax.Array]:
+        """(dX, compact dW) from the gathered cotangent ``dy_k`` (kept
+        channels only, phantom slots already zeroed). The compact dW has
+        ``sel.k`` channels on ``dw_channel_axis``; the engine scatters."""
+        raise NotImplementedError
+
+    def canonical(self, dy_eff: jax.Array) -> Optional[CanonicalForm]:
+        """The 2-D lowering for the Pallas gathered kernels, or None when
+        the op cannot (or should not) lower itself."""
+        return None
+
+    def tp_contract(
+        self, dy_eff: jax.Array, sel: sparsity.Selection
+    ) -> Optional[Tuple[jax.Array, jax.Array]]:
+        """Optional comm-free sharded fast path: (dX, full dW) from the
+        per-shard selection, or None to use the generic gather path."""
+        return None
+
+
+def scatter_channels(
+    compact: jax.Array, idx: jax.Array, c: int, axis: int
+) -> jax.Array:
+    """Scatter a compact per-kept-channel tensor into full-size zeros.
+
+    Accumulating (``.add``): duplicate indices — the clamped phantoms of
+    a ragged block tail, whose values the engine has already zeroed —
+    contribute nothing instead of overwriting.
+    """
+    axis = axis % compact.ndim
+    shape = list(compact.shape)
+    shape[axis] = c
+    sl: list = [slice(None)] * compact.ndim
+    sl[axis] = idx
+    return jnp.zeros(shape, compact.dtype).at[tuple(sl)].add(compact)
+
+
+def _acc_dtype(policy: SsPropPolicy):
+    return jnp.bfloat16 if policy.bwd_dtype == "bfloat16" else jnp.float32
+
+
+def _wrap_key(policy: SsPropPolicy, key32) -> Optional[jax.Array]:
+    if policy.selection == "random" and key32 is not None:
+        return jax.random.wrap_key_data(key32.astype(jnp.uint32))
+    return None
+
+
+def channel_sparse_backward(
+    policy: SsPropPolicy,
+    op: ChannelSparseOp,
+    dy: jax.Array,
+    *,
+    key32: Optional[jax.Array] = None,
+    has_bias: bool = False,
+) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """Run the shared ssProp backward pipeline for one op.
+
+    Returns ``(dX, dW, db)`` in accumulation dtype (callers cast back to
+    their parameter dtypes); ``db`` is None when ``has_bias`` is False.
+    """
+    ca = op.channel_axis % dy.ndim
+    c = op.c_out
+    reduce_axes = tuple(a for a in range(dy.ndim) if a != ca)
+    dy_eff = dy.astype(_acc_dtype(policy)) if policy.bwd_dtype else dy
+
+    if not policy.active:
+        dx, dw = op.contract_full(dy_eff)
+        db = dy_eff.sum(axis=reduce_axes) if has_bias else None
+        return dx, dw, db
+
+    key = _wrap_key(policy, key32)
+    sel = sparsity.select(
+        dy_eff,
+        policy,
+        channel_axis=ca,
+        n_shards=op.selection_shards(policy),
+        key=key,
+    )
+
+    if policy.mask_mode:
+        # Reference semantics: identical selection, zeroed channels,
+        # full-size contraction. The oracle every other path must match.
+        mask = sparsity.keep_mask(dy.shape, sel.idx, channel_axis=ca, dtype=dy_eff.dtype)
+        dy_m = dy_eff * mask
+        dx, dw = op.contract_full(dy_m)
+        db = dy_m.sum(axis=reduce_axes) if has_bias else None
+        return dx, dw, db
+
+    db = None
+    if has_bias:
+        # clamped phantom slots always point into the kept tail block,
+        # so the plain keep-mask is correct even when sel.valid exists
+        km = sparsity.keep_mask((c,), sel.idx, channel_axis=0, dtype=dy_eff.dtype)
+        db = dy_eff.sum(axis=reduce_axes) * km
+
+    if sel.shard_idx is not None:
+        fast = op.tp_contract(dy_eff, sel)
+        if fast is not None:
+            dx, dw = fast
+            return dx, dw, db
+
+    if (
+        policy.use_pallas
+        and policy.granularity == "block"
+        and sel.block_idx is not None
+    ):
+        can = op.canonical(dy_eff)
+        if can is not None:
+            from repro.kernels import ops as kops
+
+            dx2 = kops.dx_gathered(can.dy2, can.w2, sel.block_idx, policy.block_size)
+            dw2 = kops.dw_gathered_scatter(
+                can.x2, can.dy2, sel.block_idx, c, policy.block_size
+            )
+            return can.dx_from(dx2), can.dw_from(dw2), db
+
+    dy_k = jnp.take(dy_eff, sel.idx, axis=ca)
+    if sel.valid is not None:
+        vshape = [1] * dy.ndim
+        vshape[ca] = sel.k
+        dy_k = dy_k * sel.valid.reshape(vshape).astype(dy_k.dtype)
+    dx, dw_compact = op.contract_gathered(dy_k, sel)
+    dw = scatter_channels(dw_compact, sel.idx, c, op.dw_channel_axis)
+    return dx, dw, db

@@ -1,15 +1,23 @@
 """``sparse_conv2d``: convolution with ssProp channel-sparse backward.
 
 Forward is ``jax.lax.conv_general_dilated`` (NCHW / OIHW, matching the
-paper's tensor layout). Backward applies the paper's Fig. 1(a) pipeline:
-select top-K output channels of dY, then compute dX and dW through the
-*shrunk* convolution — we take the VJP of the conv restricted to the kept
-output channels, which XLA lowers to transposed convs with ``C_out' = K``
-(exactly the (1-D) FLOPs saving of Eq. 9, without img2col).
+paper's tensor layout). Backward delegates to the shared channel-sparse
+engine (:mod:`repro.core.backward`), which applies the paper's Fig. 1(a)
+pipeline; this module supplies only the conv linear algebra:
 
-The paper's img2col exposition is replaced by the framework-native conv —
-the paper itself does the same for its fast path ("PyTorch built-in
-backward version"). See DESIGN.md §3.
+* **full / mask-mode contraction** — the VJP of the conv itself,
+* **gathered contraction** — the VJP of the conv restricted to the kept
+  output channels, which XLA lowers to transposed convs with
+  ``C_out' = K`` (exactly the (1-D) FLOPs saving of Eq. 9),
+* **canonical (im2col) lowering** — ``kernels/im2col.py`` columnizes the
+  conv so block-granular selection routes through the same Pallas
+  ``dx_gathered`` / ``dw_gathered_scatter`` kernels as ``sparse_dense``
+  when ``use_pallas=True, granularity="block"``.
+
+Grouped convs select a balanced top-k per group (the engine's shard
+mechanism): a gathered grouped conv stays well-formed only when every
+group keeps the same channel count. ``bwd_dtype`` and ``tp_shards``
+behave as in ``sparse_dense``.
 """
 from __future__ import annotations
 
@@ -20,8 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backward
 from repro.core.policy import SsPropPolicy
-from repro.core import sparsity
 
 _DN = ("NCHW", "OIHW", "NCHW")
 
@@ -44,6 +52,73 @@ def _conv(x, w, stride, padding, dilation, groups):
     )
 
 
+class _ConvOp(backward.ChannelSparseOp):
+    """Conv adapter: NCHW dY, OIHW dW (output channels on axis 0)."""
+
+    channel_axis = 1
+    dw_channel_axis = 0
+
+    def __init__(self, x, w, stride, padding, dilation, groups, policy):
+        super().__init__(policy)
+        self.x = x
+        self.w = w
+        self.stride = stride
+        self.padding = padding
+        self.dilation = dilation
+        self.groups = groups
+        self.c_out = w.shape[0]
+
+    def selection_shards(self, policy: SsPropPolicy) -> int:
+        s = 1
+        if policy.tp_shards > 1 and self.c_out % policy.tp_shards == 0:
+            s = policy.tp_shards
+        if self.groups > 1 and (s < self.groups or s % self.groups != 0):
+            # per-group balance is a structural requirement for gathered
+            # grouped convs; it subsumes a TP degree it doesn't divide.
+            s = self.groups
+        return s
+
+    def _vjp(self, w, dy_eff):
+        """VJP of the conv (over cast operands) applied to ``dy_eff``."""
+        x, w = self._cast(self.x), self._cast(w)
+        _, vjp = jax.vjp(
+            lambda x_, w_: _conv(
+                x_, w_, self.stride, self.padding, self.dilation, self.groups
+            ),
+            x,
+            w,
+        )
+        return vjp(dy_eff.astype(jnp.result_type(x.dtype, w.dtype)))
+
+    def contract_full(self, dy_eff):
+        return self._vjp(self.w, dy_eff)
+
+    def contract_gathered(self, dy_k, sel):
+        # VJP of the conv restricted to the kept output channels — the
+        # transposed convs XLA emits have C_out' = K, i.e. shrunk FLOPs.
+        # Balanced per-group selection keeps kept channel j in group
+        # j // k_loc, so feature_group_count survives the restriction.
+        w_k = jnp.take(self.w, sel.idx, axis=0)
+        return self._vjp(w_k, dy_k)
+
+    def canonical(self, dy_eff):
+        if self.groups != 1:
+            return None
+        from repro.kernels import im2col
+
+        c_out, _, kh, kw = self.w.shape
+        x2, col2im, _ = im2col.conv_patches(
+            self._cast(self.x), kh, kw, self.stride, self.padding, self.dilation
+        )
+        return backward.CanonicalForm(
+            x2=x2,
+            w2=self._cast(im2col.flatten_filters(self.w)),
+            dy2=im2col.flatten_grad(dy_eff),
+            dx_from=col2im,
+            dw_from=lambda dw2: im2col.unflatten_filter_grad(dw2, self.w.shape),
+        )
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
 def _sparse_conv2d(policy, has_bias, stride, padding, dilation, groups, x, w, b, key32):
     y = _conv(x, w, stride, padding, dilation, groups)
@@ -60,42 +135,11 @@ def _fwd(policy, has_bias, stride, padding, dilation, groups, x, w, b, key32):
 def _bwd(policy: SsPropPolicy, has_bias, stride, padding, dilation, groups, res, dy):
     x, w, key32 = res
     c_out = w.shape[0]
-
-    key = None
-    if policy.selection == "random":
-        key = jax.random.wrap_key_data(key32.astype(jnp.uint32))
-
-    def full_vjp(dy_eff):
-        _, vjp = jax.vjp(lambda x_, w_: _conv(x_, w_, stride, padding, dilation, groups), x, w)
-        dx, dw = vjp(dy_eff)
-        db = dy_eff.sum(axis=(0, 2, 3)) if has_bias else None
-        return dx, dw, db
-
-    if not policy.active:
-        dx, dw, db = full_vjp(dy)
-    elif policy.mask_mode:
-        dy_m = sparsity.mask_grad(dy, policy, channel_axis=1, key=key)
-        dx, dw, db = full_vjp(dy_m)
-    else:
-        idx, k = sparsity.select_indices(dy, policy, channel_axis=1, key=key)
-        dy_k = jnp.take(dy, idx, axis=1)          # [B, K, H, W]
-        w_k = jnp.take(w, idx, axis=0)            # [K, C_in/g, Kh, Kw]
-        # VJP of the conv restricted to the kept output channels — the
-        # transposed convs XLA emits have C_out' = K, i.e. shrunk FLOPs.
-        _, vjp_k = jax.vjp(
-            lambda x_, w_: _conv(x_, w_, stride, padding, dilation, groups), x, w_k
-        )
-        dx, dw_k = vjp_k(dy_k)
-        dw = jnp.zeros_like(w).at[idx].set(dw_k.astype(w.dtype))
-        db = (
-            jnp.zeros((c_out,), dtype=dy.dtype).at[idx].set(dy_k.sum(axis=(0, 2, 3)))
-            if has_bias
-            else None
-        )
-
-    db_out = (
-        db.astype(dy.dtype) if has_bias else jnp.zeros((c_out,), dy.dtype)
+    op = _ConvOp(x, w, stride, padding, dilation, groups, policy)
+    dx, dw, db = backward.channel_sparse_backward(
+        policy, op, dy, key32=key32, has_bias=has_bias
     )
+    db_out = db.astype(dy.dtype) if has_bias else jnp.zeros((c_out,), dy.dtype)
     return (
         dx.astype(x.dtype),
         dw.astype(w.dtype),

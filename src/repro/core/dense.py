@@ -10,12 +10,11 @@ Fig. 1(a) pipeline generalized from conv to any linear operator
   4. dW[:, kept] = X^T @ dY_kept, dW[:, dropped] = 0
   5. db[kept]   = sum dY_kept,          db[dropped] = 0
 
-``mask_mode`` keeps full-size matmuls with zeroed channels — numerically
-identical, used as the oracle in tests.
-
-The PRNG key argument only matters for ``selection="random"`` (Fig. 2(b)
-ablation); it is a raw uint32 array so custom_vjp can hand back a float0
-cotangent.
+The pipeline itself — selection, mask-mode oracle, ``bwd_dtype``
+casting, TP-local selection, Pallas routing, compact-gradient scatter —
+lives in :mod:`repro.core.backward`; this module only supplies the dense
+linear algebra through a :class:`~repro.core.backward.ChannelSparseOp`
+adapter. ``sparse_conv2d`` plugs into the same engine.
 """
 from __future__ import annotations
 
@@ -26,19 +25,85 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import backward
 from repro.core.policy import SsPropPolicy
-from repro.core import sparsity
 
 
 def _float0_like(x):
     return np.zeros(x.shape, dtype=jax.dtypes.float0)
 
 
-def _select(dy2d: jax.Array, policy: SsPropPolicy, key32: jax.Array):
-    key = None
-    if policy.selection == "random":
-        key = jax.random.wrap_key_data(key32.astype(jnp.uint32))
-    return sparsity.select_indices(dy2d, policy, channel_axis=-1, key=key)
+class _DenseOp(backward.ChannelSparseOp):
+    """Canonical-form op: X2 [M, D_in] @ W [D_in, D_out]."""
+
+    channel_axis = 1
+    dw_channel_axis = 1
+
+    def __init__(self, x2: jax.Array, w: jax.Array, policy: SsPropPolicy):
+        super().__init__(policy)
+        self.x2 = x2
+        self.w = w
+        self.c_out = w.shape[1]
+
+    def selection_shards(self, policy: SsPropPolicy) -> int:
+        if policy.tp_shards > 1 and self.c_out % policy.tp_shards == 0:
+            return policy.tp_shards
+        return 1
+
+    def contract_full(self, dy_eff):
+        dx2 = jnp.matmul(dy_eff, self._cast(self.w.T))
+        dw = jnp.matmul(self._cast(self.x2.T), dy_eff)
+        return dx2, dw
+
+    def contract_gathered(self, dy_k, sel):
+        w_k = self._cast(jnp.take(self.w, sel.idx, axis=1))
+        x2 = self._cast(self.x2)
+        if self.policy.use_pallas:
+            from repro.kernels import ops as kops
+
+            dx2 = kops.matmul(dy_k, w_k.T)
+            dw_k = kops.matmul(x2.T, dy_k)
+        else:
+            dx2 = jnp.matmul(dy_k, w_k.T)       # shrunk: 2*M*K*D_in
+            dw_k = jnp.matmul(x2.T, dy_k)       # shrunk: 2*M*D_in*K
+        return dx2, dw_k
+
+    def canonical(self, dy_eff):
+        return backward.CanonicalForm(
+            x2=self._cast(self.x2),
+            w2=self._cast(self.w),
+            dy2=dy_eff,
+            dx_from=lambda dx2: dx2,
+            dw_from=lambda dw2: dw2,
+        )
+
+    def tp_contract(self, dy_eff, sel):
+        # TP-local selection: gather stays on the shard-local channel
+        # axis (take_along_axis), so GSPMD never all-gathers dY. The
+        # contraction over (shard, kept) for dX reduces exactly like the
+        # dense row-parallel matmul (one psum of [M, D_in]).
+        m = dy_eff.shape[0]
+        d_in = self.w.shape[0]
+        s, c_loc = sel.n_shards, self.c_out // sel.n_shards
+        dy3 = dy_eff.reshape(m, s, c_loc)
+        dy_k = jnp.take_along_axis(dy3, sel.shard_idx[None], axis=2)  # [M, s, k]
+        w3 = self.w.reshape(d_in, s, c_loc)
+        w_k = jnp.take_along_axis(w3, sel.shard_idx[None], axis=2)  # [D_in, s, k]
+        dx2 = jnp.einsum(
+            "msk,dsk->md", dy_k, w_k.astype(dy_k.dtype),
+            preferred_element_type=self._acc,
+        )
+        dw_k = jnp.einsum(
+            "md,msk->dsk", self.x2.astype(dy_k.dtype), dy_k,
+            preferred_element_type=self._acc,
+        )  # [D_in, s, k]
+        dw = (
+            jnp.zeros((d_in, s, c_loc), dw_k.dtype)
+            .at[:, jnp.arange(s)[:, None], sel.shard_idx]
+            .set(dw_k)
+            .reshape(d_in, self.c_out)
+        )
+        return dx2, dw
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
@@ -58,110 +123,10 @@ def _bwd(policy: SsPropPolicy, has_bias: bool, res, dy):
     d_in, d_out = w.shape
     lead = x.shape[:-1]
     m = int(np.prod(lead)) if lead else 1
-    x2 = x.reshape(m, d_in)
-    dy2 = dy.reshape(m, d_out)
-    acc_t = jnp.bfloat16 if policy.bwd_dtype == "bfloat16" else jnp.float32
-    if policy.bwd_dtype:
-        dy2 = dy2.astype(acc_t)
-
-    if not policy.active:
-        dx2 = jnp.matmul(dy2, w.T)
-        dw = jnp.matmul(x2.T, dy2)
-        db = dy2.sum(axis=0) if has_bias else None
-    elif policy.tp_shards > 1 and d_out % policy.tp_shards == 0:
-        # TP-local selection: gather stays on the shard-local channel
-        # axis (take_along_axis), so GSPMD never all-gathers dY. The
-        # contraction over (shard, kept) for dX reduces exactly like the
-        # dense row-parallel matmul (one psum of [M, D_in]).
-        s = policy.tp_shards
-        c_loc = d_out // s
-        sel_key = (
-            jax.random.wrap_key_data(key32.astype(jnp.uint32))
-            if policy.selection == "random"
-            else None
-        )
-        idx, k_loc = sparsity.select_indices_per_shard(
-            dy2, policy, s, key=sel_key
-        )  # [s, k_loc]
-        dy3 = dy2.reshape(m, s, c_loc)
-        dy_k = jnp.take_along_axis(dy3, idx[None], axis=2)  # [M, s, k_loc]
-        w3 = w.reshape(d_in, s, c_loc)
-        w_k = jnp.take_along_axis(w3, idx[None], axis=2)  # [D_in, s, k_loc]
-        dx2 = jnp.einsum(
-            "msk,dsk->md", dy_k, w_k.astype(dy_k.dtype),
-            preferred_element_type=acc_t,
-        )
-        dw_k = jnp.einsum(
-            "md,msk->dsk", x2.astype(dy_k.dtype), dy_k,
-            preferred_element_type=acc_t,
-        )  # [D_in, s, k_loc]
-        dw3 = jnp.zeros((d_in, s, c_loc), dw_k.dtype)
-        dw = dw3.at[:, jnp.arange(s)[:, None], idx].set(dw_k).reshape(d_in, d_out)
-        db = (
-            jnp.zeros((s, c_loc), dy.dtype)
-            .at[jnp.arange(s)[:, None], idx]
-            .set(dy_k.sum(axis=0).astype(dy.dtype))
-            .reshape(d_out)
-            if has_bias
-            else None
-        )
-    elif policy.mask_mode:
-        dy2m = sparsity.mask_grad(
-            dy2,
-            policy,
-            channel_axis=-1,
-            key=(
-                jax.random.wrap_key_data(key32.astype(jnp.uint32))
-                if policy.selection == "random"
-                else None
-            ),
-        )
-        dx2 = jnp.matmul(dy2m, w.T)
-        dw = jnp.matmul(x2.T, dy2m)
-        db = dy2m.sum(axis=0) if has_bias else None
-    else:
-        if (
-            policy.use_pallas
-            and policy.granularity == "block"
-            and d_out % policy.block_size == 0
-        ):
-            # TPU-native path: kept-block indices ride in SMEM and the
-            # gather is fused into the kernels' HBM→VMEM addressing.
-            from repro.kernels import ops as kops
-
-            imp = sparsity.channel_importance(dy2, channel_axis=-1)
-            kb = policy.keep_count(d_out)
-            sel_key = (
-                jax.random.wrap_key_data(key32.astype(jnp.uint32))
-                if policy.selection == "random"
-                else None
-            )
-            bidx = sparsity.select_topk_blocks(
-                imp, policy.block_size, kb, selection=policy.selection, key=sel_key
-            )
-            idx = sparsity.block_indices_to_channels(bidx, policy.block_size)
-            dx2 = kops.dx_gathered(dy2, w, bidx, policy.block_size)
-            dw = kops.dw_gathered_scatter(x2, dy2, bidx, d_out, policy.block_size)
-            dy_k = jnp.take(dy2, idx, axis=1) if has_bias else None
-        else:
-            idx, k = _select(dy2, policy, key32)
-            dy_k = jnp.take(dy2, idx, axis=1)       # [M, K]
-            w_k = jnp.take(w, idx, axis=1)          # [D_in, K]
-            if policy.use_pallas:
-                from repro.kernels import ops as kops
-
-                dx2 = kops.matmul(dy_k, w_k.T)
-                dw_k = kops.matmul(x2.T, dy_k)
-            else:
-                dx2 = jnp.matmul(dy_k, w_k.T)       # shrunk: 2*M*K*D_in
-                dw_k = jnp.matmul(x2.T, dy_k)       # shrunk: 2*M*D_in*K
-            dw = jnp.zeros((d_in, d_out), dtype=dw_k.dtype).at[:, idx].set(dw_k)
-        db = (
-            jnp.zeros((d_out,), dtype=dy.dtype).at[idx].set(dy_k.sum(axis=0))
-            if has_bias
-            else None
-        )
-
+    op = _DenseOp(x.reshape(m, d_in), w, policy)
+    dx2, dw, db = backward.channel_sparse_backward(
+        policy, op, dy.reshape(m, d_out), key32=key32, has_bias=has_bias
+    )
     dx = dx2.reshape(*lead, d_in).astype(x.dtype)
     dw = dw.astype(w.dtype)
     db_out = db.astype(dy.dtype) if has_bias else jnp.zeros((d_out,), dy.dtype)

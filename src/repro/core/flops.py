@@ -1,15 +1,29 @@
-"""The paper's backward-FLOPs model (Eq. 6-11).
+"""The paper's backward-FLOPs model (Eq. 6-11), plus policy-aware counts.
 
 Counting convention (paper, "Drop Rate Lower Bound"): each Add, Sub, Mul
 or Div is one FLOP; sorting is comparisons only (0 FLOPs); the importance
 reduction adds ``(Bt*H_out*W_out - 1) * C_out`` FLOPs.
 
-These formulas drive the benchmark tables (paper Tables 4-7) and the
-property test on the drop-rate lower bound (Eq. 10-11).
+The ``*_ssprop`` functions take the paper's nominal drop rate; the
+``*_policy`` functions take an :class:`~repro.core.policy.SsPropPolicy`
+and count what the backward engine *actually* executes: block
+granularity rounds the keep count to whole ``block_size`` blocks, and
+the Pallas gathered kernels pay for their 128-aligned tile padding.
+
+These formulas drive the benchmark tables (paper Tables 4-7), the conv
+roofline rows, and the property test on the drop-rate lower bound
+(Eq. 10-11).
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import TYPE_CHECKING, Dict
+
+if TYPE_CHECKING:
+    from repro.core.policy import SsPropPolicy
+
+
+def _roundup(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
 
 
 def conv_backward_flops(
@@ -79,6 +93,78 @@ def dense_backward_flops_ssprop(
     return int(f)
 
 
+def kept_channels(c_out: int, policy: "SsPropPolicy") -> int:
+    """Output channels whose gradients the engine actually computes.
+
+    Channel granularity: the paper's ``max(1, round((1-D)*C))``. Block
+    granularity: whole blocks, ``keep_count`` blocks × ``block_size``
+    channels, capped at ``C`` — an upper bound when the ragged tail
+    block is among the kept (its phantom slots are masked at runtime but
+    the contraction is sized for the full block).
+    """
+    if not policy.active:
+        return c_out
+    if policy.granularity == "channel":
+        return policy.keep_count(c_out)
+    return min(c_out, policy.keep_count(c_out) * policy.block_size)
+
+
+def effective_drop_rate(c_out: int, policy: "SsPropPolicy") -> float:
+    """The drop rate the backward actually realizes at ``c_out`` channels
+    (block rounding makes this coarser than ``policy.drop_rate``)."""
+    return 1.0 - kept_channels(c_out, policy) / c_out
+
+
+def conv_backward_flops_policy(
+    bt: int,
+    h_out: int,
+    w_out: int,
+    c_in: int,
+    c_out: int,
+    k: int,
+    policy: "SsPropPolicy",
+) -> int:
+    """Eq. 9 with the engine's real keep counts instead of the nominal D.
+
+    ``(4MN + M) * kept + M*C_out`` with ``M = Bt*H_out*W_out``,
+    ``N = C_in*K^2`` and ``kept = kept_channels(C_out, policy)``. On the
+    Pallas block path the two gathered matmuls run over 128-aligned
+    padded tiles (M, N padded to 128; kept padded to whole blocks), so
+    the 4MN term is counted at padded sizes — the honest cost of the
+    TPU lowering, visible whenever shapes are misaligned.
+    """
+    m = bt * h_out * w_out
+    n = c_in * k * k
+    if not policy.active:
+        return conv_backward_flops(bt, h_out, w_out, c_in, c_out, k)
+    kept = kept_channels(c_out, policy)
+    if policy.use_pallas and policy.granularity == "block":
+        m_pad = _roundup(m, 128)
+        n_pad = _roundup(n, 128)
+        kept_pad = policy.keep_count(c_out) * policy.block_size
+        return int(4 * m_pad * n_pad * kept_pad + m * kept + m * c_out)
+    return int((4 * m * n + m) * kept + m * c_out)
+
+
+def dense_backward_flops_policy(
+    m: int, d_in: int, d_out: int, policy: "SsPropPolicy", bias: bool = True
+) -> int:
+    """Dense analogue of :func:`conv_backward_flops_policy` (K=1 conv)."""
+    if not policy.active:
+        return dense_backward_flops(m, d_in, d_out, bias=bias)
+    kept = kept_channels(d_out, policy)
+    if policy.use_pallas and policy.granularity == "block":
+        m_pad = _roundup(m, 128)
+        d_pad = _roundup(d_in, 128)
+        kept_pad = policy.keep_count(d_out) * policy.block_size
+        f = 4 * m_pad * d_pad * kept_pad
+    else:
+        f = 4 * m * d_in * kept
+    if bias:
+        f += m * kept
+    return int(f + m * d_out)
+
+
 def savings_fraction(
     dense_flops: int, ssprop_flops: int
 ) -> float:
@@ -96,10 +182,19 @@ def conv_layer_report(
     c_out: int,
     k: int,
     drop_rate: float,
+    policy: "SsPropPolicy" = None,
 ) -> Dict[str, float]:
-    """Per-layer dict used by the benchmark tables."""
+    """Per-layer dict used by the benchmark tables.
+
+    With ``policy`` the ssProp count uses the engine's real keep counts
+    (:func:`conv_backward_flops_policy`); otherwise the paper's nominal
+    Eq. 9 at ``drop_rate``.
+    """
     dense = conv_backward_flops(bt, h_out, w_out, c_in, c_out, k)
-    sparse = conv_backward_flops_ssprop(bt, h_out, w_out, c_in, c_out, k, drop_rate)
+    if policy is not None:
+        sparse = conv_backward_flops_policy(bt, h_out, w_out, c_in, c_out, k, policy)
+    else:
+        sparse = conv_backward_flops_ssprop(bt, h_out, w_out, c_in, c_out, k, drop_rate)
     return {
         "dense_flops": dense,
         "ssprop_flops": sparse,

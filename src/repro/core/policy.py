@@ -16,7 +16,7 @@ compiled executables: dense (rate 0.0) and sparse (rate 0.8).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -17,12 +17,38 @@ lower to cheaper HLO and keep dW scatters coalesced.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.policy import SsPropPolicy
+
+
+class Selection(NamedTuple):
+    """A complete, static-shape description of one selection decision.
+
+    ``idx`` always holds ``k`` channel indices (sorted ascending, clamped
+    into ``[0, C)``). With block granularity and a ragged channel tail
+    (``C % block_size != 0``) some slots are phantoms — clamped
+    duplicates of ``C-1`` — and ``valid`` marks the real ones; gathers
+    must zero the phantom slots and scatters must accumulate with
+    ``.add`` so the duplicates cannot overwrite the last real channel.
+    ``valid is None`` means every slot is real.
+
+    ``block_idx`` carries the kept *block* indices when the selection was
+    block-granular and unsharded (the form the Pallas gathered kernels
+    consume). ``shard_idx``/``k_loc``/``n_shards`` carry the per-shard
+    form for TP-local or per-group balanced selection.
+    """
+
+    idx: jax.Array
+    k: int
+    valid: Optional[jax.Array] = None
+    block_idx: Optional[jax.Array] = None
+    shard_idx: Optional[jax.Array] = None
+    k_loc: int = 0
+    n_shards: int = 1
 
 
 def channel_importance(dy: jax.Array, channel_axis: int = -1) -> jax.Array:
@@ -99,6 +125,57 @@ def block_indices_to_channels(block_idx: jax.Array, block_size: int) -> jax.Arra
     return (block_idx[:, None] * block_size + offs[None, :]).reshape(-1)
 
 
+def select(
+    dy: jax.Array,
+    policy: SsPropPolicy,
+    *,
+    channel_axis: int = -1,
+    n_shards: int = 1,
+    key: Optional[jax.Array] = None,
+) -> Selection:
+    """Policy-driven selection in its full structured form.
+
+    ``n_shards > 1`` partitions the channel axis into that many contiguous
+    equal groups and selects a balanced top-k within each — the form used
+    both for TP-local selection (comm-free gathers) and for grouped convs
+    (a gathered grouped conv stays well-formed only when every group
+    keeps the same number of channels).
+    """
+    c = dy.shape[channel_axis % dy.ndim]
+    if n_shards > 1:
+        dy2 = jnp.moveaxis(dy, channel_axis % dy.ndim, -1).reshape(-1, c)
+        shard_idx, k_loc = select_indices_per_shard(dy2, policy, n_shards, key=key)
+        offs = jnp.arange(n_shards)[:, None] * (c // n_shards)
+        flat = jnp.sort((shard_idx + offs).reshape(-1))
+        return Selection(
+            idx=flat,
+            k=n_shards * k_loc,
+            shard_idx=shard_idx,
+            k_loc=k_loc,
+            n_shards=n_shards,
+        )
+    imp = channel_importance(dy, channel_axis)
+    if policy.granularity == "channel":
+        k = policy.keep_count(c)
+        idx = select_topk_channels(imp, k, selection=policy.selection, key=key)
+        return Selection(idx=idx, k=k)
+    k_blocks = policy.keep_count(c)
+    bidx = select_topk_blocks(
+        imp, policy.block_size, k_blocks, selection=policy.selection, key=key
+    )
+    raw = block_indices_to_channels(bidx, policy.block_size)
+    # Ragged tail (C % block_size != 0): the tail block covers phantom
+    # channels past C-1. Clamp them into range for gathers, and mark them
+    # invalid so the engine zeroes their gathered values and scatters
+    # with .add — otherwise the clamped duplicates double-count /
+    # arbitrarily overwrite channel C-1.
+    valid = None
+    if c % policy.block_size != 0:
+        valid = raw < c
+    idx = jnp.minimum(raw, c - 1)
+    return Selection(idx=idx, k=k_blocks * policy.block_size, valid=valid, block_idx=bidx)
+
+
 def select_indices(
     dy: jax.Array,
     policy: SsPropPolicy,
@@ -106,28 +183,16 @@ def select_indices(
     channel_axis: int = -1,
     key: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, int]:
-    """Policy-driven selection: returns (sorted channel indices, K).
+    """Back-compat view of :func:`select`: (sorted channel indices, K).
 
-    For block granularity the returned indices are the expanded channel
-    indices of the kept blocks (length ``k_blocks * block_size``, clipped
-    semantics handled by callers that pad the channel dim).
+    For block granularity the indices are the expanded channel indices of
+    the kept blocks, tail phantoms clamped to ``C-1``. Safe for building
+    keep-masks (a phantom only exists when the tail block was kept, so
+    its clamp target is itself a kept channel); gather/scatter callers
+    must use :func:`select` and honour ``Selection.valid``.
     """
-    c = dy.shape[channel_axis % dy.ndim]
-    imp = channel_importance(dy, channel_axis)
-    if policy.granularity == "channel":
-        k = policy.keep_count(c)
-        idx = select_topk_channels(imp, k, selection=policy.selection, key=key)
-        return idx, k
-    k_blocks = policy.keep_count(c)
-    bidx = select_topk_blocks(
-        imp, policy.block_size, k_blocks, selection=policy.selection, key=key
-    )
-    idx = block_indices_to_channels(bidx, policy.block_size)
-    # Ragged tail: indices past C-1 are clamped; gathers of a clamped
-    # duplicate are masked out by callers via the mask path, but for the
-    # common LM case C % 128 == 0 and no clamping occurs.
-    idx = jnp.minimum(idx, c - 1)
-    return idx, k_blocks * policy.block_size
+    sel = select(dy, policy, channel_axis=channel_axis, key=key)
+    return sel.idx, sel.k
 
 
 def keep_mask(

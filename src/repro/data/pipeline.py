@@ -45,7 +45,6 @@ class TokenPipeline:
     def batch_at(self, step: int, *, host_slice: Optional[Tuple[int, int]] = None) -> Dict[str, np.ndarray]:
         cfg = self.cfg
         lo, hi = host_slice or (0, cfg.global_batch)
-        n = hi - lo
         rng = np.random.default_rng((cfg.seed, step))
         toks = np.empty((cfg.global_batch, cfg.seq_len + 1), np.int32)
         cur = rng.integers(0, cfg.vocab, size=cfg.global_batch)

@@ -44,8 +44,14 @@ protocol used by the training driver:
     straggler when its EWMA exceeds ``slack`` × the median EWMA of
     the other ranks (leave-one-out, so it can't shift its own
     baseline).
+  * ``StragglerSupervisor`` — detection → response: after ``patience``
+    consecutive straggler verdicts it raises ``StragglerEvicted`` to
+    abort the attempt.
   * ``RestartPolicy.run(attempt)`` — bounded-restart supervisor with
     exponential backoff; the driver resumes from the latest committed
-    checkpoint on each attempt.
+    checkpoint on each attempt. ``StragglerEvicted`` aborts add the
+    rank to ``RestartPolicy.excluded_ranks`` and restart immediately
+    (no backoff, no budget slot); the attempt function reads the
+    excluded-rank list on entry and reshards around the survivors.
 """
 from repro.dist import compat as _compat  # noqa: F401  (installs jax shims)

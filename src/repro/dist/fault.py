@@ -11,7 +11,7 @@ import dataclasses
 import os
 import statistics
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 _PREFIX = "rank_"
 
@@ -107,6 +107,12 @@ class StragglerTracker:
     def ewma(self, rank: int) -> Optional[float]:
         return self._ewma.get(rank)
 
+    def forget(self, rank: int) -> None:
+        """Drop a rank's history (evicted ranks must not keep inflating
+        the leave-one-out baseline the survivors are judged against)."""
+        self._ewma.pop(rank, None)
+        self._n.pop(rank, None)
+
     def stragglers(self) -> List[int]:
         judged = {
             r: t
@@ -125,6 +131,77 @@ class StragglerTracker:
         return sorted(out)
 
 
+class StragglerEvicted(RuntimeError):
+    """Abort signal: a persistently slow rank must be resharded around.
+
+    Raised from inside a training attempt (by
+    :class:`StragglerSupervisor`); :meth:`RestartPolicy.run` catches it,
+    records the rank on its excluded-rank list, and restarts the attempt
+    immediately — the attempt function re-reads
+    ``RestartPolicy.excluded_ranks`` and builds its mesh/data split
+    around the survivors.
+    """
+
+    def __init__(self, rank: int, ewma_s: float, baseline_s: float):
+        super().__init__(
+            f"rank {rank} straggling (EWMA {ewma_s:.3f}s vs baseline "
+            f"{baseline_s:.3f}s) — evicting for reshard"
+        )
+        self.rank = rank
+        self.ewma_s = ewma_s
+        self.baseline_s = baseline_s
+
+
+class StragglerSupervisor:
+    """Detection → response: turns :class:`StragglerTracker` verdicts
+    into :class:`StragglerEvicted` aborts.
+
+    A rank is evicted only after it has been flagged on ``patience``
+    *consecutive* checks (one transient slow step — GC, checkpoint
+    flush, preemption notice — must not shrink the fleet), and never if
+    it is already on the caller's excluded list.
+    """
+
+    def __init__(
+        self, tracker: Optional[StragglerTracker] = None, patience: int = 3
+    ):
+        self.tracker = tracker if tracker is not None else StragglerTracker()
+        self.patience = patience
+        self._streak: Dict[int, int] = {}
+
+    def record(self, rank: int, step_time_s: float) -> None:
+        self.tracker.record(rank, step_time_s)
+
+    def check(self, excluded: Sequence[int] = ()) -> None:
+        """Raise :class:`StragglerEvicted` for the worst persistent
+        straggler, if any. Call once per step after ``record``."""
+        # Excluded ranks must not linger in the tracker: a stale slow
+        # EWMA would inflate the median baseline and mask real
+        # stragglers among the survivors.
+        for r in excluded:
+            self.tracker.forget(r)
+            self._streak.pop(r, None)
+        flagged = self.tracker.stragglers()
+        for r in list(self._streak):
+            if r not in flagged:
+                self._streak.pop(r)
+        worst: Optional[int] = None
+        for r in flagged:
+            self._streak[r] = self._streak.get(r, 0) + 1
+            if self._streak[r] >= self.patience:
+                if worst is None or self.tracker.ewma(r) > self.tracker.ewma(worst):
+                    worst = r
+        if worst is not None:
+            judged = {
+                q: t for q, t in self.tracker._ewma.items() if q != worst
+            }
+            baseline = statistics.median(judged.values()) if judged else 0.0
+            ewma = self.tracker.ewma(worst)
+            self._streak.pop(worst, None)
+            self.tracker.forget(worst)
+            raise StragglerEvicted(worst, ewma, baseline)
+
+
 @dataclasses.dataclass
 class RestartPolicy:
     """Bounded-restart supervisor with exponential backoff.
@@ -134,26 +211,64 @@ class RestartPolicy:
     times, then re-raises. The driver's attempt function restores from
     the latest committed checkpoint, so each retry resumes rather than
     recomputes.
+
+    Straggler response: a :class:`StragglerEvicted` raised from inside
+    the attempt adds its rank to ``excluded_ranks`` and restarts
+    *immediately* (no backoff — the fleet just shrank, there is nothing
+    to wait out) without consuming a restart budget slot. The attempt
+    function reads ``excluded_ranks`` on entry to reshard around the
+    evicted ranks. Evictions are bounded by ``max_evictions`` (a fleet
+    cannot shrink forever), and a rank that is already excluded cannot
+    be evicted twice — either overrun degrades the signal to an
+    ordinary bounded restart (backoff included), so ``run`` always
+    terminates.
     """
 
     max_restarts: int = 3
     backoff_s: float = 1.0
     backoff_mult: float = 2.0
+    max_evictions: int = 16
+    excluded_ranks: List[int] = dataclasses.field(default_factory=list)
 
     def run(
         self,
         attempt: Callable[[int], object],
         *,
         on_restart: Optional[Callable[[int, BaseException], None]] = None,
+        on_evict: Optional[Callable[[int, "StragglerEvicted"], None]] = None,
     ):
         delay = self.backoff_s
-        for i in range(self.max_restarts + 1):
+        restarts = 0
+        evictions = 0
+        i = 0
+        while True:
             try:
                 return attempt(i)
+            except StragglerEvicted as e:
+                fresh = e.rank not in self.excluded_ranks
+                if fresh:
+                    self.excluded_ranks.append(e.rank)
+                    if on_evict is not None:
+                        on_evict(e.rank, e)
+                if fresh and evictions < self.max_evictions:
+                    evictions += 1
+                else:
+                    # double eviction (supervisor misuse) or an eviction
+                    # storm: degrade to an ordinary bounded restart so
+                    # the loop stays finite and backs off.
+                    if restarts >= self.max_restarts:
+                        raise
+                    if on_restart is not None:
+                        on_restart(restarts, e)
+                    time.sleep(delay)
+                    delay *= self.backoff_mult
+                    restarts += 1
             except Exception as e:
-                if i >= self.max_restarts:
+                if restarts >= self.max_restarts:
                     raise
                 if on_restart is not None:
-                    on_restart(i, e)
+                    on_restart(restarts, e)
                 time.sleep(delay)
                 delay *= self.backoff_mult
+                restarts += 1
+            i += 1

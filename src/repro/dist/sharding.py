@@ -10,7 +10,7 @@ as mesh-independent :class:`~jax.sharding.PartitionSpec` trees
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Sequence
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

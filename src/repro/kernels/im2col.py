@@ -1,0 +1,93 @@
+"""im2col / patch lowering: conv backward in the canonical 2-D form.
+
+The Pallas gathered kernels (:mod:`repro.kernels.gathered_matmul`) speak
+one language — ``X2 [M, D_flat]``, ``W2 [D_flat, C_out]``, ``dY2
+[M, C_out]`` — so a convolution reaches them by lowering to columnized
+(im2col) form, exactly the paper's Eq. 6 exposition:
+
+  * ``X2`` rows are the ``C_in*Kh*Kw`` receptive-field patches at each
+    output position (``M = B*H_out*W_out``), via
+    ``lax.conv_general_dilated_patches`` (channel ordering ``(c, kh,
+    kw)`` — verified against OIHW filters).
+  * ``dW2 = X2^T @ dY2_kept`` scattered, then ``dW = dW2^T`` reshaped to
+    OIHW.
+  * ``dX2 = dY2_kept @ W2_kept^T`` lifted back to the image by
+    ``col2im`` — the exact VJP of the patch extraction, so stride,
+    padding and dilation all transpose correctly for free.
+
+Only ``groups == 1`` lowers here; grouped convs keep the
+framework-native shrunk-VJP path in :mod:`repro.core.conv`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+
+_DN = ("NCHW", "OIHW", "NCHW")
+
+
+def conv_patches(
+    x: jax.Array,
+    kh: int,
+    kw: int,
+    stride: Tuple[int, int],
+    padding,
+    dilation: Tuple[int, int],
+) -> Tuple[jax.Array, Callable[[jax.Array], jax.Array], Tuple[int, int]]:
+    """Extract receptive-field patches and return the col2im closure.
+
+    Args:
+      x: ``[B, C_in, H, W]`` input (NCHW).
+      kh / kw: filter spatial dims.
+      stride / padding / dilation: as accepted by
+        ``lax.conv_general_dilated``.
+
+    Returns:
+      ``(x2, col2im, (h_out, w_out))`` where ``x2`` is
+      ``[B*H_out*W_out, C_in*Kh*Kw]`` with columns ordered ``(c, kh,
+      kw)`` (matching a flattened OIHW filter), and ``col2im`` lifts a
+      cotangent of that shape back to ``[B, C_in, H, W]`` by
+      scatter-adding each patch element to its source pixel.
+    """
+    b = x.shape[0]
+
+    def patches_fn(x_):
+        return jax.lax.conv_general_dilated_patches(
+            x_,
+            (kh, kw),
+            stride,
+            padding,
+            rhs_dilation=dilation,
+            dimension_numbers=_DN,
+        )  # [B, C_in*Kh*Kw, H_out, W_out]
+
+    p, col2im_vjp = jax.vjp(patches_fn, x)
+    ckk, h_out, w_out = p.shape[1], p.shape[2], p.shape[3]
+    x2 = p.transpose(0, 2, 3, 1).reshape(b * h_out * w_out, ckk)
+
+    def col2im(dx2: jax.Array) -> jax.Array:
+        dcol = dx2.reshape(b, h_out, w_out, ckk).transpose(0, 3, 1, 2)
+        (dx,) = col2im_vjp(dcol.astype(p.dtype))
+        return dx
+
+    return x2, col2im, (h_out, w_out)
+
+
+def flatten_filters(w: jax.Array) -> jax.Array:
+    """OIHW filters → canonical ``W2 [C_in*Kh*Kw, C_out]``."""
+    c_out = w.shape[0]
+    return w.reshape(c_out, -1).T
+
+
+def unflatten_filter_grad(dw2: jax.Array, w_shape: Tuple[int, ...]) -> jax.Array:
+    """Canonical ``dW2 [C_in*Kh*Kw, C_out]`` → OIHW filter gradient."""
+    c_out, c_in, kh, kw = w_shape
+    return dw2.T.reshape(c_out, c_in, kh, kw)
+
+
+def flatten_grad(dy: jax.Array) -> jax.Array:
+    """NCHW cotangent → canonical ``dY2 [B*H_out*W_out, C_out]`` (row
+    order matching :func:`conv_patches`)."""
+    b, c, h, w = dy.shape
+    return dy.transpose(0, 2, 3, 1).reshape(b * h * w, c)

@@ -20,7 +20,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config
-from repro.core.policy import SsPropPolicy
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as lm

@@ -10,9 +10,7 @@ how production frameworks bound it. One optimizer update per step.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +55,7 @@ def make_train_step(
 
     def train_step(params, opt_state, batch):
         if accum == 1:
-            (l, metrics), grads = grad_fn(params, batch)
+            (loss_v, metrics), grads = grad_fn(params, batch)
         else:
             def reshape(x):
                 b = x.shape[0]
@@ -66,22 +64,22 @@ def make_train_step(
             micro = jax.tree.map(reshape, batch)
 
             def body(acc, mb):
-                (l, metrics), g = grad_fn(params, mb)
+                (loss_v, metrics), g = grad_fn(params, mb)
                 acc_g, acc_l = acc
                 return (
                     jax.tree.map(jnp.add, acc_g, g),
-                    acc_l + l / accum,
+                    acc_l + loss_v / accum,
                 ), metrics
 
             zero_g = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params
             )
-            (grads, l), metrics = jax.lax.scan(body, (zero_g, 0.0), micro)
+            (grads, loss_v), metrics = jax.lax.scan(body, (zero_g, 0.0), micro)
             grads = jax.tree.map(lambda g: g / accum, grads)
             metrics = jax.tree.map(lambda m: m[-1], metrics)
 
         new_params, new_opt, om = adam.apply_updates(opt_cfg, params, grads, opt_state)
-        metrics = dict(metrics, loss=l, **om)
+        metrics = dict(metrics, loss=loss_v, **om)
         return new_params, new_opt, metrics
 
     return train_step
@@ -89,7 +87,7 @@ def make_train_step(
 
 def make_eval_step(cfg: ModelConfig) -> Callable:
     def eval_step(params, batch):
-        l, metrics = lm.loss_fn(cfg, params, batch, SsPropPolicy())
+        loss_v, metrics = lm.loss_fn(cfg, params, batch, SsPropPolicy())
         return metrics["ce"]
 
     return eval_step

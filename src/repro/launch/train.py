@@ -21,18 +21,16 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import ckpt as ckpt_lib
-from repro.configs.base import ShapeConfig
 from repro.configs.registry import ARCH_IDS, get_config
-from repro.core.policy import SsPropPolicy, paper_default, tpu_default
+from repro.core.policy import paper_default, tpu_default
 from repro.core.schedulers import drop_rate_for_step
 from repro.data.pipeline import TokenPipeline, TokenPipelineConfig
 from repro.dist import sharding as shd
-from repro.dist.fault import Heartbeat, RestartPolicy, StragglerTracker
+from repro.dist.fault import Heartbeat, RestartPolicy, StragglerSupervisor
 from repro.launch import steps as steps_lib
-from repro.launch.mesh import dp_size, make_host_mesh
+from repro.launch.mesh import make_host_mesh
 from repro.models import model as lm
 from repro.optim import adam
 
@@ -65,7 +63,6 @@ def run(args) -> dict:
     if args.reduced:
         cfg = cfg.reduced()
     mesh = make_host_mesh(args.data_mesh, args.model_mesh)
-    shape = ShapeConfig("cli", args.seq_len, args.global_batch, "train")
 
     pipe = TokenPipeline(
         TokenPipelineConfig(cfg.vocab, args.seq_len, args.global_batch, args.seed)
@@ -95,11 +92,18 @@ def run(args) -> dict:
     ckpt_dir = args.ckpt_dir
     saver = ckpt_lib.AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
     hb = Heartbeat(os.path.join(ckpt_dir, "hb"), rank=0) if ckpt_dir else None
-    strag = StragglerTracker()
+    strag = StragglerSupervisor()
+    restart_policy = RestartPolicy(max_restarts=3, backoff_s=0.1)
     history = []
     injected = {"done": False}
 
     def attempt(attempt_idx: int):
+        # Evicted stragglers stay out of the fleet across restarts. A
+        # single-host run only beats rank 0 (which can never straggle —
+        # it is its own baseline), but a multi-host attempt would size
+        # its data split around the survivors here.
+        if restart_policy.excluded_ranks:
+            print(f"[train] resharding around ranks {restart_policy.excluded_ranks}")
         with jax.set_mesh(mesh):
             params = jax.jit(
                 lambda r: lm.init_params(cfg, r), out_shardings=p_sh
@@ -147,6 +151,7 @@ def run(args) -> dict:
                 loss = float(metrics["loss"])
                 dt = time.time() - t0
                 strag.record(0, dt)
+                strag.check(excluded=restart_policy.excluded_ranks)
                 if hb:
                     hb.beat()
                 history.append(loss)
@@ -164,10 +169,10 @@ def run(args) -> dict:
                 saver.wait()
         return {"history": history, "final_loss": history[-1] if history else None}
 
-    policy = RestartPolicy(max_restarts=3, backoff_s=0.1)
-    return policy.run(
+    return restart_policy.run(
         attempt,
         on_restart=lambda i, e: print(f"[train] restart {i}: {e}"),
+        on_evict=lambda r, e: print(f"[train] evicted straggler rank {r}: {e}"),
     )
 
 

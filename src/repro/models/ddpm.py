@@ -11,13 +11,12 @@ schedule; ``sample`` runs ancestral sampling for the generation example.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import sparse_conv2d
 from repro.core.policy import SsPropPolicy
+from repro.models import layers
 
 
 # ----------------------------------------------------------------------
@@ -57,13 +56,8 @@ def time_embedding(t, dim):
 # ----------------------------------------------------------------------
 
 
-def _kaiming(key, shape):
-    fan_in = shape[1] * shape[2] * shape[3]
-    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
-
-
 def _conv_init(key, c_out, c_in, k=3):
-    return {"w": _kaiming(key, (c_out, c_in, k, k)), "b": jnp.zeros((c_out,), jnp.float32)}
+    return layers.conv2d_init(key, c_out, c_in, k, bias=True)
 
 
 def _lin_init(key, d_in, d_out):
@@ -95,11 +89,11 @@ def _resblock_init(key, c_in, c_out, t_dim):
 
 
 def _resblock_apply(p, x, temb, policy):
-    h = sparse_conv2d(jax.nn.silu(_gn(x)), p["conv1"]["w"], p["conv1"]["b"], padding=1, policy=policy)
+    h = layers.conv_apply(p["conv1"], jax.nn.silu(_gn(x)), policy, padding=1)
     h = h + (jax.nn.silu(temb) @ p["temb"]["w"] + p["temb"]["b"])[:, :, None, None]
-    h = sparse_conv2d(jax.nn.silu(_gn(h)), p["conv2"]["w"], p["conv2"]["b"], padding=1, policy=policy)
+    h = layers.conv_apply(p["conv2"], jax.nn.silu(_gn(h)), policy, padding=1)
     if "skip" in p:
-        x = sparse_conv2d(x, p["skip"]["w"], p["skip"]["b"], policy=policy)
+        x = layers.conv_apply(p["skip"], x, policy)
     return x + h
 
 
@@ -138,7 +132,7 @@ def forward(params, x, t, policy: SsPropPolicy = SsPropPolicy()):
     temb = jax.nn.silu(temb @ params["t1"]["w"] + params["t1"]["b"])
     temb = temb @ params["t2"]["w"] + params["t2"]["b"]
 
-    h0 = sparse_conv2d(x, params["stem"]["w"], params["stem"]["b"], padding=1, policy=policy)
+    h0 = layers.conv_apply(params["stem"], x, policy, padding=1)
     d1 = _resblock_apply(params["down1"], h0, temb, policy)
     d2 = _resblock_apply(params["down2"], _down(d1), temb, policy)
     d3 = _resblock_apply(params["down3"], _down(d2), temb, policy)
@@ -147,7 +141,7 @@ def forward(params, x, t, policy: SsPropPolicy = SsPropPolicy()):
     u3 = _resblock_apply(params["up3"], jnp.concatenate([m, d3], 1), temb, policy)
     u2 = _resblock_apply(params["up2"], jnp.concatenate([_up(u3), d2], 1), temb, policy)
     u1 = _resblock_apply(params["up1"], jnp.concatenate([_up(u2), d1], 1), temb, policy)
-    return sparse_conv2d(jax.nn.silu(_gn(u1)), params["out"]["w"], params["out"]["b"], padding=1, policy=policy)
+    return layers.conv_apply(params["out"], jax.nn.silu(_gn(u1)), policy, padding=1)
 
 
 def loss_fn(params, sched, x0, rng, policy: SsPropPolicy = SsPropPolicy()):
@@ -184,8 +178,12 @@ def sample(params, sched, rng, shape, policy=SsPropPolicy()):
     return x
 
 
-def flops_per_iter(batch: int, image, base: int = 64, drop_rate: float = 0.0):
-    """Backward-FLOPs (Eq. 6) walk over the UNet's conv layers."""
+def flops_per_iter(batch: int, image, base: int = 64, drop_rate: float = 0.0, policy=None):
+    """Backward-FLOPs (Eq. 6) walk over the UNet's conv layers.
+
+    Pass ``policy`` to count the engine's real keep counts (block
+    rounding, Pallas tile padding) instead of the nominal Eq. 9 rate.
+    """
     from repro.core import flops as F
 
     c, hh, ww = image
@@ -195,7 +193,10 @@ def flops_per_iter(batch: int, image, base: int = 64, drop_rate: float = 0.0):
     def add(c_in, c_out, k, h, w):
         nonlocal dense, sparse
         dense += F.conv_backward_flops(batch, h, w, c_in, c_out, k)
-        sparse += F.conv_backward_flops_ssprop(batch, h, w, c_in, c_out, k, drop_rate)
+        if policy is not None:
+            sparse += F.conv_backward_flops_policy(batch, h, w, c_in, c_out, k, policy)
+        else:
+            sparse += F.conv_backward_flops_ssprop(batch, h, w, c_in, c_out, k, drop_rate)
 
     add(c, c1, 3, hh, ww)
     for (ci, co, h) in [(c1, c1, hh), (c1, c2, hh // 2), (c2, c3, hh // 4)]:

@@ -1,7 +1,11 @@
-"""Shared transformer layers (pure-JAX, functional, pytree params).
+"""Shared model layers (pure-JAX, functional, pytree params).
 
-Every projection matmul routes through :func:`repro.core.sparse_dense`,
-so the ssProp policy applies uniformly across architectures. Attention is
+Every projection matmul routes through :func:`repro.core.sparse_dense`
+and every convolution through :func:`repro.core.sparse_conv2d` — via
+:func:`dense_apply` / :func:`conv_apply` below — so the ssProp policy
+(and the unified backward engine behind it) applies uniformly across
+architectures: transformers, ResNets and the DDPM UNet all sparsify
+through the same ``repro.core.backward`` pipeline. Attention is
 memory-blocked (scan over query chunks with full-K masked scores) so
 32k-prefill fits HBM without materializing the full S×S score tensor.
 """
@@ -13,7 +17,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import sparse_dense
+from repro.core import sparse_conv2d, sparse_dense
 from repro.core.policy import SsPropPolicy
 
 # ----------------------------------------------------------------------
@@ -32,6 +36,44 @@ def dense_init(key, d_in, d_out, *, bias=False, dtype=jnp.bfloat16, scale=None):
 
 def dense_apply(p, x, policy: SsPropPolicy, key=None):
     return sparse_dense(x, p["w"], p.get("b"), policy=policy, key=key)
+
+
+def conv2d_init(key, c_out, c_in, k, *, bias=False, dtype=jnp.float32):
+    """Kaiming-normal OIHW conv params: ``{"w"[, "b"]}``."""
+    fan_in = c_in * k * k
+    w = jax.random.normal(key, (c_out, c_in, k, k), jnp.float32) * math.sqrt(
+        2.0 / fan_in
+    )
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def conv_apply(
+    p,
+    x,
+    policy: SsPropPolicy,
+    *,
+    stride=1,
+    padding=0,
+    dilation=1,
+    groups=1,
+    key=None,
+):
+    """The single conv call site the CNN models share (mirrors
+    :func:`dense_apply`): params dict in, ssProp-backward conv out."""
+    return sparse_conv2d(
+        x,
+        p["w"],
+        p.get("b"),
+        stride=stride,
+        padding=padding,
+        dilation=dilation,
+        groups=groups,
+        policy=policy,
+        key=key,
+    )
 
 
 def rmsnorm_init(d, dtype=jnp.bfloat16):

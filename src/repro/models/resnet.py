@@ -1,7 +1,8 @@
 """ResNet-18/26/50 (He et al. 2016) with ssProp convolutions.
 
 Paper-faithful reproduction substrate: every convolution routes through
-:func:`repro.core.sparse_conv2d`; BatchNorm follows the paper's FLOPs
+:func:`repro.models.layers.conv_apply` (and via it the unified
+channel-sparse backward engine); BatchNorm follows the paper's FLOPs
 model (Eq. 7). ResNet-26 is the paper's Q2 control: BasicBlocks in a
 (2, 3, 5, 2) layout, FLOPs-matched to a sparsely-trained ResNet-50.
 
@@ -17,8 +18,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import sparse_conv2d
 from repro.core.policy import SsPropPolicy
+from repro.models import layers
 
 LAYOUTS = {
     # name: (block_kind, stage_sizes)
@@ -28,13 +29,8 @@ LAYOUTS = {
 }
 
 
-def _kaiming(key, shape):
-    fan_in = shape[1] * shape[2] * shape[3]
-    return jax.random.normal(key, shape, jnp.float32) * math.sqrt(2.0 / fan_in)
-
-
 def conv_init(key, c_out, c_in, k):
-    return {"w": _kaiming(key, (c_out, c_in, k, k))}
+    return layers.conv2d_init(key, c_out, c_in, k)
 
 
 def bn_init(c):
@@ -138,7 +134,7 @@ def block_strides(name: str):
 
 
 def _conv(p, x, stride, padding, policy, key=None):
-    return sparse_conv2d(x, p["w"], stride=stride, padding=padding, policy=policy, key=key)
+    return layers.conv_apply(p, x, policy, stride=stride, padding=padding, key=key)
 
 
 def _basic_apply(p, x, stride, policy, train):
@@ -196,11 +192,19 @@ def forward(
     return h @ params["head"]["w"] + params["head"]["b"]
 
 
-def flops_per_iter(name: str, batch: int, image: Tuple[int, int, int], drop_rate: float = 0.0):
+def flops_per_iter(
+    name: str,
+    batch: int,
+    image: Tuple[int, int, int],
+    drop_rate: float = 0.0,
+    policy: Optional[SsPropPolicy] = None,
+):
     """Backward FLOPs per iteration from the paper's Eq. 6/7 model.
 
     Walks the actual layer shapes of this ResNet on ``image`` (C, H, W).
-    Returns (dense_flops, ssprop_flops_at_drop_rate).
+    Returns (dense_flops, ssprop_flops). The ssProp count uses the
+    nominal Eq. 9 at ``drop_rate``; pass ``policy`` instead to count the
+    engine's real keep counts (block rounding, Pallas tile padding).
     """
     from repro.core import flops as F
 
@@ -212,7 +216,14 @@ def flops_per_iter(name: str, batch: int, image: Tuple[int, int, int], drop_rate
     def add_conv(c_in, c_out, k, h_out, w_out):
         nonlocal dense, sparse
         dense += F.conv_backward_flops(batch, h_out, w_out, c_in, c_out, k)
-        sparse += F.conv_backward_flops_ssprop(batch, h_out, w_out, c_in, c_out, k, drop_rate)
+        if policy is not None:
+            sparse += F.conv_backward_flops_policy(
+                batch, h_out, w_out, c_in, c_out, k, policy
+            )
+        else:
+            sparse += F.conv_backward_flops_ssprop(
+                batch, h_out, w_out, c_in, c_out, k, drop_rate
+            )
         bn = F.batchnorm_backward_flops(batch, h_out, w_out, c_out)
         dense += bn
         sparse += bn

@@ -63,9 +63,9 @@ def ssd_chunked(x, dt, a_log, b_mat, c_mat, chunk):
     b_mat/c_mat [B, L, N] (single group broadcast over heads).
     Returns y [B, L, H, P] fp32.
     """
-    bsz, l, h, p = x.shape
+    bsz, slen, h, p = x.shape
     n = b_mat.shape[-1]
-    nc = l // chunk
+    nc = slen // chunk
     a = -jnp.exp(a_log)  # [H], negative
 
     xr = x.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
@@ -114,7 +114,7 @@ def ssd_chunked(x, dt, a_log, b_mat, c_mat, chunk):
     in_decay = jnp.exp(cum)  # decay from chunk start to position i
     y_inter = jnp.einsum("bcqn,bchnp->bcqhp", cr, s_prevs) * in_decay[..., None]
 
-    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    y = (y_intra + y_inter).reshape(bsz, slen, h, p)
     return y
 
 

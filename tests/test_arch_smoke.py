@@ -54,7 +54,7 @@ def test_train_step_improves_and_finite(arch):
     for i in range(3):
         params, opt_state, metrics = step(params, opt_state, batch)
         losses.append(float(metrics["loss"]))
-    assert all(np.isfinite(l) for l in losses)
+    assert all(np.isfinite(x) for x in losses)
     assert losses[-1] < losses[0]  # same batch -> must descend
 
 

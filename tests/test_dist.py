@@ -1,9 +1,6 @@
 """Unit tests for repro.dist: fit_spec, the spec rule table, fault
 tolerance edge cases, and the checkpoint paths test_system.py only
 exercises indirectly (partial shardings restore, async-save flush)."""
-import os
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,7 +10,14 @@ from jax.sharding import PartitionSpec as P
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.configs.registry import get_config
 from repro.dist import sharding as shd
-from repro.dist.fault import Heartbeat, HeartbeatMonitor, RestartPolicy, StragglerTracker
+from repro.dist.fault import (
+    Heartbeat,
+    HeartbeatMonitor,
+    RestartPolicy,
+    StragglerEvicted,
+    StragglerSupervisor,
+    StragglerTracker,
+)
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
 
@@ -217,6 +221,138 @@ class TestStragglerTracker:
         assert t.stragglers() == [3]
         t.record(3, 1.0)  # alpha=1.0 -> instant recovery
         assert t.stragglers() == []
+
+
+class TestStragglerEviction:
+    """ROADMAP "Straggler response": detection wired to RestartPolicy
+    through an excluded-rank list."""
+
+    @staticmethod
+    def _sup(patience=3):
+        return StragglerSupervisor(
+            StragglerTracker(slack=2.0, alpha=1.0, min_records=1),
+            patience=patience,
+        )
+
+    def _feed(self, sup, slow_rank=3, slow=10.0, ranks=4):
+        for r in range(ranks):
+            sup.record(r, slow if r == slow_rank else 1.0)
+
+    def test_patience_gates_eviction(self):
+        sup = self._sup(patience=3)
+        for _ in range(2):
+            self._feed(sup)
+            sup.check()  # streaks 1, 2: no eviction yet
+        self._feed(sup)
+        with pytest.raises(StragglerEvicted) as ei:
+            sup.check()
+        assert ei.value.rank == 3
+        assert ei.value.ewma_s > ei.value.baseline_s
+
+    def test_transient_slowness_resets_streak(self):
+        sup = self._sup(patience=2)
+        self._feed(sup)
+        sup.check()
+        self._feed(sup, slow=1.0)  # alpha=1.0: instant recovery
+        sup.check()  # streak cleared
+        self._feed(sup)
+        sup.check()  # streak back to 1 — still no eviction
+        self._feed(sup)
+        with pytest.raises(StragglerEvicted):
+            sup.check()
+
+    def test_excluded_rank_never_re_evicted(self):
+        sup = self._sup(patience=1)
+        for _ in range(5):
+            self._feed(sup)
+            sup.check(excluded=[3])  # must not raise
+
+    def test_restart_policy_records_rank_and_reshards(self):
+        pol = RestartPolicy(max_restarts=0, backoff_s=0.0)
+        seen = []
+
+        def attempt(i):
+            seen.append(tuple(pol.excluded_ranks))
+            if not pol.excluded_ranks:
+                raise StragglerEvicted(3, 10.0, 1.0)
+            return "ok"
+
+        evicted = []
+        assert pol.run(attempt, on_evict=lambda r, e: evicted.append(r)) == "ok"
+        assert pol.excluded_ranks == [3]
+        assert evicted == [3]
+        assert seen == [(), (3,)]  # second attempt saw the eviction
+
+    def test_eviction_does_not_consume_restart_budget(self):
+        pol = RestartPolicy(max_restarts=1, backoff_s=0.0)
+        calls = []
+
+        def attempt(i):
+            calls.append(i)
+            if len(calls) == 1:
+                raise StragglerEvicted(1, 5.0, 1.0)
+            if len(calls) == 2:
+                raise RuntimeError("boom")
+            return "ok"
+
+        # one eviction + one crash still succeeds on a budget of 1
+        assert pol.run(attempt) == "ok"
+        assert len(calls) == 3
+
+    def test_double_eviction_degrades_to_bounded_restart(self):
+        pol = RestartPolicy(max_restarts=0, backoff_s=0.0)
+
+        def attempt(i):
+            raise StragglerEvicted(2, 9.0, 1.0)
+
+        with pytest.raises(StragglerEvicted):
+            pol.run(attempt)
+        assert pol.excluded_ranks == [2]  # added once, then budget-bounded
+
+    def test_evicted_rank_ewma_does_not_mask_survivors(self):
+        # rank 2 evicted at EWMA 10.0; its stale entry must not inflate
+        # the baseline rank 1 is judged against afterwards
+        sup = self._sup(patience=1)
+        sup.record(0, 1.0)
+        sup.record(1, 1.0)
+        sup.record(2, 10.0)
+        with pytest.raises(StragglerEvicted) as ei:
+            sup.check()
+        assert ei.value.rank == 2
+        sup.record(0, 1.0)
+        sup.record(1, 3.9)  # straggler vs median 1.0 — but not vs 5.5
+        with pytest.raises(StragglerEvicted) as ei:
+            sup.check(excluded=[2])
+        assert ei.value.rank == 1
+
+    def test_eviction_storm_is_bounded(self):
+        # never-repeating rank ids must not grant unlimited free restarts
+        pol = RestartPolicy(max_restarts=0, backoff_s=0.0, max_evictions=3)
+        seen = {"n": 0}
+
+        def attempt(i):
+            seen["n"] += 1
+            raise StragglerEvicted(seen["n"], 9.0, 1.0)
+
+        with pytest.raises(StragglerEvicted):
+            pol.run(attempt)
+        # 3 budgeted evictions + the one that degraded to a bounded restart
+        assert len(pol.excluded_ranks) == 4
+
+    def test_eviction_path_end_to_end(self):
+        sup = self._sup(patience=2)
+        pol = RestartPolicy(max_restarts=0, backoff_s=0.0)
+
+        def attempt(i):
+            ranks = [r for r in range(4) if r not in pol.excluded_ranks]
+            for _ in range(3):
+                for r in ranks:
+                    sup.record(r, 10.0 if r == 2 else 1.0)
+                sup.check(excluded=pol.excluded_ranks)
+            return ranks
+
+        assert pol.run(attempt) == [0, 1, 3]
+        assert pol.excluded_ranks == [2]
 
 
 class TestRestartPolicy:

@@ -239,6 +239,54 @@ class TestFlops:
         s = flops.conv_backward_flops_ssprop(128, 16, 16, 64, 128, 3, 0.4)
         assert 0.38 < flops.savings_fraction(d, s) < 0.41
 
+    def test_policy_counts_channel_matches_nominal(self):
+        """Channel granularity: policy-aware == nominal Eq. 9 at the
+        keep_count-realized rate, for conv and dense."""
+        pol = paper_default(0.8)
+        kept = flops.kept_channels(128, pol)
+        assert kept == pol.keep_count(128)
+        eff = flops.effective_drop_rate(128, pol)
+        c = flops.conv_backward_flops_policy(4, 8, 8, 16, 128, 3, pol)
+        assert c == flops.conv_backward_flops_ssprop(4, 8, 8, 16, 128, 3, eff)
+        d = flops.dense_backward_flops_policy(32, 64, 128, pol)
+        m, d_in = 32, 64
+        assert d == int(4 * m * d_in * kept + m * kept + m * 128)
+
+    def test_policy_counts_block_rounding(self):
+        """Block granularity rounds to whole blocks: 64 channels in one
+        128-block cannot drop anything; the realized rate is 0."""
+        pol = tpu_default(0.8)
+        assert flops.kept_channels(64, pol) == 64
+        assert flops.effective_drop_rate(64, pol) == 0.0
+        # 256 channels = 2 blocks, keep_count(2)=max(1,round(0.2*2))=1
+        assert flops.kept_channels(256, pol) == 128
+        assert flops.effective_drop_rate(256, pol) == 0.5
+
+    def test_policy_counts_pallas_padding(self):
+        """The Pallas path pays for 128-aligned tiles: misaligned M and
+        D_in count at padded sizes, so the dense path is never cheaper
+        than the count claims."""
+        import dataclasses as _dc
+
+        pol = _dc.replace(tpu_default(0.5), use_pallas=True)
+        plain = _dc.replace(pol, use_pallas=False)
+        # m=100, d_in=130 both misaligned; d_out=256 -> keep 1 block
+        assert flops.dense_backward_flops_policy(
+            100, 130, 256, pol
+        ) >= flops.dense_backward_flops_policy(100, 130, 256, plain)
+        assert flops.conv_backward_flops_policy(
+            2, 5, 5, 3, 256, 3, pol
+        ) >= flops.conv_backward_flops_policy(2, 5, 5, 3, 256, 3, plain)
+
+    def test_policy_counts_inactive_equals_dense(self):
+        pol = SsPropPolicy(0.0)
+        assert flops.conv_backward_flops_policy(
+            4, 8, 8, 16, 32, 3, pol
+        ) == flops.conv_backward_flops(4, 8, 8, 16, 32, 3)
+        assert flops.dense_backward_flops_policy(
+            32, 64, 128, pol
+        ) == flops.dense_backward_flops(32, 64, 128)
+
 
 class TestTPLocalSelection:
     """§Perf iteration 1: TP-local per-shard top-k (comm-free gather)."""

@@ -6,7 +6,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.configs.registry import get_config
@@ -40,23 +39,23 @@ def _train_resnet(policy_fn, steps=30, seed=0, name="resnet18", lr=1e-3):
 
     @jax.jit
     def step_dense(params, opt_state, batch):
-        l, g = jax.value_and_grad(loss_fn)(params, batch, SsPropPolicy(0.0))
+        lv, g = jax.value_and_grad(loss_fn)(params, batch, SsPropPolicy(0.0))
         p, s, _ = adam.apply_updates(opt_cfg, params, g, opt_state)
-        return p, s, l
+        return p, s, lv
 
     @jax.jit
     def step_sparse(params, opt_state, batch):
-        l, g = jax.value_and_grad(loss_fn)(params, batch, paper_default(0.8))
+        lv, g = jax.value_and_grad(loss_fn)(params, batch, paper_default(0.8))
         p, s, _ = adam.apply_updates(opt_cfg, params, g, opt_state)
-        return p, s, l
+        return p, s, lv
 
     hist = []
     for i in range(steps):
         batch = jax.tree.map(jnp.asarray, pipe.batch_at(i))
         rate = policy_fn(i)
         fn = step_sparse if rate > 0 else step_dense
-        params, opt_state, l = fn(params, opt_state, batch)
-        hist.append(float(l))
+        params, opt_state, lv = fn(params, opt_state, batch)
+        hist.append(float(lv))
     return hist
 
 
