@@ -9,6 +9,7 @@ def main() -> None:
     from benchmarks import (
         fig2_sensitivity,
         roofline,
+        serve_latency,
         table4_classification,
         table5_generation,
         table6_dropout,
@@ -22,6 +23,7 @@ def main() -> None:
     table7_flops_matched.run()
     fig2_sensitivity.run()
     roofline.run()
+    serve_latency.run()  # writes BENCH_serve.json next to this file
 
 
 if __name__ == "__main__":

@@ -1,0 +1,140 @@
+"""Continuous batching vs. static lock-step under staggered traffic.
+
+The serving-side headline: a staggered-arrival (Poisson) workload with
+heterogeneous generation lengths through the continuous-batching engine
+completes in measurably fewer model steps (higher generated tokens per
+step at equal slot capacity) than the lock-step baseline, which must
+batch arrivals into static waves and stall every wave on its longest
+request. Per-request greedy outputs are verified identical between the
+two before any number is reported.
+
+Emits CSV rows (``name,us_per_call,derived``) like every other table and
+writes ``BENCH_serve.json`` with throughput, p50/p99 per-token latency
+and slot utilization per arch.
+
+Run:  PYTHONPATH=src python benchmarks/serve_latency.py [--arch qwen2.5-3b]
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.registry import get_config
+from repro.models import model as lm
+from repro.serve import (
+    ContinuousBatchingEngine,
+    ServeConfig,
+    generate_lockstep,
+    lockstep_waves,
+    poisson_workload,
+)
+
+# one arch per family: decoder, moe, ssm, encdec
+ARCHS = ("qwen2.5-3b", "kimi-k2-1t-a32b", "mamba2-1.3b", "whisper-large-v3")
+
+SLOTS = 4
+N_REQUESTS = 12
+PROMPT_LEN = 6
+GEN_RANGE = (3, 16)
+MAX_SEQ = 24
+ARRIVAL_RATE = 1.5
+
+
+def bench_arch(arch: str) -> dict:
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = poisson_workload(
+        cfg, n_requests=N_REQUESTS, arrival_rate=ARRIVAL_RATE,
+        prompt_len=PROMPT_LEN, gen_len=GEN_RANGE, seed=11,
+        uniform_prompts=True,
+    )
+
+    engine = ContinuousBatchingEngine(
+        cfg, params,
+        ServeConfig(max_slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=PROMPT_LEN),
+    )
+    for r in reqs:
+        engine.submit(r)
+    out = engine.run()
+    stats = engine.stats()
+
+    # lock-step baseline: static waves in arrival order; verify parity.
+    lock_steps = 0
+    lock_s = 0.0
+    for wave in lockstep_waves(reqs, SLOTS):
+        res = generate_lockstep(
+            cfg, params,
+            np.stack([r.prompt for r in wave]),
+            [r.max_new_tokens for r in wave],
+            max_seq=MAX_SEQ,
+            frames=np.stack([r.frames for r in wave])
+            if cfg.family == "encdec"
+            else None,
+        )
+        lock_steps += res["steps"]
+        lock_s += res["prefill_s"] + res["decode_s"]
+        for r, toks in zip(wave, res["tokens"]):
+            if not np.array_equal(out[r.rid], toks):
+                raise RuntimeError(
+                    f"{arch} rid={r.rid}: continuous != lockstep greedy output"
+                )
+
+    gen_total = sum(len(v) for v in out.values())
+    return {
+        "arch": arch,
+        "family": cfg.family,
+        "requests": N_REQUESTS,
+        "slots": SLOTS,
+        "generated_tokens": gen_total,
+        "continuous_steps": stats["compute_steps"],
+        "lockstep_steps": lock_steps,
+        "step_ratio": lock_steps / max(stats["compute_steps"], 1),
+        "continuous_tokens_per_step": gen_total / max(stats["compute_steps"], 1),
+        "lockstep_tokens_per_step": gen_total / max(lock_steps, 1),
+        "slot_utilization": stats["slot_utilization"],
+        "tokens_per_s": stats["tokens_per_s"],
+        "p50_token_latency_us": stats["p50_token_latency_s"] * 1e6,
+        "p99_token_latency_us": stats["p99_token_latency_s"] * 1e6,
+        "wall_s": stats["wall_s"],
+        "lockstep_wall_s": lock_s,
+    }
+
+
+def run(archs=ARCHS, json_path=None):
+    rows = []
+    for arch in archs:
+        row = bench_arch(arch)
+        rows.append(row)
+        emit(
+            f"serve_continuous_{arch}",
+            row["wall_s"] / max(row["continuous_steps"], 1) * 1e6,
+            f"steps {row['continuous_steps']} vs lockstep {row['lockstep_steps']}"
+            f" (x{row['step_ratio']:.2f}); {row['continuous_tokens_per_step']:.2f}"
+            f" vs {row['lockstep_tokens_per_step']:.2f} gen tok/step;"
+            f" util {row['slot_utilization']*100:.0f}%;"
+            f" p50/p99 {row['p50_token_latency_us']:.0f}/{row['p99_token_latency_us']:.0f} us/tok",
+        )
+    path = json_path or os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default=None)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run((args.arch,) if args.arch else ARCHS, json_path=args.json)
+
+
+if __name__ == "__main__":
+    main()

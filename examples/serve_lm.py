@@ -1,9 +1,10 @@
-"""Serving example: batched autoregressive generation for any --arch.
+"""Serving example: continuous batching under staggered (Poisson) traffic.
 
-Thin wrapper over the production serving driver (repro.launch.serve):
-prefill a prompt batch, decode with the jitted single-token step, report
-throughput. Works for every assigned architecture (reduced configs on
-CPU), including the SSM/hybrid O(1)-state decoders.
+Drives the slot-based engine for any --arch (reduced configs on CPU,
+all families incl. the SSM/hybrid O(1)-state decoders and the Whisper
+encoder-decoder): requests arrive staggered, join the batch as slots
+free up, prefill in chunks interleaved with running decodes, and leave
+on completion. Compare with the static baseline via --engine lockstep.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch jamba-1.5-large-398b
 """
@@ -17,12 +18,17 @@ from repro.launch.serve import build_parser, run
 
 def main():
     ap = build_parser()
-    ap.set_defaults(reduced=True, batch=4, prompt_len=8, gen=16)
+    ap.set_defaults(
+        reduced=True, batch=4, prompt_len=8, gen=16, requests=8,
+        arrival_rate=0.5, prefill_chunk=4,
+    )
     args = ap.parse_args()
     out = run(args)
-    print(f"[serve_lm] arch={args.arch} batch={args.batch}")
-    print(f"[serve_lm] prefill {out['prefill_s']*1e3:.0f} ms, "
-          f"decode {out['decode_s']*1e3:.0f} ms ({out['tokens_per_s']:.1f} tok/s)")
+    print(f"[serve_lm] arch={args.arch} engine={args.engine} "
+          f"slots={args.batch} requests={args.requests or args.batch}")
+    print(f"[serve_lm] {out['steps']} steps, prefill {out['prefill_s']*1e3:.0f} ms, "
+          f"decode {out['decode_s']*1e3:.0f} ms ({out['tokens_per_s']:.1f} tok/s, "
+          f"slot util {out['slot_utilization']*100:.0f}%)")
     for i, row in enumerate(out["generated"][:2]):
         print(f"[serve_lm] request {i}: {row[:12].tolist()}")
 

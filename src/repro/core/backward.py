@@ -94,6 +94,15 @@ class ChannelSparseOp:
         """(dX, dW) from a full-size (possibly masked) cotangent."""
         raise NotImplementedError
 
+    def dx_full(self, dy_eff: jax.Array) -> jax.Array:
+        """Dense dX alone (``sparsify_dx=False`` path). The default rides
+        on ``contract_full``; under jit the unused dW branch is DCE'd."""
+        return self.contract_full(dy_eff)[0]
+
+    def dw_full(self, dy_eff: jax.Array) -> jax.Array:
+        """Dense dW alone (``sparsify_dw=False`` path)."""
+        return self.contract_full(dy_eff)[1]
+
     def contract_gathered(
         self, dy_k: jax.Array, sel: sparsity.Selection
     ) -> Tuple[jax.Array, jax.Array]:
@@ -101,6 +110,15 @@ class ChannelSparseOp:
         channels only, phantom slots already zeroed). The compact dW has
         ``sel.k`` channels on ``dw_channel_axis``; the engine scatters."""
         raise NotImplementedError
+
+    def contract_gathered_dx(self, dy_k: jax.Array, sel) -> jax.Array:
+        """Gathered dX alone (mixed ``sparsify_dw=False`` path). The
+        default discards the dW half; under jit that half is DCE'd."""
+        return self.contract_gathered(dy_k, sel)[0]
+
+    def contract_gathered_dw(self, dy_k: jax.Array, sel) -> jax.Array:
+        """Gathered compact dW alone (mixed ``sparsify_dx=False`` path)."""
+        return self.contract_gathered(dy_k, sel)[1]
 
     def canonical(self, dy_eff: jax.Array) -> Optional[CanonicalForm]:
         """The 2-D lowering for the Pallas gathered kernels, or None when
@@ -159,8 +177,9 @@ def channel_sparse_backward(
     c = op.c_out
     reduce_axes = tuple(a for a in range(dy.ndim) if a != ca)
     dy_eff = dy.astype(_acc_dtype(policy)) if policy.bwd_dtype else dy
+    sdx, sdw = policy.sparsify_dx, policy.sparsify_dw
 
-    if not policy.active:
+    if not policy.active or not (sdx or sdw):
         dx, dw = op.contract_full(dy_eff)
         db = dy_eff.sum(axis=reduce_axes) if has_bias else None
         return dx, dw, db
@@ -177,20 +196,26 @@ def channel_sparse_backward(
     if policy.mask_mode:
         # Reference semantics: identical selection, zeroed channels,
         # full-size contraction. The oracle every other path must match.
+        # A gradient whose sparsify_* flag is off sees the raw cotangent.
         mask = sparsity.keep_mask(dy.shape, sel.idx, channel_axis=ca, dtype=dy_eff.dtype)
         dy_m = dy_eff * mask
-        dx, dw = op.contract_full(dy_m)
-        db = dy_m.sum(axis=reduce_axes) if has_bias else None
+        dx = op.dx_full(dy_m if sdx else dy_eff)
+        dw = op.dw_full(dy_m if sdw else dy_eff)
+        db = (dy_m if sdw else dy_eff).sum(axis=reduce_axes) if has_bias else None
         return dx, dw, db
 
     db = None
     if has_bias:
-        # clamped phantom slots always point into the kept tail block,
-        # so the plain keep-mask is correct even when sel.valid exists
-        km = sparsity.keep_mask((c,), sel.idx, channel_axis=0, dtype=dy_eff.dtype)
-        db = dy_eff.sum(axis=reduce_axes) * km
+        # db follows the dW side (bias is a weight). With sparsify_dw
+        # off it stays dense; otherwise: clamped phantom slots always
+        # point into the kept tail block, so the plain keep-mask is
+        # correct even when sel.valid exists.
+        db = dy_eff.sum(axis=reduce_axes)
+        if sdw:
+            km = sparsity.keep_mask((c,), sel.idx, channel_axis=0, dtype=dy_eff.dtype)
+            db = db * km
 
-    if sel.shard_idx is not None:
+    if sel.shard_idx is not None and sdx and sdw:
         fast = op.tp_contract(dy_eff, sel)
         if fast is not None:
             dx, dw = fast
@@ -205,10 +230,16 @@ def channel_sparse_backward(
         if can is not None:
             from repro.kernels import ops as kops
 
-            dx2 = kops.dx_gathered(can.dy2, can.w2, sel.block_idx, policy.block_size)
-            dw2 = kops.dw_gathered_scatter(
-                can.x2, can.dy2, sel.block_idx, c, policy.block_size
-            )
+            if sdx:
+                dx2 = kops.dx_gathered(can.dy2, can.w2, sel.block_idx, policy.block_size)
+            else:
+                dx2 = jnp.matmul(can.dy2, can.w2.T)
+            if sdw:
+                dw2 = kops.dw_gathered_scatter(
+                    can.x2, can.dy2, sel.block_idx, c, policy.block_size
+                )
+            else:
+                dw2 = jnp.matmul(can.x2.T, can.dy2)
             return can.dx_from(dx2), can.dw_from(dw2), db
 
     dy_k = jnp.take(dy_eff, sel.idx, axis=ca)
@@ -216,6 +247,16 @@ def channel_sparse_backward(
         vshape = [1] * dy.ndim
         vshape[ca] = sel.k
         dy_k = dy_k * sel.valid.reshape(vshape).astype(dy_k.dtype)
-    dx, dw_compact = op.contract_gathered(dy_k, sel)
-    dw = scatter_channels(dw_compact, sel.idx, c, op.dw_channel_axis)
+    if sdx and sdw:
+        dx, dw_compact = op.contract_gathered(dy_k, sel)
+    elif sdx:
+        dx = op.contract_gathered_dx(dy_k, sel)
+        dw_compact = None
+    else:
+        dx = op.dx_full(dy_eff)
+        dw_compact = op.contract_gathered_dw(dy_k, sel)
+    if sdw:
+        dw = scatter_channels(dw_compact, sel.idx, c, op.dw_channel_axis)
+    else:
+        dw = op.dw_full(dy_eff)
     return dx, dw, db

@@ -93,6 +93,36 @@ class _ConvOp(backward.ChannelSparseOp):
     def contract_full(self, dy_eff):
         return self._vjp(self.w, dy_eff)
 
+    def _one_sided_vjp(self, dy_eff, wrt_x: bool, w=None):
+        """VJP w.r.t. a single operand — the mixed sparsify_dx/dw paths
+        ask for one gradient; differentiating only that operand avoids
+        the discarded-half contraction outside jit. ``w`` defaults to
+        the full filters (dense side); the gathered sides pass the
+        kept-channel restriction."""
+        x, w = self._cast(self.x), self._cast(self.w if w is None else w)
+        conv = lambda x_, w_: _conv(
+            x_, w_, self.stride, self.padding, self.dilation, self.groups
+        )
+        if wrt_x:
+            _, vjp = jax.vjp(lambda x_: conv(x_, w), x)
+        else:
+            _, vjp = jax.vjp(lambda w_: conv(x, w_), w)
+        return vjp(dy_eff.astype(jnp.result_type(x.dtype, w.dtype)))[0]
+
+    def dx_full(self, dy_eff):
+        return self._one_sided_vjp(dy_eff, wrt_x=True)
+
+    def dw_full(self, dy_eff):
+        return self._one_sided_vjp(dy_eff, wrt_x=False)
+
+    def contract_gathered_dx(self, dy_k, sel):
+        w_k = jnp.take(self.w, sel.idx, axis=0)
+        return self._one_sided_vjp(dy_k, wrt_x=True, w=w_k)
+
+    def contract_gathered_dw(self, dy_k, sel):
+        w_k = jnp.take(self.w, sel.idx, axis=0)
+        return self._one_sided_vjp(dy_k, wrt_x=False, w=w_k)
+
     def contract_gathered(self, dy_k, sel):
         # VJP of the conv restricted to the kept output channels — the
         # transposed convs XLA emits have C_out' = K, i.e. shrunk FLOPs.

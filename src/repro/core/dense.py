@@ -51,22 +51,32 @@ class _DenseOp(backward.ChannelSparseOp):
         return 1
 
     def contract_full(self, dy_eff):
-        dx2 = jnp.matmul(dy_eff, self._cast(self.w.T))
-        dw = jnp.matmul(self._cast(self.x2.T), dy_eff)
-        return dx2, dw
+        return self.dx_full(dy_eff), self.dw_full(dy_eff)
+
+    def dx_full(self, dy_eff):
+        return jnp.matmul(dy_eff, self._cast(self.w.T))
+
+    def dw_full(self, dy_eff):
+        return jnp.matmul(self._cast(self.x2.T), dy_eff)
 
     def contract_gathered(self, dy_k, sel):
+        return self.contract_gathered_dx(dy_k, sel), self.contract_gathered_dw(dy_k, sel)
+
+    def contract_gathered_dx(self, dy_k, sel):
         w_k = self._cast(jnp.take(self.w, sel.idx, axis=1))
+        if self.policy.use_pallas:
+            from repro.kernels import ops as kops
+
+            return kops.matmul(dy_k, w_k.T)
+        return jnp.matmul(dy_k, w_k.T)          # shrunk: 2*M*K*D_in
+
+    def contract_gathered_dw(self, dy_k, sel):
         x2 = self._cast(self.x2)
         if self.policy.use_pallas:
             from repro.kernels import ops as kops
 
-            dx2 = kops.matmul(dy_k, w_k.T)
-            dw_k = kops.matmul(x2.T, dy_k)
-        else:
-            dx2 = jnp.matmul(dy_k, w_k.T)       # shrunk: 2*M*K*D_in
-            dw_k = jnp.matmul(x2.T, dy_k)       # shrunk: 2*M*D_in*K
-        return dx2, dw_k
+            return kops.matmul(x2.T, dy_k)
+        return jnp.matmul(x2.T, dy_k)           # shrunk: 2*M*D_in*K
 
     def canonical(self, dy_eff):
         return backward.CanonicalForm(

@@ -135,33 +135,47 @@ def conv_backward_flops_policy(
     """
     m = bt * h_out * w_out
     n = c_in * k * k
-    if not policy.active:
+    sdx, sdw = policy.sparsify_dx, policy.sparsify_dw
+    if not policy.active or not (sdx or sdw):
         return conv_backward_flops(bt, h_out, w_out, c_in, c_out, k)
     kept = kept_channels(c_out, policy)
+    # Eq. 6 decomposes per output element as 2N (dX) + 2N (dW) + 1 (db);
+    # each side shrinks only when its sparsify_* flag is on.
     if policy.use_pallas and policy.granularity == "block":
         m_pad = _roundup(m, 128)
         n_pad = _roundup(n, 128)
         kept_pad = policy.keep_count(c_out) * policy.block_size
-        return int(4 * m_pad * n_pad * kept_pad + m * kept + m * c_out)
-    return int((4 * m * n + m) * kept + m * c_out)
+        gathered = 2 * m_pad * n_pad * kept_pad
+        dx_term = gathered if sdx else 2 * m * n * c_out
+        dw_term = gathered if sdw else 2 * m * n * c_out
+    else:
+        dx_term = 2 * m * n * (kept if sdx else c_out)
+        dw_term = 2 * m * n * (kept if sdw else c_out)
+    db_term = m * (kept if sdw else c_out)
+    return int(dx_term + dw_term + db_term + m * c_out)
 
 
 def dense_backward_flops_policy(
     m: int, d_in: int, d_out: int, policy: "SsPropPolicy", bias: bool = True
 ) -> int:
     """Dense analogue of :func:`conv_backward_flops_policy` (K=1 conv)."""
-    if not policy.active:
+    sdx, sdw = policy.sparsify_dx, policy.sparsify_dw
+    if not policy.active or not (sdx or sdw):
         return dense_backward_flops(m, d_in, d_out, bias=bias)
     kept = kept_channels(d_out, policy)
     if policy.use_pallas and policy.granularity == "block":
         m_pad = _roundup(m, 128)
         d_pad = _roundup(d_in, 128)
         kept_pad = policy.keep_count(d_out) * policy.block_size
-        f = 4 * m_pad * d_pad * kept_pad
+        gathered = 2 * m_pad * d_pad * kept_pad
+        dx_term = gathered if sdx else 2 * m * d_in * d_out
+        dw_term = gathered if sdw else 2 * m * d_in * d_out
     else:
-        f = 4 * m * d_in * kept
+        dx_term = 2 * m * d_in * (kept if sdx else d_out)
+        dw_term = 2 * m * d_in * (kept if sdw else d_out)
+    f = dx_term + dw_term
     if bias:
-        f += m * kept
+        f += m * (kept if sdw else d_out)
     return int(f + m * d_out)
 
 

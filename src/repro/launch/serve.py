@@ -1,37 +1,49 @@
-"""Batched LM serving driver (prefill + decode loop).
+"""LM serving CLI — thin front-end over the continuous-batching engine.
 
-Serves a model with batched requests: prefill builds the KV/SSM cache
-from the prompt batch via the full forward pass, then the jitted
-single-token serve step autoregressively extends all requests in
-lock-step (static batch; real serving would use continuous batching —
-the cache layout here, batch-major with per-slot position, is what a
-continuous batcher needs).
+The serving loop itself lives in :mod:`repro.serve`: a slot-based
+request scheduler with chunked prefill (requests join and leave the
+batch mid-flight). ``--engine lockstep`` runs the static lock-step
+baseline instead (every request arrives together, the whole batch stalls
+until the longest generation finishes) — kept for A/B comparison and as
+the parity reference.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
-      --reduced --batch 4 --prompt-len 16 --gen 32
+      --reduced --batch 4 --prompt-len 16 --gen 32 --arrival-rate 0.5
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCH_IDS, get_config
-from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as lm
+from repro.serve import (
+    ContinuousBatchingEngine,
+    ServeConfig,
+    generate_lockstep,
+    lockstep_waves,
+    poisson_workload,
+)
 
 
 def build_parser():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2.5-3b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4, help="slot capacity B")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="requests to serve (default: one per slot)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrivals per engine tick (0 = all at t=0)")
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--token-budget", type=int, default=0)
+    ap.add_argument("--engine", choices=("continuous", "lockstep"),
+                    default="continuous")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
@@ -44,54 +56,91 @@ def run(args) -> dict:
         cfg = cfg.reduced()
     mesh = make_host_mesh(args.data_mesh, args.model_mesh)
     rng = jax.random.PRNGKey(args.seed)
+    n_requests = args.requests or args.batch
     max_seq = args.prompt_len + args.gen + (cfg.n_patches or 0)
 
     with jax.set_mesh(mesh):
         params = lm.init_params(cfg, rng)
-        prompts = jax.random.randint(rng, (args.batch, args.prompt_len), 0, cfg.vocab)
+        reqs = poisson_workload(
+            cfg,
+            n_requests=n_requests,
+            arrival_rate=args.arrival_rate or 1e9,  # 0 -> everything at t=0
+            prompt_len=args.prompt_len,
+            gen_len=args.gen,
+            seed=args.seed,
+            uniform_prompts=True,
+        )
 
-        # ---- prefill: run the prompt through decode steps to build the
-        # cache (teacher-forced); production would use a chunked prefill
-        # kernel — decode_32k/prefill_32k cells cover both shapes.
-        cache = lm.init_cache(cfg, args.batch, max_seq, dtype=jnp.float32)
-        enc_out = None
-        if cfg.family == "encdec":
-            frames = jax.random.normal(rng, (args.batch, cfg.enc_seq, cfg.d_model))
-            enc_out = lm.encode(cfg, params, frames.astype(jnp.dtype(cfg.dtype)))
-        serve_step = jax.jit(steps_lib.make_serve_step(cfg))
+        if args.engine == "lockstep":
+            # equal capacity with the continuous engine: static waves of
+            # --batch requests in arrival order, each stalling on its
+            # longest generation.
+            steps = gen_tokens = 0
+            prefill_s = decode_s = 0.0
+            tokens_by_rid = {}
+            for wave in lockstep_waves(reqs, args.batch):
+                out = generate_lockstep(
+                    cfg, params,
+                    np.stack([r.prompt for r in wave]),
+                    [r.max_new_tokens for r in wave],
+                    max_seq=max_seq,
+                    frames=np.stack([r.frames for r in wave])
+                    if cfg.family == "encdec"
+                    else None,
+                )
+                steps += out["steps"]
+                gen_tokens += out["generated_tokens"]
+                prefill_s += out["prefill_s"]
+                decode_s += out["decode_s"]
+                for r, toks in zip(wave, out["tokens"]):
+                    tokens_by_rid[r.rid] = toks
+            gen = np.stack([tokens_by_rid[r.rid] for r in reqs])
+            return {
+                "generated": gen,
+                "steps": steps,
+                "prefill_s": prefill_s,
+                "decode_s": decode_s,
+                "tokens_per_s": gen_tokens / max(prefill_s + decode_s, 1e-9),
+                "slot_utilization": 1.0,
+            }
 
-        state = {"tokens": prompts[:, :1], "pos": jnp.int32(0), "cache": cache}
-        if enc_out is not None:
-            state["enc_out"] = enc_out
-        t0 = time.time()
-        for t in range(1, args.prompt_len):
-            state = serve_step(params, state)
-            state["tokens"] = prompts[:, t : t + 1]  # teacher-forced prefill
-        prefill_s = time.time() - t0
+        engine = ContinuousBatchingEngine(
+            cfg,
+            params,
+            ServeConfig(
+                max_slots=args.batch,
+                max_seq=max_seq,
+                prefill_chunk=args.prefill_chunk,
+                token_budget=args.token_budget,
+            ),
+            mesh=mesh,
+        )
+        for r in reqs:
+            engine.submit(r)
+        results = engine.run()
+        stats = engine.stats()
 
-        generated = []
-        t0 = time.time()
-        for _ in range(args.gen):
-            state = serve_step(params, state)
-            generated.append(np.asarray(state["tokens"])[:, 0])
-        decode_s = time.time() - t0
-
-    gen = np.stack(generated, axis=1)
-    tput = args.batch * args.gen / max(decode_s, 1e-9)
+    gen = np.stack([results[r.rid] for r in reqs])
     return {
         "generated": gen,
-        "prefill_s": prefill_s,
-        "decode_s": decode_s,
-        "tokens_per_s": tput,
+        "steps": stats["compute_steps"],
+        "prefill_s": stats["prefill_s"],
+        "decode_s": stats["decode_s"],
+        "tokens_per_s": stats["generated_tokens"]
+        / max(stats["prefill_s"] + stats["decode_s"], 1e-9),
+        "tokens_per_step": stats["tokens_per_step"],
+        "slot_utilization": stats["slot_utilization"],
     }
 
 
 def main():
     args = build_parser().parse_args()
     out = run(args)
-    print(f"[serve] batch={args.batch} gen={args.gen}")
+    print(f"[serve] engine={args.engine} slots={args.batch} gen={args.gen} "
+          f"steps={out['steps']}")
     print(f"[serve] prefill {out['prefill_s']*1e3:.0f} ms, decode {out['decode_s']*1e3:.0f} ms"
-          f" ({out['tokens_per_s']:.1f} tok/s)")
+          f" ({out['tokens_per_s']:.1f} tok/s, "
+          f"slot util {out['slot_utilization']*100:.0f}%)")
     print("[serve] first request tokens:", out["generated"][0][:16].tolist())
 
 

@@ -124,6 +124,35 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
     return serve_step
 
 
+def make_slot_step(cfg: ModelConfig) -> Callable:
+    """Mixed prefill/decode step over per-slot state (continuous batching).
+
+    state = {"tokens": [B,C] int32, "count": [B] int32 (real tokens per
+    slot; 0 = idle), "pos": [B] int32 (per-slot cache offsets),
+    "cache": pytree, optional "enc_out": [B, enc_seq, d]}.
+
+    One compiled step serves any slot occupancy: which slots decode,
+    which prefill a chunk and which sit idle is *data* (count/pos), not
+    shape — the engine only recompiles per chunk width C. Returns
+    ``(next_tokens [B] int32 greedy, new_state)`` with the cache written
+    and ``pos`` advanced by ``count``; rows with count==0 return garbage
+    tokens the scheduler ignores.
+    """
+
+    def slot_step(params, state):
+        logits, new_cache = lm.decode_slots(
+            cfg, params, state["tokens"], state["cache"],
+            state["pos"], state["count"], enc_out=state.get("enc_out"),
+        )
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        new_state = dict(
+            state, cache=new_cache, pos=state["pos"] + state["count"]
+        )
+        return nxt, new_state
+
+    return slot_step
+
+
 def abstract_state(cfg: ModelConfig, rng=None):
     """eval_shape of (params, opt_state) — no allocation."""
     rng = rng if rng is not None else jax.random.PRNGKey(0)

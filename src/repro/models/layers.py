@@ -163,12 +163,16 @@ def masked_attention(
     q_chunk: int = 1024,
     kv_len: Optional[jax.Array] = None,
     seq_shard_hint: bool = False,
+    qpos: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Blocked attention: scan over query chunks, full-K masked scores.
 
     q [B,S,H,D], k/v [B,T,KV,D]. ``q_offset`` is the absolute position of
     q[0] (decode). ``kv_len`` optionally masks positions >= kv_len
-    (padded KV caches). Returns [B,S,H,D] in q.dtype.
+    (padded KV caches). ``qpos [B,S]`` gives *per-slot* absolute query
+    positions (continuous batching: each batch row decodes at its own
+    offset); it supersedes ``q_offset``/``kv_len`` and the mask gains a
+    batch dim. Returns [B,S,H,D] in q.dtype.
     """
     b, s, h, d = q.shape
     t = k.shape[1]
@@ -178,12 +182,19 @@ def masked_attention(
     pad = nchunks * q_chunk - s
     if pad:
         q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if qpos is not None:
+            qpos = jnp.pad(qpos, ((0, 0), (0, pad)))
     qs = q.reshape(b, nchunks, q_chunk, h, d).transpose(1, 0, 2, 3, 4)
+    per_slot = qpos is not None
+    if per_slot:
+        qpos_chunks = qpos.reshape(b, nchunks, q_chunk).transpose(1, 0, 2)
+    else:
+        qpos_chunks = jnp.arange(nchunks)
 
     kv_positions = jnp.arange(t)
 
     def body(carry, args):
-        qc, ci = args
+        qc, qp = args
         scores = _gqa_scores(qc, k) * scale  # [B,H,qc,T] fp32
         if seq_shard_hint:
             # §Perf iter 3: keep decode scores sharded on the KV-seq dim
@@ -191,17 +202,26 @@ def masked_attention(
             scores = jax.lax.with_sharding_constraint(
                 scores, jax.sharding.PartitionSpec(None, None, None, "model")
             )
-        qpos = q_offset + ci * q_chunk + jnp.arange(q_chunk)
-        mask = jnp.ones((q_chunk, t), bool)
-        if causal:
-            mask &= kv_positions[None, :] <= qpos[:, None]
-        if kv_len is not None:
-            mask &= kv_positions[None, :] < kv_len
-        scores = jnp.where(mask[None, None], scores, -1e30)
+        if per_slot:
+            # qp [B,qc] absolute per-slot positions -> mask [B,qc,T].
+            # Causality alone fences stale cache rows from an evicted
+            # request: every live kv row sits at a position <= its qpos.
+            mask = jnp.ones((b, q_chunk, t), bool)
+            if causal:
+                mask &= kv_positions[None, None, :] <= qp[:, :, None]
+            scores = jnp.where(mask[:, None], scores, -1e30)
+        else:
+            qpos_c = q_offset + qp * q_chunk + jnp.arange(q_chunk)
+            mask = jnp.ones((q_chunk, t), bool)
+            if causal:
+                mask &= kv_positions[None, :] <= qpos_c[:, None]
+            if kv_len is not None:
+                mask &= kv_positions[None, :] < kv_len
+            scores = jnp.where(mask[None, None], scores, -1e30)
         probs = jax.nn.softmax(scores, axis=-1)
         return carry, _gqa_out(probs, v)
 
-    _, outs = jax.lax.scan(body, None, (qs, jnp.arange(nchunks)))
+    _, outs = jax.lax.scan(body, None, (qs, qpos_chunks))
     out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nchunks * q_chunk, h, d)
     return out[:, :s].astype(q.dtype)
 
@@ -216,6 +236,7 @@ def attn_apply(
     positions=None,
     kv_cache=None,
     cache_pos=None,
+    token_valid=None,
     x_kv=None,
     use_rope=True,
 ):
@@ -223,7 +244,12 @@ def attn_apply(
 
     x [B,S,d]. ``x_kv`` switches to cross-attention (no cache, no rope on
     kv source positions beyond its own). ``kv_cache`` = dict(k, v) of
-    shape [B, T, KV, D] for decode; ``cache_pos`` is the write offset.
+    shape [B, T, KV, D] for decode; ``cache_pos`` is the write offset —
+    a scalar (lock-step: every row writes at the same position) or a
+    ``[B]`` array (continuous batching: each slot writes at its own
+    position, a vectorized scatter). ``token_valid [B,S]`` masks which
+    tokens are real per slot; invalid tokens' k/v are dropped instead of
+    written (their query outputs are garbage the caller never reads).
     Returns (out [B,S,d], new_cache or None).
     """
     b, s, _ = x.shape
@@ -233,24 +259,42 @@ def attn_apply(
     k = dense_apply(p["k"], src, policy).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
     v = dense_apply(p["v"], src, policy).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
 
+    per_slot = cache_pos is not None and getattr(cache_pos, "ndim", 0) >= 1
     if positions is None:
         positions = jnp.arange(s)
     if use_rope:
         q = apply_rope(q, positions, cfg.rope_theta)
         if x_kv is None:
-            kpos = positions if kv_cache is None else positions
-            k = apply_rope(k, kpos, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
 
     new_cache = None
     q_offset = 0
     kv_len = None
+    qpos = None
     if kv_cache is not None:
-        ck = jax.lax.dynamic_update_slice(kv_cache["k"], k, (0, cache_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(kv_cache["v"], v, (0, cache_pos, 0, 0))
+        t = kv_cache["k"].shape[1]
+        if per_slot:
+            # Vectorized per-slot write: row b's token c lands at
+            # cache_pos[b] + c; invalid tokens are routed out of range
+            # and dropped by the scatter.
+            tgt = cache_pos[:, None] + jnp.arange(s)[None, :]  # [B,S]
+            if token_valid is not None:
+                tgt = jnp.where(token_valid, tgt, t)
+            bidx = jnp.arange(b)[:, None]
+            ck = kv_cache["k"].at[bidx, tgt].set(k, mode="drop")
+            cv = kv_cache["v"].at[bidx, tgt].set(v, mode="drop")
+            qpos = (
+                positions
+                if positions.ndim == 2
+                else cache_pos[:, None] + jnp.arange(s)[None, :]
+            )
+        else:
+            ck = jax.lax.dynamic_update_slice(kv_cache["k"], k, (0, cache_pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(kv_cache["v"], v, (0, cache_pos, 0, 0))
+            q_offset = cache_pos
+            kv_len = cache_pos + s
         new_cache = {"k": ck, "v": cv}
         k, v = ck, cv
-        q_offset = cache_pos
-        kv_len = cache_pos + s
 
     out = masked_attention(
         q, k, v, causal=causal and x_kv is None, q_offset=q_offset, kv_len=kv_len,
@@ -258,6 +302,7 @@ def attn_apply(
         seq_shard_hint=(
             kv_cache is not None and getattr(cfg, "decode_seq_shard", False)
         ),
+        qpos=qpos,
     )
     out = out.reshape(b, s, cfg.n_heads * hd)
     return dense_apply(p["o"], out, policy), new_cache

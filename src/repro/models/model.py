@@ -110,19 +110,91 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
     return transformer.stack_cache_init(cfg, batch, max_seq, dt)
 
 
+def decode_slots(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,  # [B, C] — up to C tokens per slot this step
+    cache,
+    slot_pos: jax.Array,  # [B] int32: per-slot cache write position
+    token_count: jax.Array,  # [B] int32: real tokens per slot (0 = idle slot)
+    *,
+    enc_out: Optional[jax.Array] = None,
+    policy: SsPropPolicy = SsPropPolicy(),
+):
+    """Mixed prefill/decode step over independently positioned slots.
+
+    The per-slot cache API for continuous batching: every batch row is a
+    *slot* with its own write position — decode slots feed 1 token,
+    prefilling slots feed a chunk of up to C prompt tokens, idle slots
+    feed 0 — all in one call. KV writes are vectorized scatters at
+    ``slot_pos[b] + c`` (invalid tokens dropped); SSM states freeze on
+    invalid tokens; attention is causally masked per slot, which also
+    fences any stale cache a previous occupant of the slot left behind.
+
+    Returns ``(logits [B, V] at each slot's last real token, new_cache)``.
+    Rows with ``token_count == 0`` carry garbage logits the caller must
+    ignore.
+    """
+    b, c = tokens.shape
+    positions = slot_pos[:, None] + jnp.arange(c)[None, :]  # [B, C]
+    valid = jnp.arange(c)[None, :] < token_count[:, None]  # [B, C]
+    x = layers.embed_apply(params["embed"], tokens)
+    if cfg.family == "encdec":
+        x, new_cache = transformer.cross_decoder_apply(
+            params["decoder"], x, enc_out, cfg, policy,
+            positions=positions, caches=cache, cache_pos=slot_pos,
+            token_valid=valid,
+        )
+    else:
+        x, new_cache, _ = transformer.stack_apply(
+            params["stack"], x, cfg, policy,
+            positions=positions, caches=cache, cache_pos=slot_pos,
+            token_valid=valid,
+        )
+    x = layers.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    last = jnp.clip(token_count - 1, 0, c - 1)
+    x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # [B, 1, d]
+    logits = layers.unembed_apply(params["embed"], x_last, valid=cfg.vocab)[:, 0]
+    return logits, new_cache
+
+
+def reset_slots(cache, free_mask: jax.Array):
+    """Zero the cache rows of the slots in ``free_mask [B]`` (bool).
+
+    Every cache leaf is batch-major on axis 1 (``[np, B, ...]`` for the
+    period stacks, ``[L, B, ...]`` for the encdec cache), so one
+    ``where`` per leaf clears a slot for its next occupant. Mandatory
+    for SSM/conv states (they carry no position to mask by); hygienic
+    for KV rows.
+    """
+
+    def one(a):
+        m = free_mask.reshape((1, -1) + (1,) * (a.ndim - 2))
+        return jnp.where(m, jnp.zeros((), a.dtype), a)
+
+    return jax.tree.map(one, cache)
+
+
 def decode_step(
     cfg: ModelConfig,
     params,
-    tokens: jax.Array,  # [B, 1]
+    tokens: jax.Array,  # [B, S]
     cache,
     pos: jax.Array,  # scalar int32: current write position
     *,
     enc_out: Optional[jax.Array] = None,
     policy: SsPropPolicy = SsPropPolicy(),
 ):
-    """One decode step with KV/SSM caches. Returns (logits [B,V], cache)."""
+    """One lock-step decode step (all rows at the same ``pos``).
+
+    The uniform-position special case of :func:`decode_slots`: the
+    scalar ``pos`` keeps the cheaper ``dynamic_update_slice`` cache
+    write and the batch-shared attention mask. Returns
+    (logits [B,V] at the last position, cache).
+    """
+    b, s = tokens.shape
     x = layers.embed_apply(params["embed"], tokens)
-    positions = (pos + jnp.arange(1))[None, :]
+    positions = (pos + jnp.arange(s))[None, :]
     if cfg.family == "encdec":
         x, new_cache = transformer.cross_decoder_apply(
             params["decoder"], x, enc_out, cfg, policy,
@@ -134,7 +206,7 @@ def decode_step(
             positions=positions, caches=cache, cache_pos=pos,
         )
     x = layers.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
-    logits = layers.unembed_apply(params["embed"], x, valid=cfg.vocab)[:, 0]
+    logits = layers.unembed_apply(params["embed"], x[:, -1:], valid=cfg.vocab)[:, 0]
     return logits, new_cache
 
 

@@ -118,11 +118,14 @@ def ssd_chunked(x, dt, a_log, b_mat, c_mat, chunk):
     return y
 
 
-def ssm_apply(p, x, cfg, policy: SsPropPolicy, cache=None):
+def ssm_apply(p, x, cfg, policy: SsPropPolicy, cache=None, token_valid=None):
     """Mamba-2 block. x [B, S, d].
 
     cache (decode): {"conv": [B, K-1, conv_ch], "state": [B, H, N, P]}.
-    Returns (out [B, S, d], new_cache or None).
+    Decode handles any S >= 1 as a scan of single-token recurrence steps
+    (chunked prefill); ``token_valid [B,S]`` freezes the conv/SSM state
+    on rows whose token is padding (continuous batching: slots advance
+    independently). Returns (out [B, S, d], new_cache or None).
     """
     bsz, s, _ = x.shape
     di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
@@ -149,20 +152,46 @@ def ssm_apply(p, x, cfg, policy: SsPropPolicy, cache=None):
         y = ssd_chunked(xh, dt_p, p["A_log"], bm, cm, cfg.ssm_chunk)[:, :s]
         y = y + xh[:, :s] * p["D"][None, None, :, None]
     else:
-        # O(1) decode: roll conv state, single recurrence step.
-        conv_state = jnp.concatenate([cache["conv"], xbc], axis=1)  # [B, K, C]
-        xbc1 = (conv_state * p["conv_w"][None]).sum(axis=1, keepdims=True) + p["conv_b"]
-        xbc1 = jax.nn.silu(xbc1)
-        xs, bmat, cmat = jnp.split(xbc1, [di, di + n], axis=-1)
-        xh = xs.reshape(bsz, 1, h, pd).astype(jnp.float32)
+        # O(1)-state decode: scan single-token recurrence steps over the
+        # chunk (S=1 is the classic decode). Invalid tokens leave the
+        # conv window and SSM state untouched.
         a = -jnp.exp(p["A_log"])
-        da = jnp.exp(dt[:, 0] * a)  # [B, H]
-        s_new = da[..., None, None] * cache["state"] + jnp.einsum(
-            "bn,bhp->bhnp", bmat[:, 0].astype(jnp.float32), (dt[:, 0, :, None] * xh[:, 0])
+        if token_valid is None:
+            token_valid = jnp.ones((bsz, s), bool)
+
+        def step(carry, inp):
+            conv_state, state = carry  # [B,K-1,C], [B,H,N,P]
+            xbc_t, dt_t, valid_t = inp  # [B,C], [B,H], [B]
+            conv_cat = jnp.concatenate([conv_state, xbc_t[:, None]], axis=1)
+            xc = (conv_cat * p["conv_w"][None]).sum(axis=1) + p["conv_b"]
+            xc = jax.nn.silu(xc)
+            xs_t, bm_t, cm_t = jnp.split(xc, [di, di + n], axis=-1)
+            xh_t = xs_t.reshape(bsz, h, pd).astype(jnp.float32)
+            da = jnp.exp(dt_t * a)  # [B,H]
+            s_new = da[..., None, None] * state + jnp.einsum(
+                "bn,bhp->bhnp",
+                bm_t.astype(jnp.float32),
+                dt_t[..., None] * xh_t,
+            )
+            y_t = jnp.einsum("bn,bhnp->bhp", cm_t.astype(jnp.float32), s_new)
+            y_t = y_t + xh_t * p["D"][None, :, None]
+            conv_next = jnp.where(
+                valid_t[:, None, None], conv_cat[:, 1:], conv_state
+            )
+            state_next = jnp.where(valid_t[:, None, None, None], s_new, state)
+            return (conv_next, state_next), y_t
+
+        (conv_f, state_f), ys = jax.lax.scan(
+            step,
+            (cache["conv"], cache["state"]),
+            (
+                xbc.transpose(1, 0, 2),
+                dt.transpose(1, 0, 2),
+                token_valid.transpose(1, 0),
+            ),
         )
-        y = jnp.einsum("bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), s_new)
-        y = (y + xh[:, 0] * p["D"][None, :, None])[:, None]
-        new_cache = {"conv": conv_state[:, 1:], "state": s_new}
+        y = ys.transpose(1, 0, 2, 3)  # [B,S,H,P]
+        new_cache = {"conv": conv_f, "state": state_f}
 
     y = y.reshape(bsz, s, di).astype(x.dtype)
     y = y * jax.nn.silu(z)

@@ -99,6 +99,7 @@ def _slot_apply(
     positions=None,
     cache=None,
     cache_pos=None,
+    token_valid=None,
 ):
     h = layers.rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
     new_cache = None
@@ -112,9 +113,12 @@ def _slot_apply(
             positions=positions,
             kv_cache=cache,
             cache_pos=cache_pos,
+            token_valid=token_valid,
         )
     else:
-        out, new_cache = ssm.ssm_apply(p["ssm"], h, cfg, policy, cache=cache)
+        out, new_cache = ssm.ssm_apply(
+            p["ssm"], h, cfg, policy, cache=cache, token_valid=token_valid
+        )
     x = x + out
     aux = jnp.zeros((), jnp.float32)
     if slot.ffn is not None:
@@ -176,6 +180,7 @@ def stack_apply(
     positions=None,
     caches=None,
     cache_pos=None,
+    token_valid=None,
 ):
     """Run the full stack. Returns (x, new_caches, total_aux)."""
     slots = period_pattern(cfg)
@@ -196,6 +201,7 @@ def stack_apply(
                 positions=positions,
                 cache=cache_i,
                 cache_pos=cache_pos,
+                token_valid=token_valid,
             )
             aux = aux + a
             new_slot_caches.append(nc if decode else None)
@@ -287,7 +293,8 @@ def cross_decoder_init(key, cfg: ModelConfig):
 
 
 def cross_decoder_apply(
-    params, x, enc_out, cfg, policy, *, positions=None, caches=None, cache_pos=None
+    params, x, enc_out, cfg, policy, *, positions=None, caches=None, cache_pos=None,
+    token_valid=None,
 ):
     decode = caches is not None
 
@@ -298,6 +305,7 @@ def cross_decoder_apply(
             p["self"], layers.rmsnorm_apply(p["norm1"], h, cfg.norm_eps), cfg, policy,
             causal=True, positions=positions,
             kv_cache=cache if decode else None, cache_pos=cache_pos,
+            token_valid=token_valid,
         )
         h = h + a
         c, _ = layers.attn_apply(

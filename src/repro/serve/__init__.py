@@ -1,0 +1,43 @@
+"""Continuous-batching serving subsystem.
+
+Layout::
+
+  request.py    request record + lifecycle states
+  cache.py      SlotCacheManager — cache rows as allocatable slots
+  scheduler.py  ServeConfig + token-budget prefill/decode packing
+  engine.py     ContinuousBatchingEngine — the serving loop
+  lockstep.py   static lock-step baseline + per-request parity oracle
+  workload.py   Poisson staggered-arrival workload generator
+
+The engine rides on the per-slot cache API in ``repro.models.model``
+(``decode_slots`` / ``reset_slots``) and the jitted mixed step in
+``repro.launch.steps.make_slot_step``; under a data×model mesh the cache
+uses ``repro.dist.sharding.cache_shardings``. `repro.launch.serve` is
+the CLI.
+"""
+from repro.serve.cache import SlotCacheManager
+from repro.serve.engine import ContinuousBatchingEngine
+from repro.serve.lockstep import (
+    generate_lockstep,
+    generate_reference,
+    lockstep_waves,
+)
+from repro.serve.request import DECODE, FINISHED, PREFILL, WAITING, Request
+from repro.serve.scheduler import Scheduler, ServeConfig
+from repro.serve.workload import poisson_workload
+
+__all__ = [
+    "ContinuousBatchingEngine",
+    "SlotCacheManager",
+    "Scheduler",
+    "ServeConfig",
+    "Request",
+    "WAITING",
+    "PREFILL",
+    "DECODE",
+    "FINISHED",
+    "generate_lockstep",
+    "generate_reference",
+    "lockstep_waves",
+    "poisson_workload",
+]

@@ -1,0 +1,87 @@
+"""Slot-based cache manager: batch rows as an allocatable resource.
+
+The decode cache is batch-major (``[np, B, T, ...]`` leaves), so batch
+row *b* is an independent per-request resource — a **slot** — with its
+own write position. This manager owns the cache pytree, the free-slot
+pool and the host-side per-slot positions; ``reset`` zeroes a freed
+slot's rows (mandatory for SSM/conv state, which has no position to
+mask by) in one jitted call before reuse.
+
+Under a data×model mesh the cache is placed with the production
+partition rules (:func:`repro.dist.sharding.cache_shardings`), so the
+engine serves sharded exactly like the lock-step driver did.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as lm
+
+
+class SlotCacheManager:
+    """Allocate/free cache rows per request with independent positions."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        n_slots: int,
+        max_seq: int,
+        *,
+        dtype=jnp.float32,
+        mesh=None,
+        seq_shard: bool = False,
+    ):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        cache = lm.init_cache(cfg, n_slots, max_seq, dtype=dtype)
+        if mesh is not None:
+            from repro.dist import sharding as shd
+
+            cache = jax.device_put(
+                cache, shd.cache_shardings(mesh, cache, seq_shard=seq_shard)
+            )
+        self.cache = cache
+        self.pos = np.zeros((n_slots,), np.int32)  # per-slot write offset
+        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self._reset = jax.jit(lm.reset_slots)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free)
+
+    def alloc(self) -> int:
+        """Claim a free slot (lowest id first). Raises when full."""
+        if not self._free:
+            raise RuntimeError("no free slots")
+        slot = self._free.pop()
+        self.pos[slot] = 0
+        return slot
+
+    def free(self, slot: int) -> None:
+        """Return a slot to the pool. The rows are zeroed lazily at the
+        next :meth:`reset` (batched with other freed slots)."""
+        if slot in self._free:
+            raise ValueError(f"slot {slot} already free")
+        self.pos[slot] = 0
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+
+    def reset(self, slots) -> None:
+        """Zero the cache rows of ``slots`` (one fused device call)."""
+        slots = list(slots)
+        if not slots:
+            return
+        mask = np.zeros((self.n_slots,), bool)
+        mask[slots] = True
+        self.cache = self._reset(self.cache, jnp.asarray(mask))
+

@@ -1,0 +1,258 @@
+"""The continuous-batching engine: slot-scheduled greedy serving.
+
+One engine iteration (:meth:`ContinuousBatchingEngine.step`):
+
+1. **admission** — freed slots are handed to arrived waiting requests
+   (FIFO); each new occupant's cache rows are zeroed and, for encdec
+   families, its encoder output is written into the slot's row.
+2. **planning** — the :class:`~repro.serve.scheduler.Scheduler` packs
+   decode tokens (1 per running slot) and chunked-prefill tokens under
+   the token budget.
+3. **one jitted mixed step** — :func:`repro.launch.steps.make_slot_step`
+   runs prefill chunks and decode tokens together; per-slot cache
+   positions mean no slot waits for another.
+4. **completion** — slots that consumed their last prompt token emit
+   their first generated token; slots that hit ``max_new_tokens`` finish
+   and release their slot for the next waiting request.
+
+Requests therefore join and leave the batch mid-flight: throughput is
+bounded by slot capacity, not by the slowest request of a static batch.
+Greedy outputs are identical per request to lock-step decode of the same
+prompt (`repro.serve.lockstep` is the reference; `tests/test_serve.py`
+pins the parity across all model families).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch import steps as steps_lib
+from repro.models import model as lm
+from repro.serve import request as rq
+from repro.serve.cache import SlotCacheManager
+from repro.serve.scheduler import Scheduler, ServeConfig
+
+
+class ContinuousBatchingEngine:
+    """Slot-based request scheduler over one model replica.
+
+    Args:
+      cfg: model config.
+      params: model params (already sharded when serving under a mesh).
+      serve_cfg: slot/chunk/budget configuration.
+      cache_dtype: decode-cache dtype (fp32 default, matching the
+        lock-step driver).
+      mesh: optional data×model mesh; the cache is placed with the
+        production ``cache_shardings`` rules. Callers run the engine
+        inside ``jax.set_mesh(mesh)``.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        serve_cfg: ServeConfig,
+        *,
+        cache_dtype=jnp.float32,
+        mesh=None,
+        seq_shard: bool = False,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.serve_cfg = serve_cfg
+        self.slots = SlotCacheManager(
+            cfg, serve_cfg.max_slots, serve_cfg.max_seq,
+            dtype=cache_dtype, mesh=mesh, seq_shard=seq_shard,
+        )
+        self.scheduler = Scheduler(serve_cfg)
+        self._step_fn = jax.jit(steps_lib.make_slot_step(cfg))
+        self.waiting: List[rq.Request] = []
+        self.by_slot: Dict[int, rq.Request] = {}
+        self.finished: Dict[int, rq.Request] = {}
+        self.clock = 0
+        # stats
+        self.compute_steps = 0
+        self.idle_steps = 0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+        self.step_times: List[float] = []
+        self._occupancy_sum = 0
+        self.enc_out = None
+        self._encode = None
+        if cfg.family == "encdec":
+            self.enc_out = jnp.zeros(
+                (serve_cfg.max_slots, cfg.enc_seq, cfg.d_model),
+                jnp.dtype(cfg.dtype),
+            )
+            self._encode = jax.jit(
+                lambda p, f: lm.encode(cfg, p, f.astype(jnp.dtype(cfg.dtype)))
+            )
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+
+    def submit(self, req: rq.Request) -> None:
+        need = req.prompt_len + req.max_new_tokens - 1  # last token not cached
+        if need > self.serve_cfg.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt+generation ({need}) exceeds "
+                f"max_seq {self.serve_cfg.max_seq}"
+            )
+        if self.cfg.family == "encdec" and req.frames is None:
+            raise ValueError(f"request {req.rid}: encdec family needs frames")
+        req.state = rq.WAITING
+        self.waiting.append(req)
+        self.waiting.sort(key=lambda r: (r.arrival, r.rid))
+
+    def _admit(self) -> None:
+        admitted = self.scheduler.admit(self.waiting, self.slots.n_free, self.clock)
+        if not admitted:
+            return
+        new_slots = []
+        for req in admitted:
+            self.waiting.remove(req)
+            slot = self.slots.alloc()
+            req.slot = slot
+            req.state = rq.PREFILL
+            self.by_slot[slot] = req
+            new_slots.append(slot)
+            if self._encode is not None:
+                enc = self._encode(self.params, jnp.asarray(req.frames)[None])
+                self.enc_out = self.enc_out.at[slot].set(enc[0])
+        self.slots.reset(new_slots)  # clear the previous occupants' state
+
+    # ------------------------------------------------------------------
+    # one engine iteration
+    # ------------------------------------------------------------------
+
+    def step(self) -> bool:
+        """Run one engine tick. Returns True when compute happened."""
+        self._admit()
+        plan = self.scheduler.plan(self.by_slot)
+        if not plan:
+            self.clock += 1
+            self.idle_steps += 1
+            return False
+
+        b = self.serve_cfg.max_slots
+        width = 1 if max(plan.values()) <= 1 else self.serve_cfg.prefill_chunk
+        tokens = np.zeros((b, width), np.int32)
+        count = np.zeros((b,), np.int32)
+        n_prefill = 0
+        for slot, n in plan.items():
+            req = self.by_slot[slot]
+            if req.remaining_prompt > 0:
+                seg = req.prompt[req.prefilled : req.prefilled + n]
+                tokens[slot, : len(seg)] = seg
+                count[slot] = len(seg)
+                n_prefill += len(seg)
+            else:
+                tokens[slot, 0] = req.generated[-1]
+                count[slot] = 1
+
+        state = {
+            "tokens": jnp.asarray(tokens),
+            "count": jnp.asarray(count),
+            "pos": jnp.asarray(self.slots.pos),
+            "cache": self.slots.cache,
+        }
+        if self.enc_out is not None:
+            state["enc_out"] = self.enc_out
+        t0 = time.perf_counter()
+        nxt, new_state = self._step_fn(self.params, state)
+        nxt = np.asarray(nxt)
+        dt = time.perf_counter() - t0
+        self.slots.cache = new_state["cache"]
+        self.slots.pos = self.slots.pos + count
+
+        done_slots = []
+        for slot, n in sorted(plan.items()):
+            req = self.by_slot[slot]
+            emitted = None
+            if req.state == rq.PREFILL:
+                req.prefilled += int(count[slot])
+                if req.remaining_prompt == 0:
+                    req.state = rq.DECODE
+                    req.first_token_step = self.clock
+                    emitted = int(nxt[slot])
+            else:
+                emitted = int(nxt[slot])
+            if emitted is not None:
+                req.generated.append(emitted)
+                req.token_steps.append(self.clock)
+                req.token_latencies.append(dt)
+                if req.done:
+                    req.state = rq.FINISHED
+                    req.finish_step = self.clock
+                    self.finished[req.rid] = req
+                    done_slots.append(slot)
+        for slot in done_slots:
+            del self.by_slot[slot]
+            self.slots.free(slot)
+
+        self.compute_steps += 1
+        self.step_times.append(dt)
+        n_total = int(count.sum())
+        self.prefill_tokens += n_prefill
+        self.decode_tokens += n_total - n_prefill
+        # mixed steps: apportion wall time by token share so the
+        # prefill/decode split stays comparable to the lock-step baseline
+        frac = n_prefill / max(n_total, 1)
+        self.prefill_s += dt * frac
+        self.decode_s += dt * (1.0 - frac)
+        self._occupancy_sum += len(plan)
+        self.clock += 1
+        return True
+
+    def run(self, max_ticks: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """Drive to completion (incl. future arrivals). rid -> tokens."""
+        ticks = 0
+        while self.waiting or self.by_slot:
+            self.step()
+            ticks += 1
+            if max_ticks is not None and ticks >= max_ticks:
+                break
+        return {rid: r.tokens() for rid, r in sorted(self.finished.items())}
+
+    # ------------------------------------------------------------------
+    # stats
+    # ------------------------------------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        total_tokens = self.prefill_tokens + self.decode_tokens
+        steps = max(self.compute_steps, 1)
+        gen = sum(len(r.generated) for r in self.finished.values())
+        lat = sorted(
+            t for r in self.finished.values() for t in r.token_latencies
+        )
+
+        def pct(p):
+            if not lat:
+                return 0.0
+            return lat[min(len(lat) - 1, int(p / 100.0 * len(lat)))]
+
+        wall = sum(self.step_times)
+        return {
+            "compute_steps": self.compute_steps,
+            "idle_steps": self.idle_steps,
+            "total_tokens": total_tokens,
+            "generated_tokens": gen,
+            "tokens_per_step": total_tokens / steps,
+            "generated_per_step": gen / steps,
+            "slot_utilization": self._occupancy_sum
+            / (steps * self.serve_cfg.max_slots),
+            "wall_s": wall,
+            "prefill_s": self.prefill_s,
+            "decode_s": self.decode_s,
+            "tokens_per_s": total_tokens / max(wall, 1e-9),
+            "p50_token_latency_s": pct(50),
+            "p99_token_latency_s": pct(99),
+        }

@@ -1,0 +1,119 @@
+"""The static lock-step baseline (and parity reference).
+
+This is the serving loop `repro.launch.serve` used to hard-code: all
+requests arrive together, prefill is teacher-forced token-by-token, and
+the whole batch decodes in lock-step until the *longest* generation
+finishes — finished requests burn decode slots as padding. It survives
+as (a) the reference the continuous engine must match token-for-token,
+and (b) the baseline `benchmarks/serve_latency.py` beats.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch import steps as steps_lib
+from repro.models import model as lm
+
+
+def generate_lockstep(
+    cfg: ModelConfig,
+    params,
+    prompts: np.ndarray,  # [B, P] int32 (uniform prompt length)
+    gen_lens: Sequence[int],  # per-request generation lengths
+    *,
+    max_seq: int,
+    frames: Optional[np.ndarray] = None,  # [B, enc_seq, d_model] (encdec)
+    cache_dtype=jnp.float32,
+) -> Dict[str, object]:
+    """Greedy lock-step decode of one static batch.
+
+    Returns dict with ``tokens`` (list of per-request arrays, sliced to
+    each request's gen_len), ``steps`` (model invocations: P-1 teacher
+    steps + max(gen_lens) decode steps), and wall-time splits.
+    """
+    prompts = np.asarray(prompts, np.int32)
+    b, p = prompts.shape
+    gen_lens = [int(g) for g in gen_lens]
+    assert len(gen_lens) == b and min(gen_lens) >= 1
+    max_gen = max(gen_lens)
+    if p + max_gen - 1 > max_seq:
+        raise ValueError(f"prompt+generation ({p + max_gen - 1}) exceeds max_seq {max_seq}")
+
+    serve_step = jax.jit(steps_lib.make_serve_step(cfg))
+    cache = lm.init_cache(cfg, b, max_seq, dtype=cache_dtype)
+    state = {
+        "tokens": jnp.asarray(prompts[:, :1]),
+        "pos": jnp.int32(0),
+        "cache": cache,
+    }
+    if cfg.family == "encdec":
+        if frames is None:
+            raise ValueError("encdec lock-step needs frames")
+        state["enc_out"] = lm.encode(
+            cfg, params, jnp.asarray(frames).astype(jnp.dtype(cfg.dtype))
+        )
+
+    t0 = time.perf_counter()
+    for t in range(1, p):
+        state = serve_step(params, state)
+        state["tokens"] = jnp.asarray(prompts[:, t : t + 1])  # teacher-forced
+    jax.block_until_ready(state["cache"])
+    prefill_s = time.perf_counter() - t0
+
+    generated = []
+    t0 = time.perf_counter()
+    for _ in range(max_gen):
+        state = serve_step(params, state)
+        generated.append(np.asarray(state["tokens"])[:, 0])
+    decode_s = time.perf_counter() - t0
+
+    gen = np.stack(generated, axis=1)  # [B, max_gen]
+    tokens = [gen[i, : gen_lens[i]] for i in range(b)]
+    return {
+        "tokens": tokens,
+        "steps": (p - 1) + max_gen,
+        "prefill_s": prefill_s,
+        "decode_s": decode_s,
+        "generated_tokens": int(sum(gen_lens)),
+    }
+
+
+def generate_reference(
+    cfg: ModelConfig,
+    params,
+    prompt: np.ndarray,  # [P] int32
+    gen_len: int,
+    *,
+    max_seq: int,
+    frames: Optional[np.ndarray] = None,  # [enc_seq, d_model]
+    cache_dtype=jnp.float32,
+) -> np.ndarray:
+    """Single-request lock-step greedy decode — the per-request oracle
+    the continuous engine must reproduce token-for-token."""
+    out = generate_lockstep(
+        cfg,
+        params,
+        np.asarray(prompt, np.int32)[None],
+        [gen_len],
+        max_seq=max_seq,
+        frames=None if frames is None else np.asarray(frames)[None],
+        cache_dtype=cache_dtype,
+    )
+    return out["tokens"][0]
+
+
+def lockstep_waves(
+    requests,
+    capacity: int,
+) -> List[List]:
+    """Split a request list into static batches ("waves") of ``capacity``
+    in arrival order — how a lock-step server has to run a staggered
+    workload. Used by the latency benchmark for the steps comparison."""
+    reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    return [reqs[i : i + capacity] for i in range(0, len(reqs), capacity)]

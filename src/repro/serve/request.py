@@ -1,0 +1,76 @@
+"""Request lifecycle for the continuous-batching engine.
+
+A request moves through::
+
+    WAITING --admit--> PREFILL --last prompt token--> DECODE --max_new--> FINISHED
+    (arrival queue)    (chunked)                      (1 tok/step)       (slot freed)
+
+The engine owns the transitions; this module just holds the record and
+its bookkeeping (slot assignment, prefill progress, generated tokens,
+and per-token step/latency traces for the latency benchmark).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+WAITING = "waiting"
+PREFILL = "prefill"
+DECODE = "decode"
+FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request.
+
+    Args:
+      rid: unique id.
+      prompt: ``[P]`` int32 token ids (P >= 1).
+      max_new_tokens: generation budget (>= 1); greedy decode stops there.
+      arrival: engine tick at which the request becomes visible to
+        admission (staggered/Poisson workloads).
+      frames: optional ``[enc_seq, d_model]`` encoder input (encdec
+        families); encoded once at admission.
+    """
+
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival: int = 0
+    frames: Optional[np.ndarray] = None
+
+    # --- engine-owned lifecycle state ---
+    state: str = WAITING
+    slot: int = -1
+    prefilled: int = 0  # prompt tokens already fed to the model
+    generated: List[int] = dataclasses.field(default_factory=list)
+    # traces (engine ticks / seconds) for latency accounting
+    first_token_step: int = -1
+    finish_step: int = -1
+    token_steps: List[int] = dataclasses.field(default_factory=list)
+    token_latencies: List[float] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size < 1:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens must be >= 1")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.size)
+
+    @property
+    def remaining_prompt(self) -> int:
+        return self.prompt_len - self.prefilled
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+    def tokens(self) -> np.ndarray:
+        return np.asarray(self.generated, np.int32)

@@ -1,0 +1,109 @@
+"""Token-budget scheduler: interleave chunked prefill with decode.
+
+Each engine step the scheduler packs work into the batch under a token
+budget (the compute envelope of one step):
+
+* every decoding slot gets 1 token — decode latency is the product, so
+  running requests are never starved by arrivals;
+* the remaining budget goes to prefilling slots (oldest arrival first)
+  in chunks of up to ``prefill_chunk`` prompt tokens.
+
+Admission is FIFO by (arrival, rid): a waiting request joins whenever a
+slot is free and its arrival tick has passed. The plan is pure host
+logic over per-slot request state — the jitted step consumes only the
+resulting (tokens, count, pos) arrays, which is why one compiled step
+serves any occupancy the scheduler produces.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.serve.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Engine/scheduler configuration.
+
+    Attributes:
+      max_slots: batch capacity B — concurrent requests in flight.
+      max_seq: cache rows per slot (prompt + generation must fit).
+      prefill_chunk: max prompt tokens one slot absorbs per step (the
+        chunked-prefill width; also the compiled mixed-step width C).
+      token_budget: max total tokens processed per engine step;
+        0 means ``max_slots + prefill_chunk`` (all decodes plus one
+        full prefill chunk).
+    """
+
+    max_slots: int
+    max_seq: int
+    prefill_chunk: int = 8
+    token_budget: int = 0
+
+    def __post_init__(self):
+        if self.max_slots < 1:
+            raise ValueError("max_slots must be >= 1")
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        if self.token_budget < 0:
+            raise ValueError("token_budget must be >= 0 (0 = default)")
+
+    @property
+    def budget(self) -> int:
+        return self.token_budget or (self.max_slots + self.prefill_chunk)
+
+
+class Scheduler:
+    """Pure planning: no device state, unit-testable in isolation."""
+
+    def __init__(self, cfg: ServeConfig):
+        self.cfg = cfg
+        self._rr = 0  # round-robin offset for budget-limited decode
+
+    def admit(self, waiting: List[Request], n_free: int, clock: int) -> List[Request]:
+        """FIFO admission: arrived requests, up to the free-slot count.
+
+        ``waiting`` must be sorted by (arrival, rid); returns the prefix
+        to admit (the caller assigns slots and removes them from the
+        queue).
+        """
+        out = []
+        for req in waiting:
+            if len(out) >= n_free or req.arrival > clock:
+                break
+            out.append(req)
+        return out
+
+    def plan(self, by_slot: Dict[int, Request]) -> Dict[int, int]:
+        """Token counts per slot for one step, under the budget.
+
+        Decode slots first (1 token each, round-robin so a budget
+        smaller than the decode count rotates fairly instead of
+        starving high slot ids), then prefill chunks by arrival order.
+        Slots that don't fit this step's budget are left out (count 0)
+        and move to the front of the rotation next tick.
+        """
+        budget = self.cfg.budget
+        plan: Dict[int, int] = {}
+        decoding = [s for s in sorted(by_slot) if by_slot[s].remaining_prompt == 0]
+        if decoding:
+            off = self._rr % len(decoding)
+            decoding = decoding[off:] + decoding[:off]
+            self._rr += max(1, min(self.cfg.budget, len(decoding)))
+        prefilling = sorted(
+            (s for s in by_slot if by_slot[s].remaining_prompt > 0),
+            key=lambda s: (by_slot[s].arrival, by_slot[s].rid),
+        )
+        for s in decoding:
+            if budget < 1:
+                break
+            plan[s] = 1
+            budget -= 1
+        for s in prefilling:
+            if budget < 1:
+                break
+            n = min(self.cfg.prefill_chunk, by_slot[s].remaining_prompt, budget)
+            plan[s] = n
+            budget -= n
+        return plan

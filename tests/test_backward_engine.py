@@ -246,3 +246,74 @@ class TestRaggedTailRegression:
         np.testing.assert_array_equal(
             np.asarray(out), np.array([[0.0, 1.0, 0.0, 0.0]])
         )
+
+
+class TestSparsifyFlags:
+    """``sparsify_dx`` / ``sparsify_dw`` select WHICH gradient shrinks.
+
+    The un-sparsified side must reproduce the dense gradient *exactly*
+    (same full-size contraction, not an approximation), in both gather
+    and mask mode, for dense and conv ops.
+    """
+
+    DENSE = SsPropPolicy(0.0)
+
+    @pytest.mark.parametrize("granularity", ["channel", "block"])
+    @pytest.mark.parametrize("mask", [False, True])
+    def test_dense_dx_off_is_exactly_dense(self, granularity, mask):
+        pol = _pol(granularity, "", mask=mask, sparsify_dx=False)
+        dx, dw, _ = _dense_grads(pol)
+        dx_ref, dw_ref, _ = _dense_grads(self.DENSE)
+        np.testing.assert_array_equal(np.asarray(dx), np.asarray(dx_ref))
+        # dw still sparsified: dropped channels are exact zeros
+        assert (np.asarray(dw) == 0).all(0).sum() > (np.asarray(dw_ref) == 0).all(0).sum()
+
+    @pytest.mark.parametrize("granularity", ["channel", "block"])
+    @pytest.mark.parametrize("mask", [False, True])
+    def test_dense_dw_off_is_exactly_dense(self, granularity, mask):
+        pol = _pol(granularity, "", mask=mask, sparsify_dw=False)
+        _, dw, db = _dense_grads(pol)
+        _, dw_ref, db_ref = _dense_grads(self.DENSE)
+        np.testing.assert_array_equal(np.asarray(dw), np.asarray(dw_ref))
+        np.testing.assert_array_equal(np.asarray(db), np.asarray(db_ref))
+
+    @pytest.mark.parametrize("mask", [False, True])
+    def test_conv_dx_off_is_exactly_dense(self, mask):
+        pol = _pol("channel", "", mask=mask, sparsify_dx=False)
+        dx, dw, _ = _conv_grads(pol, 1, 1, 1, 1)
+        dx_ref, dw_ref, _ = _conv_grads(self.DENSE, 1, 1, 1, 1)
+        np.testing.assert_array_equal(np.asarray(dx), np.asarray(dx_ref))
+        assert (np.abs(np.asarray(dw)).sum((1, 2, 3)) == 0).sum() > 0
+
+    def test_both_off_is_dense_path(self):
+        pol = _pol("channel", "", sparsify_dx=False, sparsify_dw=False)
+        for a, r in zip(_dense_grads(pol), _dense_grads(self.DENSE)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
+
+    def test_pallas_block_respects_flags(self):
+        pol = _pol("block", "", sparsify_dx=False, use_pallas=True)
+        dx, dw, _ = _dense_grads(pol)
+        dx_ref, _, _ = _dense_grads(self.DENSE)
+        np.testing.assert_allclose(
+            np.asarray(dx), np.asarray(dx_ref), rtol=1e-5, atol=1e-6
+        )
+        assert (np.asarray(dw) == 0).all(0).sum() > 0
+
+    def test_flops_flags_monotone(self):
+        from repro.core import flops
+
+        base = SsPropPolicy(0.8)
+        both = flops.dense_backward_flops_policy(128, 256, 512, base)
+        dx_only = flops.dense_backward_flops_policy(
+            128, 256, 512, dataclasses.replace(base, sparsify_dw=False)
+        )
+        off = flops.dense_backward_flops_policy(
+            128, 256, 512, dataclasses.replace(base, sparsify_dx=False, sparsify_dw=False)
+        )
+        dense = flops.dense_backward_flops(128, 256, 512)
+        assert both < dx_only < off == dense
+        cb = flops.conv_backward_flops_policy(8, 16, 16, 64, 128, 3, base)
+        cd = flops.conv_backward_flops_policy(
+            8, 16, 16, 64, 128, 3, dataclasses.replace(base, sparsify_dx=False)
+        )
+        assert cb < cd < flops.conv_backward_flops(8, 16, 16, 64, 128, 3)
