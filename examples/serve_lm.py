@@ -4,7 +4,9 @@ Drives the slot-based engine for any --arch (reduced configs on CPU,
 all families incl. the SSM/hybrid O(1)-state decoders and the Whisper
 encoder-decoder): requests arrive staggered, join the batch as slots
 free up, prefill in chunks interleaved with running decodes, and leave
-on completion. Compare with the static baseline via --engine lockstep.
+on completion. Compare with the static baseline via --engine lockstep,
+or run the paged KV cache via --engine paged --block-size 8 (add
+--n-blocks to shrink the pool below worst case and watch preemptions).
 
 Run:  PYTHONPATH=src python examples/serve_lm.py --arch jamba-1.5-large-398b
 """

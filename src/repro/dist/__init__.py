@@ -24,6 +24,10 @@ Sharding rule table (tensor → mesh axis placement):
   batch inputs                 [B, ...]                    (dp, -, ...)
   KV cache k/v                 [np, B, T, KV, hd]          (-, dp, -, "model", -)
     (seq_shard=True moves "model" to the T dim for long decode)
+  paged KV pool k/v            [np, NB, bs, KV, hd]        (-, -, -, "model", -)
+    (paged=True: page axis replicated — block tables index the
+     pool globally, so dp-sharding pages would make every gather
+     a collective; block tables themselves are replicated)
   ===========================  ==========================  ============
 
 ``dp`` is the data-parallel axis group — ``("pod", "data")`` on the

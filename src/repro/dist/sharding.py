@@ -171,7 +171,9 @@ def batch_shardings(mesh, batch: Any) -> Any:
     return jax.tree.map(one, batch)
 
 
-def cache_shardings(mesh, a_cache: Any, *, seq_shard: bool = False) -> Any:
+def cache_shardings(
+    mesh, a_cache: Any, *, seq_shard: bool = False, paged: bool = False
+) -> Any:
     """Decode caches: batch over dp; kv-heads (or seq) over model.
 
     Cache leaves are period-stacked ``[np, B, ...]``. Attention k/v
@@ -180,17 +182,29 @@ def cache_shardings(mesh, a_cache: Any, *, seq_shard: bool = False) -> Any:
     softmax over a seq-sharded cache, §Perf iteration 3). SSM states
     ``[np, B, H, N, P]`` shard the head dim; conv buffers shard their
     channel dim.
+
+    ``paged=True`` declares the paged layout
+    (:func:`repro.models.model.init_paged_cache`): attention k/v leaves
+    are a page pool ``[np, n_blocks, bs, KV, hd]`` whose page axis is
+    **replicated** — block tables index the pool globally, so sharding
+    pages over ``data`` would turn every table gather into a
+    cross-replica collective. ``model`` stays on the kv-head dim
+    (``seq_shard`` moves it to the within-page dim, which only helps
+    when ``block_size`` spans the model axis — rarely what you want; the
+    kv-head default is right for paged serving). SSM/conv leaves are
+    still slot-major and shard exactly as the contiguous layout.
     """
     baxis = _batch_axis(mesh)
 
     def one(path, a):
         ndim = getattr(a, "ndim", 0)
         entries = [None] * ndim
-        if ndim >= 2:
-            entries[1] = baxis
         keys = [str(k.key) for k in path if hasattr(k, "key")]
         name = keys[-1] if keys else ""
-        if name in ("k", "v") and ndim >= 5:
+        kv_leaf = name in ("k", "v") and ndim >= 5
+        if ndim >= 2 and not (paged and kv_leaf):
+            entries[1] = baxis
+        if kv_leaf:
             entries[2 if seq_shard else 3] = "model"
         elif name == "state" and ndim >= 3:
             entries[2] = "model"
@@ -199,3 +213,9 @@ def cache_shardings(mesh, a_cache: Any, *, seq_shard: bool = False) -> Any:
         return NamedSharding(mesh, fit_spec(P(*entries), a.shape, mesh))
 
     return jax.tree_util.tree_map_with_path(one, a_cache)
+
+
+def block_table_sharding(mesh) -> NamedSharding:
+    """Block tables are small int32 host state — replicated everywhere
+    (every shard of the pool needs the full logical→physical map)."""
+    return replicated(mesh)

@@ -2,10 +2,12 @@
 
 The serving loop itself lives in :mod:`repro.serve`: a slot-based
 request scheduler with chunked prefill (requests join and leave the
-batch mid-flight). ``--engine lockstep`` runs the static lock-step
-baseline instead (every request arrives together, the whole batch stalls
-until the longest generation finishes) — kept for A/B comparison and as
-the parity reference.
+batch mid-flight). ``--engine paged`` switches the KV cache to the
+paged/block layout (``--block-size`` tokens per page, ``--n-blocks``
+pool size — 0 sizes the pool to contiguous parity); ``--engine
+lockstep`` runs the static lock-step baseline instead (every request
+arrives together, the whole batch stalls until the longest generation
+finishes) — kept for A/B comparison and as the parity oracle.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
       --reduced --batch 4 --prompt-len 16 --gen 32 --arrival-rate 0.5
@@ -42,8 +44,12 @@ def build_parser():
                     help="Poisson arrivals per engine tick (0 = all at t=0)")
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--token-budget", type=int, default=0)
-    ap.add_argument("--engine", choices=("continuous", "lockstep"),
+    ap.add_argument("--engine", choices=("paged", "continuous", "lockstep"),
                     default="continuous")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV page (paged engine)")
+    ap.add_argument("--n-blocks", type=int, default=0,
+                    help="page-pool size (0 = contiguous-parity pool)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
@@ -104,6 +110,7 @@ def run(args) -> dict:
                 "slot_utilization": 1.0,
             }
 
+        paged = args.engine == "paged"
         engine = ContinuousBatchingEngine(
             cfg,
             params,
@@ -112,6 +119,8 @@ def run(args) -> dict:
                 max_seq=max_seq,
                 prefill_chunk=args.prefill_chunk,
                 token_budget=args.token_budget,
+                block_size=args.block_size if paged else 0,
+                n_blocks=args.n_blocks if paged else 0,
             ),
             mesh=mesh,
         )
@@ -130,6 +139,8 @@ def run(args) -> dict:
         / max(stats["prefill_s"] + stats["decode_s"], 1e-9),
         "tokens_per_step": stats["tokens_per_step"],
         "slot_utilization": stats["slot_utilization"],
+        "peak_concurrency": stats["peak_concurrency"],
+        "preemptions": stats["preemptions"],
     }
 
 
@@ -141,6 +152,9 @@ def main():
     print(f"[serve] prefill {out['prefill_s']*1e3:.0f} ms, decode {out['decode_s']*1e3:.0f} ms"
           f" ({out['tokens_per_s']:.1f} tok/s, "
           f"slot util {out['slot_utilization']*100:.0f}%)")
+    if "preemptions" in out:
+        print(f"[serve] peak concurrency {out['peak_concurrency']}, "
+              f"preemptions {out['preemptions']}")
     print("[serve] first request tokens:", out["generated"][0][:16].tolist())
 
 

@@ -129,11 +129,15 @@ def make_slot_step(cfg: ModelConfig) -> Callable:
 
     state = {"tokens": [B,C] int32, "count": [B] int32 (real tokens per
     slot; 0 = idle), "pos": [B] int32 (per-slot cache offsets),
-    "cache": pytree, optional "enc_out": [B, enc_seq, d]}.
+    "cache": pytree, optional "enc_out": [B, enc_seq, d], optional
+    "block_tables": [B, NB] int32 (paged cache: logical block ->
+    physical page per slot)}.
 
     One compiled step serves any slot occupancy: which slots decode,
     which prefill a chunk and which sit idle is *data* (count/pos), not
-    shape — the engine only recompiles per chunk width C. Returns
+    shape — and with the paged cache the page assignment is data too
+    (block tables ride in the state dict), so one executable per chunk
+    width serves any batch composition *and* any page layout. Returns
     ``(next_tokens [B] int32 greedy, new_state)`` with the cache written
     and ``pos`` advanced by ``count``; rows with count==0 return garbage
     tokens the scheduler ignores.
@@ -143,6 +147,7 @@ def make_slot_step(cfg: ModelConfig) -> Callable:
         logits, new_cache = lm.decode_slots(
             cfg, params, state["tokens"], state["cache"],
             state["pos"], state["count"], enc_out=state.get("enc_out"),
+            block_tables=state.get("block_tables"),
         )
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         new_state = dict(

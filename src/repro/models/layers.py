@@ -237,6 +237,7 @@ def attn_apply(
     kv_cache=None,
     cache_pos=None,
     token_valid=None,
+    block_tables=None,
     x_kv=None,
     use_rope=True,
 ):
@@ -250,6 +251,17 @@ def attn_apply(
     position, a vectorized scatter). ``token_valid [B,S]`` masks which
     tokens are real per slot; invalid tokens' k/v are dropped instead of
     written (their query outputs are garbage the caller never reads).
+
+    ``block_tables [B, NB]`` switches the cache to the *paged* layout:
+    ``kv_cache`` leaves are a page pool ``[n_pages, bs, KV, D]`` shared
+    by all slots, and slot b's token at absolute position p lives in
+    page ``block_tables[b, p // bs]`` at offset ``p % bs``. Writes
+    become page-indexed scatters (invalid tokens routed to page index
+    ``n_pages`` and dropped); attention gathers K/V back through the
+    table into the same ``[B, NB*bs, KV, D]`` view the contiguous path
+    uses. Unassigned table entries are 0 — a valid page whose contents
+    sit at masked (future) positions, so per-slot causality fences them
+    exactly like stale rows in the contiguous layout.
     Returns (out [B,S,d], new_cache or None).
     """
     b, s, _ = x.shape
@@ -271,7 +283,25 @@ def attn_apply(
     q_offset = 0
     kv_len = None
     qpos = None
-    if kv_cache is not None:
+    if kv_cache is not None and block_tables is not None:
+        # Paged cache: pool leaves [n_pages, bs, KV, D], no batch dim.
+        n_pages, bs_pg = kv_cache["k"].shape[:2]
+        nb = block_tables.shape[1]
+        logical = cache_pos[:, None] + jnp.arange(s)[None, :]  # [B,S]
+        blk = jnp.clip(logical // bs_pg, 0, nb - 1)
+        off = logical % bs_pg
+        page = jnp.take_along_axis(block_tables, blk, axis=1)  # [B,S]
+        if token_valid is not None:
+            page = jnp.where(token_valid, page, n_pages)  # OOB -> dropped
+        ck = kv_cache["k"].at[page, off].set(k, mode="drop")
+        cv = kv_cache["v"].at[page, off].set(v, mode="drop")
+        new_cache = {"k": ck, "v": cv}
+        qpos = positions if positions.ndim == 2 else logical
+        # Gather each slot's pages into the [B, NB*bs, KV, D] view the
+        # masked attention consumes (T = NB*bs = max_seq rounded up).
+        k = ck[block_tables].reshape(b, nb * bs_pg, *ck.shape[2:])
+        v = cv[block_tables].reshape(b, nb * bs_pg, *cv.shape[2:])
+    elif kv_cache is not None:
         t = kv_cache["k"].shape[1]
         if per_slot:
             # Vectorized per-slot write: row b's token c lands at

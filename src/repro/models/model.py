@@ -110,6 +110,32 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None):
     return transformer.stack_cache_init(cfg, batch, max_seq, dt)
 
 
+def init_paged_cache(
+    cfg: ModelConfig, batch: int, n_blocks: int, block_size: int, dtype=None
+):
+    """Paged decode cache: K/V in a global page pool, SSM state per slot.
+
+    Attention leaves are ``[np, n_blocks, block_size, KV, hd]`` — page
+    id *p* addresses the same pool index at every layer, so one block
+    table serves the whole stack. SSM conv/state leaves stay batch-major
+    ``[np, batch, ...]`` (they are O(1) per slot — nothing to page).
+    """
+    dt = dtype or jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        def one(k):
+            del k
+            return {
+                "k": jnp.zeros((n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim), dt),
+                "v": jnp.zeros((n_blocks, block_size, cfg.n_kv_heads, cfg.head_dim), dt),
+            }
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape), one(None)
+        )
+    return transformer.stack_cache_init(
+        cfg, batch, block_size, dt, n_pages=n_blocks
+    )
+
+
 def decode_slots(
     cfg: ModelConfig,
     params,
@@ -119,6 +145,7 @@ def decode_slots(
     token_count: jax.Array,  # [B] int32: real tokens per slot (0 = idle slot)
     *,
     enc_out: Optional[jax.Array] = None,
+    block_tables: Optional[jax.Array] = None,  # [B, NB] int32 (paged cache)
     policy: SsPropPolicy = SsPropPolicy(),
 ):
     """Mixed prefill/decode step over independently positioned slots.
@@ -130,6 +157,13 @@ def decode_slots(
     ``slot_pos[b] + c`` (invalid tokens dropped); SSM states freeze on
     invalid tokens; attention is causally masked per slot, which also
     fences any stale cache a previous occupant of the slot left behind.
+
+    With ``block_tables`` the cache is the *paged* layout
+    (:func:`init_paged_cache`): slot *b*'s token at logical position
+    ``p`` lives in page ``block_tables[b, p // block_size]`` at offset
+    ``p % block_size``; KV scatters become page-indexed and attention
+    gathers K/V through the table. Block tables are data, not shape —
+    the same compiled step serves any page assignment.
 
     Returns ``(logits [B, V] at each slot's last real token, new_cache)``.
     Rows with ``token_count == 0`` carry garbage logits the caller must
@@ -143,13 +177,13 @@ def decode_slots(
         x, new_cache = transformer.cross_decoder_apply(
             params["decoder"], x, enc_out, cfg, policy,
             positions=positions, caches=cache, cache_pos=slot_pos,
-            token_valid=valid,
+            token_valid=valid, block_tables=block_tables,
         )
     else:
         x, new_cache, _ = transformer.stack_apply(
             params["stack"], x, cfg, policy,
             positions=positions, caches=cache, cache_pos=slot_pos,
-            token_valid=valid,
+            token_valid=valid, block_tables=block_tables,
         )
     x = layers.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
     last = jnp.clip(token_count - 1, 0, c - 1)
@@ -173,6 +207,24 @@ def reset_slots(cache, free_mask: jax.Array):
         return jnp.where(m, jnp.zeros((), a.dtype), a)
 
     return jax.tree.map(one, cache)
+
+
+def reset_paged(cache, slot_mask: jax.Array, page_mask: jax.Array):
+    """Zero freed state in a paged cache (:func:`init_paged_cache`).
+
+    K/V leaves (``[np, n_blocks, bs, KV, hd]``) are zeroed by
+    ``page_mask [n_blocks]`` on the page axis; everything else (SSM
+    conv/state, ``[np, B, ...]``) by ``slot_mask [B]`` on the slot axis.
+    One fused device call — the paged analogue of :func:`reset_slots`.
+    """
+
+    def one(path, a):
+        keys = [str(k.key) for k in path if hasattr(k, "key")]
+        mask = page_mask if (keys and keys[-1] in ("k", "v")) else slot_mask
+        m = mask.reshape((1, -1) + (1,) * (a.ndim - 2))
+        return jnp.where(m, jnp.zeros((), a.dtype), a)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
 
 
 def decode_step(

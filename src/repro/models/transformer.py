@@ -100,6 +100,7 @@ def _slot_apply(
     cache=None,
     cache_pos=None,
     token_valid=None,
+    block_tables=None,
 ):
     h = layers.rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
     new_cache = None
@@ -114,6 +115,7 @@ def _slot_apply(
             kv_cache=cache,
             cache_pos=cache_pos,
             token_valid=token_valid,
+            block_tables=block_tables,
         )
     else:
         out, new_cache = ssm.ssm_apply(
@@ -152,21 +154,27 @@ def stack_init(key, cfg: ModelConfig):
     return {"slots": out}
 
 
-def _slot_cache_init(cfg, slot: Slot, batch, max_seq, dtype):
+def _slot_cache_init(cfg, slot: Slot, batch, max_seq, dtype, n_pages=None):
     if slot.mixer == "attn":
+        # contiguous: per-slot rows [B, T, KV, hd]; paged: a global page
+        # pool [n_pages, block_size, KV, hd] addressed via block tables.
+        lead = batch if n_pages is None else n_pages
         return {
-            "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
-            "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "k": jnp.zeros((lead, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((lead, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
         }
     return ssm.ssm_cache_init(cfg, batch, dtype)
 
 
-def stack_cache_init(cfg: ModelConfig, batch, max_seq, dtype=jnp.bfloat16):
+def stack_cache_init(cfg: ModelConfig, batch, max_seq, dtype=jnp.bfloat16, *, n_pages=None):
+    """Decode cache pytree. ``n_pages`` switches attention leaves to the
+    paged pool layout (``max_seq`` is then the block size); SSM leaves
+    are per-slot either way."""
     slots = period_pattern(cfg)
     np_ = n_periods(cfg)
     caches = []
     for slot in slots:
-        one = _slot_cache_init(cfg, slot, batch, max_seq, dtype)
+        one = _slot_cache_init(cfg, slot, batch, max_seq, dtype, n_pages=n_pages)
         caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (np_,) + a.shape), one))
     return tuple(caches)  # matches the tuple structure scan ys produce
 
@@ -181,6 +189,7 @@ def stack_apply(
     caches=None,
     cache_pos=None,
     token_valid=None,
+    block_tables=None,
 ):
     """Run the full stack. Returns (x, new_caches, total_aux)."""
     slots = period_pattern(cfg)
@@ -202,6 +211,7 @@ def stack_apply(
                 cache=cache_i,
                 cache_pos=cache_pos,
                 token_valid=token_valid,
+                block_tables=block_tables,
             )
             aux = aux + a
             new_slot_caches.append(nc if decode else None)
@@ -294,7 +304,7 @@ def cross_decoder_init(key, cfg: ModelConfig):
 
 def cross_decoder_apply(
     params, x, enc_out, cfg, policy, *, positions=None, caches=None, cache_pos=None,
-    token_valid=None,
+    token_valid=None, block_tables=None,
 ):
     decode = caches is not None
 
@@ -305,7 +315,7 @@ def cross_decoder_apply(
             p["self"], layers.rmsnorm_apply(p["norm1"], h, cfg.norm_eps), cfg, policy,
             causal=True, positions=positions,
             kv_cache=cache if decode else None, cache_pos=cache_pos,
-            token_valid=token_valid,
+            token_valid=token_valid, block_tables=block_tables,
         )
         h = h + a
         c, _ = layers.attn_apply(

@@ -1,21 +1,73 @@
-"""Continuous-batching serving subsystem.
+"""Continuous-batching serving subsystem: slots, pages, and the engine.
 
 Layout::
 
   request.py    request record + lifecycle states
-  cache.py      SlotCacheManager — cache rows as allocatable slots
-  scheduler.py  ServeConfig + token-budget prefill/decode packing
+  cache.py      SlotCacheManager (contiguous rows) / PagedCacheManager
+                (page pool + block tables) / BlockAllocator (free list)
+  scheduler.py  ServeConfig + token-budget prefill/decode packing,
+                free-page-gated admission
   engine.py     ContinuousBatchingEngine — the serving loop
   lockstep.py   static lock-step baseline + per-request parity oracle
-  workload.py   Poisson staggered-arrival workload generator
+  workload.py   Poisson staggered-arrival + long-tail workload generators
+
+Request lifecycle (the engine owns every transition)::
+
+  WAITING --admit--> PREFILL --last context token--> DECODE --max_new--> FINISHED
+  (arrival queue,    (chunked, up to               (1 tok/step)        (slot and
+   slot + pages       prefill_chunk/step)             |                 pages freed,
+   available)                ^                        |                 zeroed)
+                             +------- preempt --------+
+                              (paged engine, pool exhausted: pages freed
+                               + zeroed, cache recomputed on re-admission)
+
+Block-table protocol (paged cache, ``ServeConfig.block_size > 0``):
+
+  ==========================  =============================================
+  object                      meaning
+  ==========================  =============================================
+  page pool                   cache K/V leaves ``[np, n_blocks, block_size,
+                              KV, hd]`` — page id *p* addresses the same
+                              pool index at every layer
+  block table                 ``[max_slots, blocks_per_slot]`` int32; row
+                              *b*, entry *l* = physical page holding slot
+                              b's tokens ``[l*bs, (l+1)*bs)``; unassigned
+                              entries are 0 (valid page, causally fenced)
+  write                       token at absolute position p scatters to
+                              ``(table[b, p // bs], p % bs)``; invalid
+                              tokens route to page ``n_blocks`` (dropped)
+  read                        attention gathers ``pool[table[b]]`` into the
+                              same ``[B, blocks_per_slot*bs, KV, hd]`` view
+                              the contiguous path uses
+  grow                        engine calls ``ensure(slot, pos+count)``
+                              before each step; pages allocate on demand
+  exhaustion                  youngest running request preempts to WAITING
+                              (pages freed + zeroed); greedy decode makes
+                              the re-admission recompute bit-exact
+  admission gate              scheduler admits only while free pages cover
+                              the candidate's prefill context (FIFO
+                              head-of-line on shortfall)
+  zero-on-free                freed pages and freed slots' SSM/conv rows
+                              are zeroed before reuse (the SSM-state
+                              invariant extended to the KV pool)
+  ==========================  =============================================
+
+SSM/conv state is O(1) per slot and stays slot-major (``[np, B, ...]``)
+in both layouts — only attention K/V pages.
 
 The engine rides on the per-slot cache API in ``repro.models.model``
-(``decode_slots`` / ``reset_slots``) and the jitted mixed step in
-``repro.launch.steps.make_slot_step``; under a data×model mesh the cache
-uses ``repro.dist.sharding.cache_shardings``. `repro.launch.serve` is
-the CLI.
+(``decode_slots`` / ``reset_slots`` / ``reset_paged``) and the jitted
+mixed step in ``repro.launch.steps.make_slot_step``; under a data×model
+mesh the cache uses ``repro.dist.sharding.cache_shardings`` (pass
+``paged=True`` for the pool layout). `repro.launch.serve` is the CLI
+(``--engine paged|continuous|lockstep``, ``--block-size``).
 """
-from repro.serve.cache import SlotCacheManager
+from repro.serve.cache import (
+    BlockAllocator,
+    NoFreeBlocks,
+    PagedCacheManager,
+    SlotCacheManager,
+)
 from repro.serve.engine import ContinuousBatchingEngine
 from repro.serve.lockstep import (
     generate_lockstep,
@@ -24,10 +76,13 @@ from repro.serve.lockstep import (
 )
 from repro.serve.request import DECODE, FINISHED, PREFILL, WAITING, Request
 from repro.serve.scheduler import Scheduler, ServeConfig
-from repro.serve.workload import poisson_workload
+from repro.serve.workload import longtail_workload, poisson_workload
 
 __all__ = [
+    "BlockAllocator",
     "ContinuousBatchingEngine",
+    "NoFreeBlocks",
+    "PagedCacheManager",
     "SlotCacheManager",
     "Scheduler",
     "ServeConfig",
@@ -39,5 +94,6 @@ __all__ = [
     "generate_lockstep",
     "generate_reference",
     "lockstep_waves",
+    "longtail_workload",
     "poisson_workload",
 ]

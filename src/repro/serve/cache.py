@@ -1,19 +1,37 @@
-"""Slot-based cache manager: batch rows as an allocatable resource.
+"""Cache managers: batch rows (slots) and KV pages as allocatable resources.
 
-The decode cache is batch-major (``[np, B, T, ...]`` leaves), so batch
-row *b* is an independent per-request resource — a **slot** — with its
-own write position. This manager owns the cache pytree, the free-slot
-pool and the host-side per-slot positions; ``reset`` zeroes a freed
-slot's rows (mandatory for SSM/conv state, which has no position to
-mask by) in one jitted call before reuse.
+Two memory planes live here:
+
+* :class:`SlotCacheManager` — the contiguous layout: the decode cache is
+  batch-major (``[np, B, T, ...]`` leaves), so batch row *b* is an
+  independent per-request resource — a **slot** — with its own write
+  position, and every slot owns ``max_seq`` contiguous cache rows.
+  Concurrency is bounded by worst-case sequence length: ``B`` slots cost
+  ``B × max_seq`` rows even when most requests are short.
+
+* :class:`PagedCacheManager` — the paged layout: attention K/V lives in
+  a global pool of fixed-size **pages** (``[np, n_blocks, block_size,
+  KV, hd]`` leaves) handed out by a :class:`BlockAllocator`; each slot
+  maps logical block *l* to a physical page through its row of the
+  **block table** (``[B, blocks_per_slot]`` int32). Slots still exist —
+  they carry the positionless SSM/conv state and the activation batch
+  row — but KV memory is now proportional to *actual* sequence length,
+  so ``max_slots`` can exceed ``pool_tokens / max_seq``.
+
+Both managers own the cache pytree, the free lists and the host-side
+per-slot positions. Freed state is **zeroed before reuse** — mandatory
+for SSM/conv state (which has no position to mask by) and enforced for
+freed KV pages too (the property test reads freed pages back as zero).
 
 Under a data×model mesh the cache is placed with the production
-partition rules (:func:`repro.dist.sharding.cache_shardings`), so the
-engine serves sharded exactly like the lock-step driver did.
+partition rules (:func:`repro.dist.sharding.cache_shardings`); the paged
+pool passes ``paged=True`` (pages replicated over data, kv-heads over
+model — block tables index the pool globally, so sharding the page axis
+would turn every gather into a collective).
 """
 from __future__ import annotations
 
-from typing import List
+from typing import Iterable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +42,17 @@ from repro.models import model as lm
 
 
 class SlotCacheManager:
-    """Allocate/free cache rows per request with independent positions."""
+    """Allocate/free contiguous cache rows per request.
+
+    Args:
+      cfg: model config (decides the cache pytree structure).
+      n_slots: batch capacity B — one cache row set per slot.
+      max_seq: rows per slot (prompt + generation must fit).
+      dtype: cache dtype (fp32 default, matching the lock-step driver).
+      mesh: optional data×model mesh; places the cache with
+        :func:`repro.dist.sharding.cache_shardings`.
+      seq_shard: shard the KV seq dim over ``model`` (long decode).
+    """
 
     def __init__(
         self,
@@ -53,10 +81,12 @@ class SlotCacheManager:
 
     @property
     def n_free(self) -> int:
+        """Free slots available to admission."""
         return len(self._free)
 
     @property
     def n_active(self) -> int:
+        """Slots currently owned by running requests."""
         return self.n_slots - len(self._free)
 
     def alloc(self) -> int:
@@ -76,7 +106,7 @@ class SlotCacheManager:
         self._free.append(slot)
         self._free.sort(reverse=True)
 
-    def reset(self, slots) -> None:
+    def reset(self, slots: Iterable[int]) -> None:
         """Zero the cache rows of ``slots`` (one fused device call)."""
         slots = list(slots)
         if not slots:
@@ -85,3 +115,232 @@ class SlotCacheManager:
         mask[slots] = True
         self.cache = self._reset(self.cache, jnp.asarray(mask))
 
+
+class NoFreeBlocks(RuntimeError):
+    """Raised by :meth:`BlockAllocator.alloc` when the pool is exhausted.
+
+    The engine catches this and preempts a running request back to
+    WAITING (recompute on re-admission) instead of crashing."""
+
+
+class BlockAllocator:
+    """Host-side free list over a fixed pool of KV pages.
+
+    Pure bookkeeping — no device state. Invariants (pinned by the
+    property test in ``tests/test_serve.py``):
+
+    * a page is owned by at most one holder at a time (no double alloc);
+    * ``n_free + outstanding == n_blocks`` always (conservation);
+    * double-free raises.
+    """
+
+    def __init__(self, n_blocks: int):
+        if n_blocks < 1:
+            raise ValueError("n_blocks must be >= 1")
+        self.n_blocks = n_blocks
+        # lowest ids first, matching SlotCacheManager's slot order
+        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._held = np.zeros((n_blocks,), bool)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int = 1) -> List[int]:
+        """Claim ``n`` pages (all or nothing). Raises :class:`NoFreeBlocks`
+        if fewer than ``n`` are free — the pool is left untouched."""
+        if n < 0:
+            raise ValueError("n must be >= 0")
+        if n > len(self._free):
+            raise NoFreeBlocks(f"need {n} pages, {len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        self._held[out] = True
+        return out
+
+    def free(self, blocks: Sequence[int]) -> None:
+        """Return pages to the pool. Double-free raises — including a
+        duplicate id within one call (it would enter the free list
+        twice and be handed to two holders)."""
+        blocks = list(blocks)
+        if len(set(blocks)) != len(blocks):
+            raise ValueError(f"duplicate page ids in free: {blocks}")
+        for b in blocks:
+            if not self._held[b]:
+                raise ValueError(f"page {b} already free")
+        self._held[blocks] = False
+        self._free.extend(blocks)
+        self._free.sort(reverse=True)
+
+
+class PagedCacheManager:
+    """Slots + a paged KV pool behind the same interface as
+    :class:`SlotCacheManager` (``alloc``/``free``/``reset``/``pos``/
+    ``cache``/``n_free``), plus the block-table plane.
+
+    The engine drives three extra paged-only operations:
+
+    * :meth:`ensure` — grow a slot's block table to cover a target
+      sequence length, allocating pages on demand (returns ``False``
+      instead of raising when the pool can't cover it — the engine then
+      preempts a victim and retries);
+    * :meth:`block_tables` (attribute) — the ``[n_slots,
+      blocks_per_slot]`` int32 table threaded through the jitted step as
+      *data*; unassigned entries are 0, which is always a valid page —
+      per-slot causal masking fences whatever it holds;
+    * :meth:`free` — releases the slot *and* its pages, zeroing both the
+      slot's SSM/conv rows and the freed pages **eagerly** (pages can be
+      re-allocated to another slot within the same engine tick, so
+      zero-on-free cannot be deferred the way slot resets are).
+
+    Args mirror :class:`SlotCacheManager`; additionally:
+
+    Args:
+      block_size: tokens per KV page.
+      n_blocks: pool size in pages. Equal cache memory with a contiguous
+        manager of ``B`` slots means ``n_blocks * block_size == B *
+        max_seq``.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        n_slots: int,
+        max_seq: int,
+        *,
+        block_size: int,
+        n_blocks: int,
+        dtype=jnp.float32,
+        mesh=None,
+        seq_shard: bool = False,
+    ):
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.block_size = block_size
+        self.n_blocks = n_blocks
+        self.blocks_per_slot = -(-max_seq // block_size)
+        cache = lm.init_paged_cache(
+            cfg, n_slots, n_blocks, block_size, dtype=dtype
+        )
+        self.table_sharding = None
+        if mesh is not None:
+            from repro.dist import sharding as shd
+
+            cache = jax.device_put(
+                cache,
+                shd.cache_shardings(
+                    mesh, cache, seq_shard=seq_shard, paged=True
+                ),
+            )
+            self.table_sharding = shd.block_table_sharding(mesh)
+        self.cache = cache
+        self.pos = np.zeros((n_slots,), np.int32)
+        self.block_tables = np.zeros((n_slots, self.blocks_per_slot), np.int32)
+        self.n_table_blocks = np.zeros((n_slots,), np.int32)
+        self.allocator = BlockAllocator(n_blocks)
+        self._free_slots: List[int] = list(range(n_slots - 1, -1, -1))
+        self._reset = jax.jit(lm.reset_paged)
+
+    # ------------------------------------------------------------------
+    # slot plane
+    # ------------------------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        """Free slots available to admission."""
+        return len(self._free_slots)
+
+    @property
+    def n_active(self) -> int:
+        return self.n_slots - len(self._free_slots)
+
+    @property
+    def n_free_blocks(self) -> int:
+        """Free pages in the pool (the admission gate)."""
+        return self.allocator.n_free
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Pages needed to cache ``n_tokens`` tokens."""
+        return -(-int(n_tokens) // self.block_size)
+
+    def alloc(self) -> int:
+        """Claim a free slot (lowest id first) with an empty block table.
+        Pages are allocated lazily by :meth:`ensure`. Raises when full."""
+        if not self._free_slots:
+            raise RuntimeError("no free slots")
+        slot = self._free_slots.pop()
+        self.pos[slot] = 0
+        self.block_tables[slot] = 0
+        self.n_table_blocks[slot] = 0
+        return slot
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s block table to cover ``n_tokens`` tokens.
+
+        Allocates pages on demand; returns ``False`` (pool untouched) if
+        the free list can't cover the growth — the engine preempts a
+        victim and retries."""
+        need = self.blocks_for(n_tokens)
+        if need > self.blocks_per_slot:
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens need {need} pages > "
+                f"blocks_per_slot {self.blocks_per_slot}"
+            )
+        have = int(self.n_table_blocks[slot])
+        if need <= have:
+            return True
+        try:
+            pages = self.allocator.alloc(need - have)
+        except NoFreeBlocks:
+            return False
+        self.block_tables[slot, have:need] = pages
+        self.n_table_blocks[slot] = need
+        return True
+
+    def free(self, slot: int) -> None:
+        """Release ``slot`` and its pages; zero both eagerly.
+
+        Freed pages must read back zero before any re-allocation (the
+        SSM-state invariant extended to the KV pool), and re-allocation
+        can happen within the same engine tick — so the zeroing device
+        call happens here, not lazily at the next admission."""
+        if slot in self._free_slots:
+            raise ValueError(f"slot {slot} already free")
+        n = int(self.n_table_blocks[slot])
+        pages = self.block_tables[slot, :n].tolist()
+        self.allocator.free(pages)
+        self.pos[slot] = 0
+        self.block_tables[slot] = 0
+        self.n_table_blocks[slot] = 0
+        self._free_slots.append(slot)
+        self._free_slots.sort(reverse=True)
+        self._zero(slots=[slot], pages=pages)
+
+    def reset(self, slots: Iterable[int]) -> None:
+        """Zero the SSM/conv rows of ``slots``. Pages are already zeroed
+        at :meth:`free` time; this keeps the admission-time interface of
+        :class:`SlotCacheManager` (idempotent on freshly freed slots)."""
+        self._zero(slots=list(slots), pages=[])
+
+    def _zero(self, *, slots: Sequence[int], pages: Sequence[int]) -> None:
+        if not slots and not pages:
+            return
+        slot_mask = np.zeros((self.n_slots,), bool)
+        slot_mask[list(slots)] = True
+        page_mask = np.zeros((self.n_blocks,), bool)
+        if pages:
+            page_mask[list(pages)] = True
+        self.cache = self._reset(
+            self.cache, jnp.asarray(slot_mask), jnp.asarray(page_mask)
+        )
+
+    def page_view(self, page: int) -> Optional[list]:
+        """Device readback of one page's K leaves (tests/debug only)."""
+        out = []
+        for path, leaf in jax.tree_util.tree_flatten_with_path(self.cache)[0]:
+            keys = [str(k.key) for k in path if hasattr(k, "key")]
+            if keys and keys[-1] in ("k", "v"):
+                out.append(np.asarray(leaf[:, page]))
+        return out

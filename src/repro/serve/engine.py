@@ -3,23 +3,32 @@
 One engine iteration (:meth:`ContinuousBatchingEngine.step`):
 
 1. **admission** — freed slots are handed to arrived waiting requests
-   (FIFO); each new occupant's cache rows are zeroed and, for encdec
-   families, its encoder output is written into the slot's row.
+   (FIFO; under the paged cache also gated on free pages); each new
+   occupant's cache rows are zeroed and, for encdec families, its
+   encoder output is written into the slot's row.
 2. **planning** — the :class:`~repro.serve.scheduler.Scheduler` packs
    decode tokens (1 per running slot) and chunked-prefill tokens under
-   the token budget.
+   the token budget. With the paged cache the engine then grows each
+   planned slot's block table to cover the step; if the pool runs dry
+   it **preempts** the youngest running request back to WAITING
+   (its pages freed and zeroed, its cache recomputed on re-admission —
+   greedy decode makes the recompute bit-exact) and retries.
 3. **one jitted mixed step** — :func:`repro.launch.steps.make_slot_step`
    runs prefill chunks and decode tokens together; per-slot cache
-   positions mean no slot waits for another.
+   positions (and, when paged, per-slot block tables) mean no slot
+   waits for another. The step width is the smallest compiled width in
+   ``ServeConfig.widths`` that fits the largest per-slot count, so
+   mixed steps don't pad every row to the full prefill chunk.
 4. **completion** — slots that consumed their last prompt token emit
    their first generated token; slots that hit ``max_new_tokens`` finish
-   and release their slot for the next waiting request.
+   and release their slot (and pages) for the next waiting request.
 
 Requests therefore join and leave the batch mid-flight: throughput is
-bounded by slot capacity, not by the slowest request of a static batch.
-Greedy outputs are identical per request to lock-step decode of the same
-prompt (`repro.serve.lockstep` is the reference; `tests/test_serve.py`
-pins the parity across all model families).
+bounded by slot capacity — and with the paged cache by *actual* cache
+use rather than worst-case sequence length. Greedy outputs are
+identical per request to lock-step decode of the same prompt
+(`repro.serve.lockstep` is the reference; `tests/test_serve.py` pins
+paged ≡ contiguous ≡ lock-step across all model families).
 """
 from __future__ import annotations
 
@@ -34,7 +43,7 @@ from repro.configs.base import ModelConfig
 from repro.launch import steps as steps_lib
 from repro.models import model as lm
 from repro.serve import request as rq
-from repro.serve.cache import SlotCacheManager
+from repro.serve.cache import PagedCacheManager, SlotCacheManager
 from repro.serve.scheduler import Scheduler, ServeConfig
 
 
@@ -44,7 +53,10 @@ class ContinuousBatchingEngine:
     Args:
       cfg: model config.
       params: model params (already sharded when serving under a mesh).
-      serve_cfg: slot/chunk/budget configuration.
+      serve_cfg: slot/chunk/budget configuration. ``block_size > 0``
+        switches the KV cache to the paged layout (pool of fixed-size
+        pages + per-slot block tables) with preempt-to-WAITING on pool
+        exhaustion.
       cache_dtype: decode-cache dtype (fp32 default, matching the
         lock-step driver).
       mesh: optional data×model mesh; the cache is placed with the
@@ -65,10 +77,18 @@ class ContinuousBatchingEngine:
         self.cfg = cfg
         self.params = params
         self.serve_cfg = serve_cfg
-        self.slots = SlotCacheManager(
-            cfg, serve_cfg.max_slots, serve_cfg.max_seq,
-            dtype=cache_dtype, mesh=mesh, seq_shard=seq_shard,
-        )
+        if serve_cfg.paged:
+            self.slots = PagedCacheManager(
+                cfg, serve_cfg.max_slots, serve_cfg.max_seq,
+                block_size=serve_cfg.block_size,
+                n_blocks=serve_cfg.total_blocks,
+                dtype=cache_dtype, mesh=mesh, seq_shard=seq_shard,
+            )
+        else:
+            self.slots = SlotCacheManager(
+                cfg, serve_cfg.max_slots, serve_cfg.max_seq,
+                dtype=cache_dtype, mesh=mesh, seq_shard=seq_shard,
+            )
         self.scheduler = Scheduler(serve_cfg)
         self._step_fn = jax.jit(steps_lib.make_slot_step(cfg))
         self.waiting: List[rq.Request] = []
@@ -82,6 +102,9 @@ class ContinuousBatchingEngine:
         self.decode_tokens = 0
         self.prefill_s = 0.0
         self.decode_s = 0.0
+        self.preemptions = 0
+        self.peak_concurrency = 0
+        self.padded_tokens = 0  # B × width summed over compute steps
         self.step_times: List[float] = []
         self._occupancy_sum = 0
         self.enc_out = None
@@ -100,12 +123,20 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------------
 
     def submit(self, req: rq.Request) -> None:
+        """Queue a request. Raises if it can never fit the cache."""
         need = req.prompt_len + req.max_new_tokens - 1  # last token not cached
         if need > self.serve_cfg.max_seq:
             raise ValueError(
                 f"request {req.rid}: prompt+generation ({need}) exceeds "
                 f"max_seq {self.serve_cfg.max_seq}"
             )
+        if self.serve_cfg.paged:
+            need_blocks = -(-need // self.serve_cfg.block_size)
+            if need_blocks > self.serve_cfg.total_blocks:
+                raise ValueError(
+                    f"request {req.rid}: needs {need_blocks} pages, pool "
+                    f"has {self.serve_cfg.total_blocks}"
+                )
         if self.cfg.family == "encdec" and req.frames is None:
             raise ValueError(f"request {req.rid}: encdec family needs frames")
         req.state = rq.WAITING
@@ -113,7 +144,12 @@ class ContinuousBatchingEngine:
         self.waiting.sort(key=lambda r: (r.arrival, r.rid))
 
     def _admit(self) -> None:
-        admitted = self.scheduler.admit(self.waiting, self.slots.n_free, self.clock)
+        admitted = self.scheduler.admit(
+            self.waiting, self.slots.n_free, self.clock,
+            n_free_blocks=(
+                self.slots.n_free_blocks if self.serve_cfg.paged else None
+            ),
+        )
         if not admitted:
             return
         new_slots = []
@@ -130,27 +166,87 @@ class ContinuousBatchingEngine:
         self.slots.reset(new_slots)  # clear the previous occupants' state
 
     # ------------------------------------------------------------------
+    # paged-cache block management
+    # ------------------------------------------------------------------
+
+    def _pick_victim(self, keep: int) -> Optional[int]:
+        """Youngest running slot other than ``keep`` (max arrival, rid)."""
+        cands = [s for s in self.by_slot if s != keep]
+        if not cands:
+            return None
+        return max(
+            cands, key=lambda s: (self.by_slot[s].arrival, self.by_slot[s].rid)
+        )
+
+    def _preempt(self, slot: int) -> None:
+        """Evict ``slot``'s request back to WAITING and free its pages.
+
+        The freed pages are zeroed eagerly (they may be re-allocated
+        within this same tick); the request's cache is recomputed on
+        re-admission (greedy decode makes the recompute bit-exact)."""
+        req = self.by_slot.pop(slot)
+        self.slots.free(slot)
+        req.preempt()
+        self.preemptions += 1
+        self.waiting.append(req)
+        self.waiting.sort(key=lambda r: (r.arrival, r.rid))
+
+    def _ensure_blocks(self, plan: Dict[int, int]) -> Dict[int, int]:
+        """Grow block tables to cover this step's writes, oldest request
+        first; preempt the youngest running request on pool exhaustion
+        (evicting it from the plan) and retry."""
+        order = sorted(
+            plan, key=lambda s: (self.by_slot[s].arrival, self.by_slot[s].rid)
+        )
+        for slot in order:
+            if slot not in plan:
+                continue  # preempted as a victim earlier in this loop
+            need = int(self.slots.pos[slot]) + plan[slot]
+            while not self.slots.ensure(slot, need):
+                victim = self._pick_victim(keep=slot)
+                if victim is None:
+                    raise RuntimeError(
+                        f"slot {slot}: page pool exhausted with no victim "
+                        "(request larger than the pool?)"
+                    )
+                self._preempt(victim)
+                plan.pop(victim, None)
+        return plan
+
+    # ------------------------------------------------------------------
     # one engine iteration
     # ------------------------------------------------------------------
+
+    def _pick_width(self, plan: Dict[int, int]) -> int:
+        """Smallest compiled step width fitting the largest chunk — the
+        decode-width ladder (mixed steps stop padding to prefill_chunk)."""
+        need = max(plan.values())
+        for w in self.serve_cfg.widths:
+            if w >= need:
+                return w
+        return self.serve_cfg.prefill_chunk
 
     def step(self) -> bool:
         """Run one engine tick. Returns True when compute happened."""
         self._admit()
+        self.peak_concurrency = max(self.peak_concurrency, len(self.by_slot))
         plan = self.scheduler.plan(self.by_slot)
+        if plan and self.serve_cfg.paged:
+            plan = self._ensure_blocks(plan)
         if not plan:
             self.clock += 1
             self.idle_steps += 1
             return False
 
         b = self.serve_cfg.max_slots
-        width = 1 if max(plan.values()) <= 1 else self.serve_cfg.prefill_chunk
+        width = self._pick_width(plan)
         tokens = np.zeros((b, width), np.int32)
         count = np.zeros((b,), np.int32)
         n_prefill = 0
         for slot, n in plan.items():
             req = self.by_slot[slot]
             if req.remaining_prompt > 0:
-                seg = req.prompt[req.prefilled : req.prefilled + n]
+                seg = req.context[req.prefilled : req.prefilled + n]
                 tokens[slot, : len(seg)] = seg
                 count[slot] = len(seg)
                 n_prefill += len(seg)
@@ -164,6 +260,14 @@ class ContinuousBatchingEngine:
             "pos": jnp.asarray(self.slots.pos),
             "cache": self.slots.cache,
         }
+        if self.serve_cfg.paged:
+            # host table -> device, replicated under a mesh (every pool
+            # shard needs the full logical->physical map)
+            state["block_tables"] = (
+                jax.device_put(self.slots.block_tables, self.slots.table_sharding)
+                if self.slots.table_sharding is not None
+                else jnp.asarray(self.slots.block_tables)
+            )
         if self.enc_out is not None:
             state["enc_out"] = self.enc_out
         t0 = time.perf_counter()
@@ -181,8 +285,13 @@ class ContinuousBatchingEngine:
                 req.prefilled += int(count[slot])
                 if req.remaining_prompt == 0:
                     req.state = rq.DECODE
-                    req.first_token_step = self.clock
-                    emitted = int(nxt[slot])
+                    if req.first_token_step < 0:
+                        req.first_token_step = self.clock
+                    # A resumed (preempted) request's re-prefill ends on
+                    # generated[-2]; the logits there re-predict the
+                    # already-known generated[-1] — don't emit it twice.
+                    if not req.generated:
+                        emitted = int(nxt[slot])
             else:
                 emitted = int(nxt[slot])
             if emitted is not None:
@@ -200,6 +309,7 @@ class ContinuousBatchingEngine:
 
         self.compute_steps += 1
         self.step_times.append(dt)
+        self.padded_tokens += b * width
         n_total = int(count.sum())
         self.prefill_tokens += n_prefill
         self.decode_tokens += n_total - n_prefill
@@ -227,6 +337,14 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------------
 
     def stats(self) -> Dict[str, float]:
+        """Aggregate serving metrics for the finished (or partial) run.
+
+        Keys cover throughput (``tokens_per_step``, ``tokens_per_s``),
+        latency percentiles, slot economics (``slot_utilization``,
+        ``peak_concurrency``), step-padding efficiency
+        (``padded_tokens``, ``padding_efficiency`` — the decode-width
+        ladder's metric) and paged-cache health (``preemptions``).
+        """
         total_tokens = self.prefill_tokens + self.decode_tokens
         steps = max(self.compute_steps, 1)
         gen = sum(len(r.generated) for r in self.finished.values())
@@ -249,6 +367,10 @@ class ContinuousBatchingEngine:
             "generated_per_step": gen / steps,
             "slot_utilization": self._occupancy_sum
             / (steps * self.serve_cfg.max_slots),
+            "peak_concurrency": self.peak_concurrency,
+            "preemptions": self.preemptions,
+            "padded_tokens": self.padded_tokens,
+            "padding_efficiency": total_tokens / max(self.padded_tokens, 1),
             "wall_s": wall,
             "prefill_s": self.prefill_s,
             "decode_s": self.decode_s,

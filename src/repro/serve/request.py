@@ -4,10 +4,22 @@ A request moves through::
 
     WAITING --admit--> PREFILL --last prompt token--> DECODE --max_new--> FINISHED
     (arrival queue)    (chunked)                      (1 tok/step)       (slot freed)
+        ^                                               |
+        +----------------- preempt (paged engine) ------+
 
 The engine owns the transitions; this module just holds the record and
 its bookkeeping (slot assignment, prefill progress, generated tokens,
 and per-token step/latency traces for the latency benchmark).
+
+**Preemption** (paged engine only): when the block pool is exhausted the
+engine evicts a running request back to WAITING and frees its pages.
+Because decode is greedy (deterministic), the evicted request's cache
+contents can be *recomputed* instead of swapped out: on re-admission it
+re-prefills :attr:`Request.context` — the prompt plus every generated
+token except the newest — after which the newest generated token is fed
+as the next decode input, restoring exactly the state it was evicted
+from. The transition is :meth:`Request.preempt`; ``context`` and
+``remaining_prompt`` make the resume transparent to the scheduler.
 """
 from __future__ import annotations
 
@@ -45,8 +57,11 @@ class Request:
     # --- engine-owned lifecycle state ---
     state: str = WAITING
     slot: int = -1
-    prefilled: int = 0  # prompt tokens already fed to the model
+    prefilled: int = 0  # context tokens already fed to the model
     generated: List[int] = dataclasses.field(default_factory=list)
+    preemptions: int = 0  # times evicted back to WAITING (paged engine)
+    # recompute context after a preemption (None = plain prompt)
+    _resume: Optional[np.ndarray] = None
     # traces (engine ticks / seconds) for latency accounting
     first_token_step: int = -1
     finish_step: int = -1
@@ -65,12 +80,40 @@ class Request:
         return int(self.prompt.size)
 
     @property
+    def context(self) -> np.ndarray:
+        """Tokens to prefill: the prompt, or — after a preemption — the
+        prompt plus all generated tokens but the newest (the newest is
+        the next decode input, so it is never cached ahead of time)."""
+        return self.prompt if self._resume is None else self._resume
+
+    @property
+    def context_len(self) -> int:
+        return int(self.context.size)
+
+    @property
     def remaining_prompt(self) -> int:
-        return self.prompt_len - self.prefilled
+        return self.context_len - self.prefilled
 
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
+
+    def preempt(self) -> None:
+        """Evict back to WAITING (paged engine, block-pool exhaustion).
+
+        Drops all cache progress; records the recompute context so
+        re-admission restores the cache bit-exactly under greedy decode.
+        """
+        if self.generated:
+            self._resume = np.concatenate(
+                [self.prompt, np.asarray(self.generated[:-1], np.int32)]
+            )
+        else:
+            self._resume = None
+        self.state = WAITING
+        self.slot = -1
+        self.prefilled = 0
+        self.preemptions += 1
 
     def tokens(self) -> np.ndarray:
         return np.asarray(self.generated, np.int32)

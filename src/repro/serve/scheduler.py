@@ -9,15 +9,24 @@ budget (the compute envelope of one step):
   in chunks of up to ``prefill_chunk`` prompt tokens.
 
 Admission is FIFO by (arrival, rid): a waiting request joins whenever a
-slot is free and its arrival tick has passed. The plan is pure host
-logic over per-slot request state — the jitted step consumes only the
-resulting (tokens, count, pos) arrays, which is why one compiled step
-serves any occupancy the scheduler produces.
+slot is free and its arrival tick has passed. Under the **paged** cache
+admission is additionally gated on the free-page count: a request is
+admitted only while the pool still holds enough free pages to cover its
+prefill context, and a shortfall blocks the whole queue (FIFO-honest —
+later, smaller requests don't starve the head of the line). Generation
+growth beyond the prefill context is *not* reserved; the engine handles
+pool exhaustion by preempting the youngest running request back to
+WAITING (see ``repro.serve.engine``).
+
+The plan is pure host logic over per-slot request state — the jitted
+step consumes only the resulting (tokens, count, pos[, block_tables])
+arrays, which is why one compiled step serves any occupancy the
+scheduler produces.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 from repro.serve.request import Request
 
@@ -28,18 +37,35 @@ class ServeConfig:
 
     Attributes:
       max_slots: batch capacity B — concurrent requests in flight.
-      max_seq: cache rows per slot (prompt + generation must fit).
+      max_seq: cache tokens per slot (prompt + generation must fit).
       prefill_chunk: max prompt tokens one slot absorbs per step (the
-        chunked-prefill width; also the compiled mixed-step width C).
+        chunked-prefill width; also the widest compiled mixed-step
+        width C).
       token_budget: max total tokens processed per engine step;
         0 means ``max_slots + prefill_chunk`` (all decodes plus one
         full prefill chunk).
+      block_size: tokens per KV page. 0 (default) keeps the contiguous
+        per-slot cache; > 0 switches the engine to the paged cache.
+      n_blocks: page-pool size. 0 (default) sizes the pool to match the
+        contiguous layout exactly (``max_slots * ceil(max_seq /
+        block_size)`` pages) — set it smaller to serve more slots than
+        the worst case fits, relying on preemption under pressure.
+      decode_widths: extra compiled step widths below ``prefill_chunk``.
+        The engine picks the smallest compiled width that fits the
+        step's largest per-slot token count, so a mixed step whose
+        biggest chunk is 3 runs at width 4 instead of padding every
+        row to ``prefill_chunk``. Default ``(1, 4)`` gives the ladder
+        {1, 4, prefill_chunk}; ``(1,)`` reproduces the old two-width
+        behaviour.
     """
 
     max_slots: int
     max_seq: int
     prefill_chunk: int = 8
     token_budget: int = 0
+    block_size: int = 0
+    n_blocks: int = 0
+    decode_widths: Tuple[int, ...] = (1, 4)
 
     def __post_init__(self):
         if self.max_slots < 1:
@@ -48,10 +74,43 @@ class ServeConfig:
             raise ValueError("prefill_chunk must be >= 1")
         if self.token_budget < 0:
             raise ValueError("token_budget must be >= 0 (0 = default)")
+        if self.block_size < 0:
+            raise ValueError("block_size must be >= 0 (0 = contiguous)")
+        if self.n_blocks < 0:
+            raise ValueError("n_blocks must be >= 0 (0 = default pool)")
+        if self.n_blocks and not self.block_size:
+            raise ValueError("n_blocks requires block_size > 0")
+        if any(w < 1 for w in self.decode_widths):
+            raise ValueError("decode_widths must be >= 1")
 
     @property
     def budget(self) -> int:
+        """Effective per-step token budget."""
         return self.token_budget or (self.max_slots + self.prefill_chunk)
+
+    @property
+    def paged(self) -> bool:
+        """Whether the paged KV cache is enabled."""
+        return self.block_size > 0
+
+    @property
+    def blocks_per_slot(self) -> int:
+        """Block-table length: pages covering ``max_seq`` tokens."""
+        return -(-self.max_seq // self.block_size) if self.paged else 0
+
+    @property
+    def total_blocks(self) -> int:
+        """Page-pool size (0 when contiguous)."""
+        if not self.paged:
+            return 0
+        return self.n_blocks or (self.max_slots * self.blocks_per_slot)
+
+    @property
+    def widths(self) -> Tuple[int, ...]:
+        """Ascending compiled step widths (always ends at prefill_chunk)."""
+        ws = {w for w in self.decode_widths if w <= self.prefill_chunk}
+        ws.add(self.prefill_chunk)
+        return tuple(sorted(ws))
 
 
 class Scheduler:
@@ -61,17 +120,33 @@ class Scheduler:
         self.cfg = cfg
         self._rr = 0  # round-robin offset for budget-limited decode
 
-    def admit(self, waiting: List[Request], n_free: int, clock: int) -> List[Request]:
+    def admit(
+        self,
+        waiting: List[Request],
+        n_free: int,
+        clock: int,
+        *,
+        n_free_blocks: Optional[int] = None,
+    ) -> List[Request]:
         """FIFO admission: arrived requests, up to the free-slot count.
 
         ``waiting`` must be sorted by (arrival, rid); returns the prefix
         to admit (the caller assigns slots and removes them from the
-        queue).
+        queue). With the paged cache, ``n_free_blocks`` additionally
+        gates each candidate on the pages its prefill context needs —
+        the free count is debited as candidates are accepted, and the
+        first shortfall stops admission (FIFO head-of-line).
         """
         out = []
+        blocks = n_free_blocks
         for req in waiting:
             if len(out) >= n_free or req.arrival > clock:
                 break
+            if self.cfg.paged and blocks is not None:
+                need = -(-req.context_len // self.cfg.block_size)
+                if need > blocks:
+                    break
+                blocks -= need
             out.append(req)
         return out
 

@@ -1,6 +1,11 @@
 """Synthetic serving workloads: staggered (Poisson) arrivals with
 heterogeneous prompt/generation lengths — the traffic shape that makes
-continuous batching win over a static lock-step batch."""
+continuous batching win over a static lock-step batch — and a
+**long-tail** variant (mostly short generations, a few near-``max_seq``
+ones) — the shape that makes the *paged* cache win over contiguous
+slots: a contiguous layout must reserve worst-case rows for every slot,
+while pages let the many short requests share the memory the few long
+ones actually use."""
 from __future__ import annotations
 
 from typing import List, Optional
@@ -61,4 +66,38 @@ def poisson_workload(
                 frames=frames,
             )
         )
+    return reqs
+
+
+def longtail_workload(
+    cfg: ModelConfig,
+    *,
+    n_requests: int,
+    arrival_rate: float = 1.0,
+    prompt_len=(4, 8),  # int or (lo, hi) inclusive
+    gen_short=(3, 6),  # generation range for the short majority
+    gen_long=(24, 32),  # generation range for the long tail
+    tail_frac: float = 0.2,  # fraction of requests in the tail
+    seed: int = 0,
+    uniform_prompts: bool = False,
+) -> List[Request]:
+    """Long-tail workload: ~``1 - tail_frac`` short requests plus a few
+    long ones. A contiguous cache must budget every slot for the tail's
+    worst case; the paged cache only spends pages on the tail requests
+    that actually grow — the benchmark workload for the paged-vs-
+    contiguous concurrency comparison at equal cache memory."""
+    rng = np.random.default_rng(seed)
+    reqs = poisson_workload(
+        cfg,
+        n_requests=n_requests,
+        arrival_rate=arrival_rate,
+        prompt_len=prompt_len,
+        gen_len=gen_short,
+        seed=seed,
+        uniform_prompts=uniform_prompts,
+    )
+    n_tail = max(1, int(round(tail_frac * n_requests)))
+    glo, ghi = (gen_long, gen_long) if isinstance(gen_long, int) else gen_long
+    for i in rng.choice(n_requests, size=n_tail, replace=False):
+        reqs[i].max_new_tokens = int(rng.integers(glo, ghi + 1))
     return reqs

@@ -1,0 +1,150 @@
+#!/usr/bin/env python
+"""Doc-consistency gate: fail CI when README/docs drift from the tree.
+
+Checks, over ``README.md`` and every ``docs/*.md`` page:
+
+1. **Paths exist** — every path-like token in inline code spans (e.g.
+   ``src/repro/serve/cache.py``, ``launch/steps.py::make_slot_step``,
+   bare well-known filenames like ``test_serve.py``) must resolve
+   against the repo root, ``src/`` or ``src/repro/``; bare filenames may
+   live anywhere in the tree. Generated artifacts (``BENCH_*.json``)
+   are exempt.
+2. **Links resolve** — relative markdown links must point at existing
+   files.
+3. **Snippets import** — every fenced ``python`` block must compile,
+   and its top-level imports must resolve (AST-walked, so multi-line
+   parenthesized imports work; ``from`` imports also verify the name
+   exists on the module) with ``src/`` on ``sys.path`` — a renamed
+   module or symbol breaks the build, not the reader.
+
+Run:  python tools/check_docs.py        (CI runs it in the ruff lane)
+Exit: 0 clean, 1 with a list of stale references.
+"""
+from __future__ import annotations
+
+import ast
+import importlib
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+DOC_FILES = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+SEARCH_ROOTS = (ROOT, ROOT / "src", ROOT / "src" / "repro")
+CHECK_EXTS = (".py", ".md", ".json", ".toml", ".yml", ".yaml", ".txt")
+# artifacts produced by running benchmarks — documented but not committed
+GENERATED = re.compile(r"^BENCH_.*\.json$")
+
+INLINE_CODE = re.compile(r"`([^`\n]+)`")
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE = re.compile(r"^```(\w*)\s*$")
+PATHY = re.compile(r"^[\w./\-]+$")
+
+
+def iter_path_tokens(text: str):
+    """Path-like strings inside inline code spans."""
+    for tok in INLINE_CODE.findall(text):
+        tok = tok.split("::")[0].strip()  # `pkg/mod.py::fn` -> pkg/mod.py
+        if not PATHY.match(tok) or tok.startswith("--"):
+            continue
+        name = tok.rstrip("/").rsplit("/", 1)[-1]
+        if "/" in tok or name.endswith(CHECK_EXTS):
+            yield tok.rstrip("/")
+
+
+def resolve(tok: str) -> bool:
+    if GENERATED.match(tok.rsplit("/", 1)[-1]):
+        return True
+    for root in SEARCH_ROOTS:
+        if (root / tok).exists():
+            return True
+    if "/" not in tok:  # bare filename: anywhere in the tree
+        return any(ROOT.rglob(tok))
+    return False
+
+
+def python_snippets(text: str):
+    """Yield the bodies of fenced ```python blocks."""
+    lines = text.splitlines()
+    body, lang = [], None
+    for line in lines:
+        m = FENCE.match(line)
+        if m:
+            if lang is None:
+                lang, body = m.group(1), []
+            else:
+                if lang == "python":
+                    yield "\n".join(body)
+                lang = None
+            continue
+        if lang is not None:
+            body.append(line)
+
+
+def check_snippet(src: str):
+    """Compile the snippet; resolve its top-level imports (AST-based, so
+    multi-line parenthesized imports work) and verify imported names
+    exist on their modules."""
+    tree = ast.parse(src, "<doc-snippet>")  # SyntaxError propagates
+    for node in tree.body:
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                importlib.import_module(alias.name)
+        elif isinstance(node, ast.ImportFrom) and node.level == 0 and node.module:
+            try:
+                mod = importlib.import_module(node.module)
+            except ImportError:
+                mod = None
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                if mod is not None and hasattr(mod, alias.name):
+                    continue
+                # `from pkg import submodule` with no attribute
+                importlib.import_module(f"{node.module}.{alias.name}")
+
+
+def main() -> int:
+    failures = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            failures.append(f"{doc.relative_to(ROOT)}: file missing")
+            continue
+        text = doc.read_text(encoding="utf-8")
+        rel = doc.relative_to(ROOT)
+
+        for tok in iter_path_tokens(text):
+            if not resolve(tok):
+                failures.append(f"{rel}: stale path `{tok}`")
+
+        for link in MD_LINK.findall(text):
+            if link.startswith(("http://", "https://", "mailto:")):
+                continue
+            link = link.split("#")[0]  # drop the anchor, keep the file
+            if not link:
+                continue  # same-page anchor
+            if not ((doc.parent / link).exists() or (ROOT / link).exists()):
+                failures.append(f"{rel}: broken link ({link})")
+
+        for i, snip in enumerate(python_snippets(text)):
+            try:
+                check_snippet(snip)
+            except Exception as e:  # noqa: BLE001 — report, don't crash
+                failures.append(
+                    f"{rel}: python snippet #{i + 1} failed: {type(e).__name__}: {e}"
+                )
+
+    if failures:
+        print(f"check_docs: {len(failures)} stale reference(s)")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    n = len(DOC_FILES)
+    print(f"check_docs: OK ({n} files checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
