@@ -1,22 +1,43 @@
 """Paper Fig. 2 sensitivity analysis (reduced, synthetic):
 
-(a) drop-rate sweep, (b) top-k vs random selection, (c) schedulers
-(constant / linear / cosine / bar) at a fixed target, (d) scheduler
-period, (e) backward-engine path — channel top-k vs 32-channel blocks
-vs blocks through the Pallas gathered kernels (interpret mode on CPU).
-Reproduces the paper's qualitative findings: accuracy falls with rate;
-random falls faster than top-k; schedulers beat constant; the 2-epoch
-bar is at least as good as iteration-periodic bars; and the TPU-native
-block/Pallas paths track the channel path's accuracy.
+(a) drop-rate sweep, (b) top-k vs random selection, (c) schedules
+(constant / linear / cosine / bar / epoch_bar — first-class
+:class:`~repro.core.schedulers.Schedule` objects from the registry) at
+a fixed target, (d) scheduler period, (e) backward-engine path —
+channel top-k vs 32-channel blocks vs blocks through the Pallas
+gathered kernels (interpret mode on CPU), (f) a per-site **policy
+program** (stem + first/last block dense, the rest at 0.8) driven end
+to end through ``resolved.policies_for_step``, with its FLOPs counted
+over the resolved site table. Reproduces the paper's qualitative
+findings: accuracy falls with rate; random falls faster than top-k;
+schedulers beat constant; the 2-epoch bar is at least as good as
+iteration-periodic bars; and the TPU-native block/Pallas paths track
+the channel path's accuracy.
+
+Run standalone (CI smoke: ``--reduced`` trims the grid to one cell per
+section): ``python benchmarks/fig2_sensitivity.py --reduced``.
 """
+import argparse
 import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
-from repro.core.policy import SsPropPolicy, paper_default, tpu_default
-from repro.core.schedulers import drop_rate_for_step
+from repro.core import flops as F
+from repro.core.policy import (
+    PolicyProgram,
+    PolicyRules,
+    SsPropPolicy,
+    paper_default,
+    tpu_default,
+)
+from repro.core.schedulers import EpochBar, PeriodicBar, make_schedule
 from repro.data.pipeline import ImagePipeline, ImagePipelineConfig
 from repro.models import resnet
 from repro.optim import adam
@@ -26,10 +47,37 @@ _STEPS = 16
 _SPE = 4  # steps per "epoch"
 
 
-def _train(rate_fn, selection="topk", steps=_STEPS, seed=0, policy_fn=None):
+def _pipe_params_opt(seed):
     pipe = ImagePipeline(ImagePipelineConfig((3, 16, 16), 10, 32, seed=7), n_train=256)
     params = resnet.init_params(_NAME, jax.random.PRNGKey(seed), num_classes=10)
-    opt = adam.init(params)
+    return pipe, params, adam.init(params)
+
+
+def _make_step(pol, ocfg):
+    def loss_fn(p, x, y):
+        logits = resnet.forward(_NAME, p, x, pol)
+        return -jax.nn.log_softmax(logits)[jnp.arange(x.shape[0]), y].mean()
+
+    @jax.jit
+    def step(p, o, x, y):
+        lv, g = jax.value_and_grad(loss_fn)(p, x, y)
+        p2, o2, _ = adam.apply_updates(ocfg, p, g, o)
+        return p2, o2, lv
+
+    return step
+
+
+def _eval(pipe, params):
+    ev = pipe.eval_batch(128)
+    logits = resnet.forward(
+        _NAME, params, jnp.asarray(ev["images"]), SsPropPolicy(0.0), train=False
+    )
+    return float((jnp.argmax(logits, -1) == jnp.asarray(ev["labels"])).mean())
+
+
+def _train(rate_fn, selection="topk", steps=_STEPS, seed=0, policy_fn=None):
+    """Train under a per-step rate function (legacy global-policy path)."""
+    pipe, params, opt = _pipe_params_opt(seed)
     ocfg = adam.AdamConfig(lr=1e-3)
     cache = {}
 
@@ -42,56 +90,67 @@ def _train(rate_fn, selection="topk", steps=_STEPS, seed=0, policy_fn=None):
                 pol = policy_fn(rate)
             else:
                 pol = dataclasses.replace(paper_default(rate), selection=selection)
-
-            def loss_fn(p, x, y, k):
-                logits = resnet.forward(_NAME, p, x, pol)
-                return -jax.nn.log_softmax(logits)[jnp.arange(x.shape[0]), y].mean()
-
-            @jax.jit
-            def step(p, o, x, y, k):
-                lv, g = jax.value_and_grad(loss_fn)(p, x, y, k)
-                p2, o2, _ = adam.apply_updates(ocfg, p, g, o)
-                return p2, o2, lv
-
-            cache[key] = step
+            cache[key] = _make_step(pol, ocfg)
         return cache[key]
 
-    key = jax.random.PRNGKey(123)
     for i in range(steps):
         b = jax.tree.map(jnp.asarray, pipe.batch_at(i))
-        key, sub = jax.random.split(key)
-        step = get_step(rate_fn(i))
-        params, opt, loss = step(params, opt, b["images"], b["labels"], sub)
-    ev = pipe.eval_batch(128)
-    logits = resnet.forward(_NAME, params, jnp.asarray(ev["images"]), SsPropPolicy(0.0), train=False)
-    return float((jnp.argmax(logits, -1) == jnp.asarray(ev["labels"])).mean())
+        params, opt, _ = get_step(rate_fn(i))(params, opt, b["images"], b["labels"])
+    return _eval(pipe, params)
 
 
-def run():
+def _train_program(resolved, steps=_STEPS, seed=0):
+    """Train under a resolved policy program: the step cache is keyed on
+    the per-step SitePolicies table, exactly like launch/train.py."""
+    pipe, params, opt = _pipe_params_opt(seed)
+    ocfg = adam.AdamConfig(lr=1e-3)
+    cache = {}
+    for i in range(steps):
+        table = resolved.policies_for_step(i)
+        if table not in cache:
+            cache[table] = _make_step(table, ocfg)
+        b = jax.tree.map(jnp.asarray, pipe.batch_at(i))
+        params, opt, _ = cache[table](params, opt, b["images"], b["labels"])
+    return _eval(pipe, params), len(cache)
+
+
+def per_site_program(steps_per_epoch=_SPE):
+    """The Fig. 2(f) program: stem + first/last block dense, rest 0.8."""
+    rules = PolicyRules.of(
+        ("stem", 0.0),
+        ("block_{0,-1}/*", 0.0),
+        ("*", 0.8),
+        base=paper_default(0.8),
+    )
+    program = PolicyProgram(
+        rules=rules, schedule=EpochBar(target=0.8, steps_per_epoch=steps_per_epoch)
+    )
+    sites, depth = resnet.site_names(_NAME)
+    return program.resolve(sites, depth=depth)
+
+
+def run(reduced: bool = False):
+    steps = 8 if reduced else _STEPS
     # (a) drop-rate sweep, constant schedule
-    for rate in (0.0, 0.5, 0.8, 0.95):
-        acc = _train(lambda i, r=rate: r)
+    for rate in (0.0, 0.8) if reduced else (0.0, 0.5, 0.8, 0.95):
+        acc = _train(lambda i, r=rate: r, steps=steps)
         emit(f"fig2a/rate_{rate}", 0.0, f"acc={acc:.3f}")
     # (b) selection method at 0.8
-    for sel in ("topk", "random"):
+    for sel in () if reduced else ("topk", "random"):
         acc = _train(lambda i: 0.8, selection=sel)
         emit(f"fig2b/select_{sel}", 0.0, f"acc={acc:.3f}")
-    # (c) schedulers to target 0.8
-    for sched in ("constant", "linear", "cosine", "bar", "epoch_bar"):
-        acc = _train(
-            lambda i, s=sched: drop_rate_for_step(
-                s, step=i, steps_per_epoch=_SPE, total_steps=_STEPS, target=0.8
-            )
+    # (c) schedules to target 0.8 — built from the registry
+    names = ("epoch_bar",) if reduced else ("constant", "linear", "cosine", "bar", "epoch_bar")
+    for name in names:
+        sched = make_schedule(
+            name, target=0.8, total_steps=steps, steps_per_epoch=_SPE
         )
-        emit(f"fig2c/sched_{sched}", 0.0, f"acc={acc:.3f}")
+        acc = _train(sched.rate, steps=steps)
+        emit(f"fig2c/sched_{name}", 0.0, f"acc={acc:.3f}")
     # (d) periodic bar periods
-    for period in (8, 16):
-        acc = _train(
-            lambda i, p=period: drop_rate_for_step(
-                "periodic_bar", step=i, steps_per_epoch=_SPE,
-                total_steps=_STEPS, target=0.8, period=p,
-            )
-        )
+    for period in () if reduced else (8, 16):
+        sched = PeriodicBar(target=0.8, period=period)
+        acc = _train(sched.rate)
         emit(f"fig2d/period_{period}", 0.0, f"acc={acc:.3f}")
     # (e) backward-engine paths at 0.8: channel top-k (paper) vs block
     # granularity vs block + Pallas gathered kernels — the conv rows run
@@ -103,6 +162,41 @@ def run():
             tpu_default(r), block_size=32, use_pallas=True
         ),
     }
+    if reduced:
+        engine_paths = {"block": engine_paths["block"]}
     for pname, pfn in engine_paths.items():
-        acc = _train(lambda i: 0.8, policy_fn=pfn)
+        acc = _train(lambda i: 0.8, policy_fn=pfn, steps=steps)
         emit(f"fig2e/engine_{pname}", 0.0, f"acc={acc:.3f}")
+    # (f) per-site policy program: trains through policies_for_step and
+    # accounts FLOPs over the resolved site table, not one global rate.
+    resolved = per_site_program()
+    acc, n_steps_compiled = _train_program(resolved, steps=steps)
+    peak = resolved.peak()
+    dense_f, site_f = resnet.flops_per_iter(_NAME, 32, (3, 16, 16), policy=peak)
+    _, global_f = resnet.flops_per_iter(
+        _NAME, 32, (3, 16, 16), policy=paper_default(0.8)
+    )
+    assert n_steps_compiled <= len(resolved.schedule.rate_buckets), (
+        n_steps_compiled, resolved.schedule.rate_buckets
+    )
+    # the dense-pinned stem/first/last sites must show up in the count
+    assert global_f < site_f < dense_f, (global_f, site_f, dense_f)
+    emit(
+        "fig2f/per_site_program", 0.0,
+        f"acc={acc:.3f};saved={F.savings_fraction(dense_f, site_f):.3f};"
+        f"executables={n_steps_compiled}",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--reduced", action="store_true",
+        help="one cell per section (CI smoke for the per-site FLOPs path)",
+    )
+    args = ap.parse_args()
+    run(reduced=args.reduced)
+
+
+if __name__ == "__main__":
+    main()

@@ -210,6 +210,8 @@ _CONV_POLICIES = {
         tpu_default(0.8), use_pallas=True
     ),
 }
+# the per-site policy-program row rides alongside the global policies
+_CONV_POLICY_NAMES = tuple(_CONV_POLICIES) + ("ssprop_per_site",)
 
 _CONV_CELLS = [
     # (model, batch, image) — paper Table 4/5 shapes
@@ -219,7 +221,35 @@ _CONV_CELLS = [
 ]
 
 
-def _conv_flops(model: str, batch: int, image, policy: SsPropPolicy):
+def _conv_policy(model: str, policy_name: str):
+    """The policy (or resolved per-site table) for one conv row."""
+    if policy_name != "ssprop_per_site":
+        return _CONV_POLICIES[policy_name]()
+    # A genuinely per-site program: stems/heads and the outermost blocks
+    # dense (where gradient quality matters most per FLOP), everything
+    # else at the paper's 0.8 — FLOPs are then summed over the resolved
+    # site table, each conv at its own keep count.
+    from repro.core.policy import PolicyProgram, PolicyRules
+    from repro.models import ddpm, resnet
+
+    base = paper_default(0.8)
+    if model == "ddpm":
+        sites, depth = ddpm.site_names()
+        rules = PolicyRules.of(
+            ("stem", 0.0), ("out", 0.0), ("mid*/*", 0.5), ("*", 0.8), base=base
+        )
+    else:
+        sites, depth = resnet.site_names(model)
+        rules = PolicyRules.of(
+            ("stem", 0.0), ("block_{0,-1}/*", 0.0), ("*", 0.8), base=base
+        )
+    from repro.core.schedulers import Constant
+
+    program = PolicyProgram(rules=rules, schedule=Constant(target=0.8))
+    return program.resolve(sites, depth=depth).peak()
+
+
+def _conv_flops(model: str, batch: int, image, policy):
     from repro.models import ddpm, resnet
 
     if model == "ddpm":
@@ -255,7 +285,7 @@ def conv_roofline_row(model: str, batch: int, image, policy_name: str):
     engine executes, not the nominal channel top-k rate. The memory term
     is a weights-only lower bound (grad write + read + param read).
     """
-    policy = _CONV_POLICIES[policy_name]()
+    policy = _conv_policy(model, policy_name)
     dense_f, policy_f = _conv_flops(model, batch, image, policy)
     p_bytes = _conv_param_bytes(model, image)
     compute_t = policy_f / PEAK_FLOPS
@@ -277,7 +307,7 @@ def conv_roofline_row(model: str, batch: int, image, policy_name: str):
 def iter_conv_rows():
     """All (model × policy) conv roofline rows — shared by run()/main()."""
     for model, batch, image in _CONV_CELLS:
-        for pname in _CONV_POLICIES:
+        for pname in _CONV_POLICY_NAMES:
             yield conv_roofline_row(model, batch, image, pname)
 
 

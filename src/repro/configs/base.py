@@ -175,8 +175,7 @@ class ModelConfig:
         n_moe_layers = sum(
             1
             for i in range(self.n_layers)
-            if (i % self.moe_every == self.moe_offset)
-            and not (self.family == "hybrid" and False)
+            if i % self.moe_every == self.moe_offset
         )
         return self.param_count() - n_moe_layers * (full_moe - act_moe)
 

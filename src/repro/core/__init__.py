@@ -10,8 +10,9 @@ The paper's contribution as a composable JAX module:
 * :mod:`repro.core.sparsity`   — channel importance + top-k selection
   (:class:`~repro.core.sparsity.Selection` carries the ragged-tail
   validity mask and per-shard balanced form).
-* :mod:`repro.core.schedulers` — drop-rate schedulers (constant, linear,
-  cosine, bar, 2-epoch bar).
+* :mod:`repro.core.schedulers` — first-class drop-rate schedules
+  (constant, linear, cosine, bar, 2-epoch bar, periodic bar) with
+  per-schedule ``rate(step)`` / ``average_rate`` / bucket quantization.
 * :mod:`repro.core.dense`      — ``sparse_dense``: matmul adapter over
   the engine (custom_vjp).
 * :mod:`repro.core.conv`       — ``sparse_conv2d``: convolution adapter
@@ -19,16 +20,37 @@ The paper's contribution as a composable JAX module:
   gathered kernels (``kernels/im2col.py``).
 * :mod:`repro.core.flops`      — the paper's FLOPs model (Eq. 6-11) and
   the policy-aware counts (block rounding, Pallas tile padding).
-* :mod:`repro.core.policy`     — ``SsPropPolicy`` configuration object.
+* :mod:`repro.core.policy`     — the policy program surface:
+  ``SsPropPolicy`` (one site's config), ``PolicyRules`` (site-name rule
+  table), ``PolicyProgram`` / ``ResolvedProgram`` (rules + schedule,
+  the train loop's one control object) and ``SitePolicies`` (the
+  resolved site → policy table threaded through the models).
 """
-from repro.core.policy import SsPropPolicy
+from repro.core.policy import (
+    DENSE,
+    PolicyProgram,
+    PolicyRules,
+    ResolvedProgram,
+    SitePolicies,
+    SsPropPolicy,
+    policy_for,
+)
 from repro.core.schedulers import (
+    SCHEDULES,
+    Bar,
+    Constant,
+    Cosine,
+    EpochBar,
+    Linear,
+    PeriodicBar,
+    Schedule,
     bar_schedule,
     constant_schedule,
     cosine_schedule,
     drop_rate_for_step,
     epoch_bar_schedule,
     linear_schedule,
+    make_schedule,
 )
 from repro.core.sparsity import (
     Selection,
@@ -43,6 +65,21 @@ from repro.core import flops
 
 __all__ = [
     "SsPropPolicy",
+    "DENSE",
+    "PolicyRules",
+    "PolicyProgram",
+    "ResolvedProgram",
+    "SitePolicies",
+    "policy_for",
+    "Schedule",
+    "Constant",
+    "Linear",
+    "Cosine",
+    "Bar",
+    "EpochBar",
+    "PeriodicBar",
+    "SCHEDULES",
+    "make_schedule",
     "Selection",
     "ChannelSparseOp",
     "channel_sparse_backward",

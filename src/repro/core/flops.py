@@ -9,6 +9,11 @@ The ``*_ssprop`` functions take the paper's nominal drop rate; the
 and count what the backward engine *actually* executes: block
 granularity rounds the keep count to whole ``block_size`` blocks, and
 the Pallas gathered kernels pay for their 128-aligned tile padding.
+The ``*_site`` functions are the per-site entry points: they accept a
+resolved :class:`~repro.core.policy.SitePolicies` table plus the call
+site's name, so a per-site policy program's total FLOPs are summed over
+the resolved site table — each layer at its *own* keep count — rather
+than one global rate.
 
 These formulas drive the benchmark tables (paper Tables 4-7), the conv
 roofline rows, and the property test on the drop-rate lower bound
@@ -19,7 +24,7 @@ from __future__ import annotations
 from typing import TYPE_CHECKING, Dict
 
 if TYPE_CHECKING:
-    from repro.core.policy import SsPropPolicy
+    from repro.core.policy import PolicyLike, SsPropPolicy
 
 
 def _roundup(v: int, mult: int) -> int:
@@ -177,6 +182,47 @@ def dense_backward_flops_policy(
     if bias:
         f += m * (kept if sdw else d_out)
     return int(f + m * d_out)
+
+
+def conv_backward_flops_site(
+    bt: int,
+    h_out: int,
+    w_out: int,
+    c_in: int,
+    c_out: int,
+    k: int,
+    policy: "PolicyLike",
+    site: str = "",
+) -> int:
+    """:func:`conv_backward_flops_policy` for one *named* call site.
+
+    ``policy`` may be a plain policy (the site name is ignored) or a
+    resolved :class:`~repro.core.policy.SitePolicies` table — the conv
+    then counts at its own site's policy. This is what makes whole-model
+    FLOPs walks (``models/resnet.py::flops_per_iter``,
+    ``models/ddpm.py::flops_per_iter``) per-site aware.
+    """
+    from repro.core.policy import policy_for
+
+    return conv_backward_flops_policy(
+        bt, h_out, w_out, c_in, c_out, k, policy_for(policy, site)
+    )
+
+
+def dense_backward_flops_site(
+    m: int,
+    d_in: int,
+    d_out: int,
+    policy: "PolicyLike",
+    site: str = "",
+    bias: bool = True,
+) -> int:
+    """:func:`dense_backward_flops_policy` for one named call site."""
+    from repro.core.policy import policy_for
+
+    return dense_backward_flops_policy(
+        m, d_in, d_out, policy_for(policy, site), bias=bias
+    )
 
 
 def savings_fraction(

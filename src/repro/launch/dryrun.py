@@ -34,7 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SHAPES
 from repro.configs.registry import ARCH_IDS, get_config
-from repro.core.policy import SsPropPolicy, tpu_default
+from repro.core.policy import DENSE, PolicyProgram, tpu_default
 from repro.data.pipeline import input_specs
 from repro.dist import sharding as shd
 from repro.launch import steps as steps_lib
@@ -138,9 +138,17 @@ def build_cell(arch: str, shape_name: str, mesh, policy_name: str):
         )
         cfg = _dc.replace(cfg, moe_dp_groups=dp, decode_seq_shard=True)
     elif policy_name == "dense":
-        policy = SsPropPolicy(0.0)
+        policy = DENSE
     else:
         raise ValueError(policy_name)
+
+    # The cell's control surface is a (trivial one-rule) policy program;
+    # the compiled step consumes its resolved site table — the same
+    # object a per-site program would hand the train loop.
+    from repro.models import model as _lm
+
+    sites, depth = _lm.site_names(cfg)
+    policy = PolicyProgram.single(policy).resolve(sites, depth=depth).peak()
 
     a_params, a_opt = steps_lib.abstract_state(cfg)
     p_sh = shd.param_shardings(mesh, a_params, replicate_kv=(policy_name == "opt"))

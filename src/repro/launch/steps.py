@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.policy import SsPropPolicy
+from repro.core.policy import DENSE, PolicyLike
 from repro.models import model as lm
 from repro.optim import adam
 
@@ -41,7 +41,7 @@ def microbatch_plan(cfg: ModelConfig, shape: ShapeConfig, dp: int) -> int:
 
 def make_train_step(
     cfg: ModelConfig,
-    policy: SsPropPolicy,
+    policy: PolicyLike,
     opt_cfg: adam.AdamConfig,
     *,
     accum: int = 1,
@@ -87,7 +87,7 @@ def make_train_step(
 
 def make_eval_step(cfg: ModelConfig) -> Callable:
     def eval_step(params, batch):
-        loss_v, metrics = lm.loss_fn(cfg, params, batch, SsPropPolicy())
+        loss_v, metrics = lm.loss_fn(cfg, params, batch, DENSE)
         return metrics["ce"]
 
     return eval_step
@@ -97,7 +97,7 @@ def make_prefill_step(cfg: ModelConfig) -> Callable:
     """Forward pass over the full prompt (inference-prefill shape)."""
 
     def prefill(params, batch):
-        logits, _ = lm.forward(cfg, params, batch, SsPropPolicy())
+        logits, _ = lm.forward(cfg, params, batch, DENSE)
         return jnp.argmax(logits[:, -1], axis=-1)
 
     return prefill

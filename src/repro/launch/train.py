@@ -1,21 +1,32 @@
 """Fault-tolerant LM training driver (end-to-end, any --arch).
 
 Wires together: config registry → synthetic data pipeline → sharded
-params/optimizer → ssProp bar-scheduled train step (two compiled
-executables: dense epoch / sparse epoch) → async checkpointing →
-heartbeat + restart policy. On restart it resumes from the latest
-committed checkpoint; the pure-function-of-step data pipeline makes the
-replay exact.
+params/optimizer → a resolved ssProp **policy program** (per-site rules
+× schedule; the paper's bar schedule compiles to two executables: dense
+epoch / sparse epoch) → async checkpointing → heartbeat + restart
+policy. On restart it resumes from the latest committed checkpoint; the
+pure-function-of-step data pipeline makes the replay exact.
+
+The sparsity control surface is ONE object: a
+:class:`repro.core.policy.PolicyProgram` built from ``--rules`` (the
+``pattern=rate;...`` mini-grammar over the model's site names, see
+``docs/policies.md``) and ``--scheduler``; the loop just asks
+``resolved.policies_for_step(step)``.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
       --reduced --steps 50 --ckpt-dir /tmp/run1
+  # per-site: first/last layer dense, attention at 0.5, the rest at 0.8
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+      --reduced --steps 50 --no-scan-layers \
+      --rules 'layer_{0,-1}/*=dense;*/attn/*=0.5;*=0.8'
   # crash/resume: re-running the same command continues from the latest
   # checkpoint.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import time
 
@@ -24,8 +35,8 @@ import jax.numpy as jnp
 
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.configs.registry import ARCH_IDS, get_config
-from repro.core.policy import paper_default, tpu_default
-from repro.core.schedulers import drop_rate_for_step
+from repro.core.policy import PolicyProgram, PolicyRules, paper_default, tpu_default
+from repro.core.schedulers import make_schedule
 from repro.data.pipeline import TokenPipeline, TokenPipelineConfig
 from repro.dist import sharding as shd
 from repro.dist.fault import Heartbeat, RestartPolicy, StragglerSupervisor
@@ -46,7 +57,16 @@ def build_parser():
     ap.add_argument("--drop-rate", type=float, default=0.8)
     ap.add_argument("--scheduler", default="epoch_bar")
     ap.add_argument("--steps-per-epoch", type=int, default=10)
+    ap.add_argument("--period", type=int, default=100,
+                    help="periodic_bar scheduler period (iterations)")
     ap.add_argument("--granularity", choices=["channel", "block"], default="channel")
+    ap.add_argument("--rules", default="",
+                    help="per-site rules 'pattern=rate;...' over the model's "
+                         "site names (rate may be 'dense'); empty = one "
+                         "global rule at --drop-rate")
+    ap.add_argument("--no-scan-layers", action="store_true",
+                    help="unroll the layer stack (required for per-depth "
+                         "rules like layer_{0,-1}/*)")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--data-mesh", type=int, default=1)
@@ -58,10 +78,29 @@ def build_parser():
     return ap
 
 
+def build_program(args, base_policy) -> PolicyProgram:
+    """The one control surface: rules (site patterns) × schedule."""
+    schedule = make_schedule(
+        args.scheduler,
+        target=args.drop_rate,
+        total_steps=args.steps,
+        steps_per_epoch=args.steps_per_epoch,
+        period=args.period,
+        rate_buckets=base_policy.rate_buckets,
+    )
+    if args.rules:
+        rules = PolicyRules.parse(args.rules, base=base_policy)
+    else:
+        rules = PolicyRules.single(base_policy)
+    return PolicyProgram(rules=rules, schedule=schedule)
+
+
 def run(args) -> dict:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if getattr(args, "no_scan_layers", False):
+        cfg = dataclasses.replace(cfg, scan_layers=False)
     mesh = make_host_mesh(args.data_mesh, args.model_mesh)
 
     pipe = TokenPipeline(
@@ -73,21 +112,26 @@ def run(args) -> dict:
         if args.granularity == "channel"
         else tpu_default(args.drop_rate)
     )
+    program = build_program(args, base_policy)
+    sites, depth = lm.site_names(cfg)
+    resolved = program.resolve(sites, depth=depth)
     opt_cfg = adam.AdamConfig(lr=args.lr, clip_norm=1.0, total_steps=args.steps)
 
     a_params, _ = steps_lib.abstract_state(cfg)
     p_sh = shd.param_shardings(mesh, a_params)
     opt_sh = shd.opt_state_shardings(mesh, a_params)
 
-    # one compiled executable per drop-rate bucket (paper: 2 for epoch_bar)
+    # one compiled executable per schedule bucket (paper: 2 for epoch_bar);
+    # the per-step SitePolicies table is the cache key, so per-site
+    # programs cost no extra retraces beyond the schedule's buckets.
     step_cache = {}
 
-    def get_step(rate: float):
-        pol = base_policy.bucketed(rate)
-        if pol.drop_rate not in step_cache:
-            fn = steps_lib.make_train_step(cfg, pol, opt_cfg)
-            step_cache[pol.drop_rate] = jax.jit(fn, donate_argnums=(0, 1))
-        return step_cache[pol.drop_rate]
+    def get_step(step: int):
+        table = resolved.policies_for_step(step)
+        if table not in step_cache:
+            fn = steps_lib.make_train_step(cfg, table, opt_cfg)
+            step_cache[table] = jax.jit(fn, donate_argnums=(0, 1))
+        return step_cache[table]
 
     ckpt_dir = args.ckpt_dir
     saver = ckpt_lib.AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
@@ -137,14 +181,8 @@ def run(args) -> dict:
                 if step == args.fail_at_step and not injected["done"]:
                     injected["done"] = True
                     raise RuntimeError("injected failure (fault-tolerance test)")
-                rate = drop_rate_for_step(
-                    args.scheduler,
-                    step=step,
-                    steps_per_epoch=args.steps_per_epoch,
-                    total_steps=args.steps,
-                    target=args.drop_rate,
-                )
-                fn = get_step(rate)
+                fn = get_step(step)
+                rate = program.schedule.rate(step)
                 batch = jax.tree.map(jnp.asarray, pipe.batch_at(step))
                 t0 = time.time()
                 params, opt_state, metrics = fn(params, opt_state, batch)

@@ -15,7 +15,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import SsPropPolicy
+from repro.core.policy import DENSE, PolicyLike
 from repro.models import layers
 
 
@@ -88,12 +88,16 @@ def _resblock_init(key, c_in, c_out, t_dim):
     return p
 
 
-def _resblock_apply(p, x, temb, policy):
-    h = layers.conv_apply(p["conv1"], jax.nn.silu(_gn(x)), policy, padding=1)
+def _resblock_apply(p, x, temb, policy, prefix):
+    h = layers.conv_apply(
+        p["conv1"], jax.nn.silu(_gn(x)), policy, padding=1, site=f"{prefix}/conv1"
+    )
     h = h + (jax.nn.silu(temb) @ p["temb"]["w"] + p["temb"]["b"])[:, :, None, None]
-    h = layers.conv_apply(p["conv2"], jax.nn.silu(_gn(h)), policy, padding=1)
+    h = layers.conv_apply(
+        p["conv2"], jax.nn.silu(_gn(h)), policy, padding=1, site=f"{prefix}/conv2"
+    )
     if "skip" in p:
-        x = layers.conv_apply(p["skip"], x, policy)
+        x = layers.conv_apply(p["skip"], x, policy, site=f"{prefix}/skip")
     return x + h
 
 
@@ -125,26 +129,53 @@ def _up(x):
     return jnp.repeat(jnp.repeat(x, 2, axis=2), 2, axis=3)
 
 
-def forward(params, x, t, policy: SsPropPolicy = SsPropPolicy()):
+BLOCKS = ("down1", "down2", "down3", "mid1", "mid2", "up3", "up2", "up1")
+
+
+def site_names(base: int = 64):
+    """Enumerate the UNet's conv sites for policy-program resolution.
+
+    ``(sites, depth)`` with depth = number of resblocks in forward
+    order, so ``{down1,up1}/*``-style rules address the outer levels.
+    """
+    c1, c2, c3 = base, base * 2, base * 2
+    chans = {
+        "down1": (c1, c1), "down2": (c1, c2), "down3": (c2, c3),
+        "mid1": (c3, c3), "mid2": (c3, c3),
+        "up3": (c3 + c3, c2), "up2": (c2 + c2, c1), "up1": (c1 + c1, c1),
+    }
+    sites = ["stem"]
+    for blk in BLOCKS:
+        ci, co = chans[blk]
+        sites += [f"{blk}/conv1", f"{blk}/conv2"]
+        if ci != co:
+            sites.append(f"{blk}/skip")
+    sites.append("out")
+    return tuple(sites), len(BLOCKS)
+
+
+def forward(params, x, t, policy: PolicyLike = DENSE):
     """Predict epsilon. x [B, C, H, W], t [B] int32."""
     td = params["t1"]["w"].shape[0]
     temb = time_embedding(t, td)
     temb = jax.nn.silu(temb @ params["t1"]["w"] + params["t1"]["b"])
     temb = temb @ params["t2"]["w"] + params["t2"]["b"]
 
-    h0 = layers.conv_apply(params["stem"], x, policy, padding=1)
-    d1 = _resblock_apply(params["down1"], h0, temb, policy)
-    d2 = _resblock_apply(params["down2"], _down(d1), temb, policy)
-    d3 = _resblock_apply(params["down3"], _down(d2), temb, policy)
-    m = _resblock_apply(params["mid1"], d3, temb, policy)
-    m = _resblock_apply(params["mid2"], m, temb, policy)
-    u3 = _resblock_apply(params["up3"], jnp.concatenate([m, d3], 1), temb, policy)
-    u2 = _resblock_apply(params["up2"], jnp.concatenate([_up(u3), d2], 1), temb, policy)
-    u1 = _resblock_apply(params["up1"], jnp.concatenate([_up(u2), d1], 1), temb, policy)
-    return layers.conv_apply(params["out"], jax.nn.silu(_gn(u1)), policy, padding=1)
+    h0 = layers.conv_apply(params["stem"], x, policy, padding=1, site="stem")
+    d1 = _resblock_apply(params["down1"], h0, temb, policy, "down1")
+    d2 = _resblock_apply(params["down2"], _down(d1), temb, policy, "down2")
+    d3 = _resblock_apply(params["down3"], _down(d2), temb, policy, "down3")
+    m = _resblock_apply(params["mid1"], d3, temb, policy, "mid1")
+    m = _resblock_apply(params["mid2"], m, temb, policy, "mid2")
+    u3 = _resblock_apply(params["up3"], jnp.concatenate([m, d3], 1), temb, policy, "up3")
+    u2 = _resblock_apply(params["up2"], jnp.concatenate([_up(u3), d2], 1), temb, policy, "up2")
+    u1 = _resblock_apply(params["up1"], jnp.concatenate([_up(u2), d1], 1), temb, policy, "up1")
+    return layers.conv_apply(
+        params["out"], jax.nn.silu(_gn(u1)), policy, padding=1, site="out"
+    )
 
 
-def loss_fn(params, sched, x0, rng, policy: SsPropPolicy = SsPropPolicy()):
+def loss_fn(params, sched, x0, rng, policy: PolicyLike = DENSE):
     """Epsilon-prediction MSE at uniformly sampled t."""
     kt, kn = jax.random.split(rng)
     b = x0.shape[0]
@@ -155,7 +186,7 @@ def loss_fn(params, sched, x0, rng, policy: SsPropPolicy = SsPropPolicy()):
     return jnp.mean((pred - noise) ** 2)
 
 
-def sample(params, sched, rng, shape, policy=SsPropPolicy()):
+def sample(params, sched, rng, shape, policy: PolicyLike = DENSE):
     """Ancestral sampling x_T -> x_0 (used by the generation example)."""
     timesteps = sched["betas"].shape[0]
     x = jax.random.normal(rng, shape)
@@ -182,7 +213,9 @@ def flops_per_iter(batch: int, image, base: int = 64, drop_rate: float = 0.0, po
     """Backward-FLOPs (Eq. 6) walk over the UNet's conv layers.
 
     Pass ``policy`` to count the engine's real keep counts (block
-    rounding, Pallas tile padding) instead of the nominal Eq. 9 rate.
+    rounding, Pallas tile padding) instead of the nominal Eq. 9 rate;
+    a resolved :class:`~repro.core.policy.SitePolicies` table over
+    :func:`site_names` counts each conv at its own site's policy.
     """
     from repro.core import flops as F
 
@@ -190,26 +223,34 @@ def flops_per_iter(batch: int, image, base: int = 64, drop_rate: float = 0.0, po
     c1, c2, c3 = base, base * 2, base * 2
     dense = sparse = 0
 
-    def add(c_in, c_out, k, h, w):
+    def add(site, c_in, c_out, k, h, w):
         nonlocal dense, sparse
         dense += F.conv_backward_flops(batch, h, w, c_in, c_out, k)
         if policy is not None:
-            sparse += F.conv_backward_flops_policy(batch, h, w, c_in, c_out, k, policy)
+            sparse += F.conv_backward_flops_site(
+                batch, h, w, c_in, c_out, k, policy, site
+            )
         else:
             sparse += F.conv_backward_flops_ssprop(batch, h, w, c_in, c_out, k, drop_rate)
 
-    add(c, c1, 3, hh, ww)
-    for (ci, co, h) in [(c1, c1, hh), (c1, c2, hh // 2), (c2, c3, hh // 4)]:
-        add(ci, co, 3, h, h)
-        add(co, co, 3, h, h)
+    add("stem", c, c1, 3, hh, ww)
+    for blk, (ci, co, h) in zip(
+        ("down1", "down2", "down3"),
+        [(c1, c1, hh), (c1, c2, hh // 2), (c2, c3, hh // 4)],
+    ):
+        add(f"{blk}/conv1", ci, co, 3, h, h)
+        add(f"{blk}/conv2", co, co, 3, h, h)
         if ci != co:
-            add(ci, co, 1, h, h)
-    for _ in range(2):
-        add(c3, c3, 3, hh // 4, hh // 4)
-        add(c3, c3, 3, hh // 4, hh // 4)
-    for (ci, co, h) in [(c3 + c3, c2, hh // 4), (c2 + c2, c1, hh // 2), (c1 + c1, c1, hh)]:
-        add(ci, co, 3, h, h)
-        add(co, co, 3, h, h)
-        add(ci, co, 1, h, h)
-    add(c1, c, 3, hh, ww)
+            add(f"{blk}/skip", ci, co, 1, h, h)
+    for blk in ("mid1", "mid2"):
+        add(f"{blk}/conv1", c3, c3, 3, hh // 4, hh // 4)
+        add(f"{blk}/conv2", c3, c3, 3, hh // 4, hh // 4)
+    for blk, (ci, co, h) in zip(
+        ("up3", "up2", "up1"),
+        [(c3 + c3, c2, hh // 4), (c2 + c2, c1, hh // 2), (c1 + c1, c1, hh)],
+    ):
+        add(f"{blk}/conv1", ci, co, 3, h, h)
+        add(f"{blk}/conv2", co, co, 3, h, h)
+        add(f"{blk}/skip", ci, co, 1, h, h)
+    add("out", c1, c, 3, hh, ww)
     return dense, sparse

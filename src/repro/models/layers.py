@@ -8,6 +8,13 @@ architectures: transformers, ResNets and the DDPM UNet all sparsify
 through the same ``repro.core.backward`` pipeline. Attention is
 memory-blocked (scan over query chunks with full-K masked scores) so
 32k-prefill fits HBM without materializing the full S×S score tensor.
+
+Every call site carries a *site name* (``site=``): with a plain
+:class:`~repro.core.policy.SsPropPolicy` the name is ignored (the
+legacy global-policy path), while a resolved
+:class:`~repro.core.policy.SitePolicies` table gives each named site
+its own policy — the per-site control surface of a
+:class:`~repro.core.policy.PolicyProgram`.
 """
 from __future__ import annotations
 
@@ -18,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sparse_conv2d, sparse_dense
-from repro.core.policy import SsPropPolicy
+from repro.core.policy import PolicyLike, policy_for
 
 # ----------------------------------------------------------------------
 # init helpers
@@ -34,8 +41,10 @@ def dense_init(key, d_in, d_out, *, bias=False, dtype=jnp.bfloat16, scale=None):
     return p
 
 
-def dense_apply(p, x, policy: SsPropPolicy, key=None):
-    return sparse_dense(x, p["w"], p.get("b"), policy=policy, key=key)
+def dense_apply(p, x, policy: PolicyLike, key=None, site: str = ""):
+    return sparse_dense(
+        x, p["w"], p.get("b"), policy=policy_for(policy, site), key=key
+    )
 
 
 def conv2d_init(key, c_out, c_in, k, *, bias=False, dtype=jnp.float32):
@@ -53,13 +62,14 @@ def conv2d_init(key, c_out, c_in, k, *, bias=False, dtype=jnp.float32):
 def conv_apply(
     p,
     x,
-    policy: SsPropPolicy,
+    policy: PolicyLike,
     *,
     stride=1,
     padding=0,
     dilation=1,
     groups=1,
     key=None,
+    site: str = "",
 ):
     """The single conv call site the CNN models share (mirrors
     :func:`dense_apply`): params dict in, ssProp-backward conv out."""
@@ -71,7 +81,7 @@ def conv_apply(
         padding=padding,
         dilation=dilation,
         groups=groups,
-        policy=policy,
+        policy=policy_for(policy, site),
         key=key,
     )
 
@@ -230,7 +240,7 @@ def attn_apply(
     p,
     x,
     cfg,
-    policy: SsPropPolicy,
+    policy: PolicyLike,
     *,
     causal=True,
     positions=None,
@@ -240,8 +250,11 @@ def attn_apply(
     block_tables=None,
     x_kv=None,
     use_rope=True,
+    site: str = "attn",
 ):
-    """Self- or cross-attention.
+    """Self- or cross-attention. ``site`` prefixes the per-projection
+    policy lookups (``{site}/q`` … ``{site}/o`` — "attn" in the decoder
+    stack and encoder, "self"/"cross" in the cross-decoder).
 
     x [B,S,d]. ``x_kv`` switches to cross-attention (no cache, no rope on
     kv source positions beyond its own). ``kv_cache`` = dict(k, v) of
@@ -266,10 +279,14 @@ def attn_apply(
     """
     b, s, _ = x.shape
     hd = cfg.head_dim
-    q = dense_apply(p["q"], x, policy).reshape(b, s, cfg.n_heads, hd)
+    q = dense_apply(p["q"], x, policy, site=f"{site}/q").reshape(b, s, cfg.n_heads, hd)
     src = x if x_kv is None else x_kv
-    k = dense_apply(p["k"], src, policy).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
-    v = dense_apply(p["v"], src, policy).reshape(b, src.shape[1], cfg.n_kv_heads, hd)
+    k = dense_apply(p["k"], src, policy, site=f"{site}/k").reshape(
+        b, src.shape[1], cfg.n_kv_heads, hd
+    )
+    v = dense_apply(p["v"], src, policy, site=f"{site}/v").reshape(
+        b, src.shape[1], cfg.n_kv_heads, hd
+    )
 
     per_slot = cache_pos is not None and getattr(cache_pos, "ndim", 0) >= 1
     if positions is None:
@@ -335,7 +352,7 @@ def attn_apply(
         qpos=qpos,
     )
     out = out.reshape(b, s, cfg.n_heads * hd)
-    return dense_apply(p["o"], out, policy), new_cache
+    return dense_apply(p["o"], out, policy, site=f"{site}/o"), new_cache
 
 
 # ----------------------------------------------------------------------
@@ -360,12 +377,14 @@ def mlp_init(key, d_model, d_ff, dtype=jnp.bfloat16, gated: bool = True):
     return p
 
 
-def mlp_apply(p, x, act: str, policy: SsPropPolicy):
+def mlp_apply(p, x, act: str, policy: PolicyLike, site: str = "mlp"):
     if "gate" in p:
-        h = _ACTS[act](dense_apply(p["gate"], x, policy)) * dense_apply(p["up"], x, policy)
+        h = _ACTS[act](dense_apply(p["gate"], x, policy, site=f"{site}/gate")) * dense_apply(
+            p["up"], x, policy, site=f"{site}/up"
+        )
     else:
-        h = _ACTS[act](dense_apply(p["up"], x, policy))
-    return dense_apply(p["down"], h, policy)
+        h = _ACTS[act](dense_apply(p["up"], x, policy, site=f"{site}/up"))
+    return dense_apply(p["down"], h, policy, site=f"{site}/down")
 
 
 # ----------------------------------------------------------------------

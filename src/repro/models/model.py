@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.policy import SsPropPolicy
+from repro.core.policy import DENSE, PolicyLike
 from repro.models import layers, transformer
 
 
@@ -42,6 +42,22 @@ def init_params(cfg: ModelConfig, rng: jax.Array) -> Dict[str, Any]:
     return params
 
 
+def site_names(cfg: ModelConfig):
+    """Enumerate every sparsifiable call site of this model.
+
+    Returns ``(sites, depth)`` — the inputs
+    :meth:`repro.core.policy.PolicyProgram.resolve` needs: stable site
+    names (``layer_{li}/attn/q`` …, see
+    :func:`repro.models.transformer.stack_sites`) plus the depth that
+    negative layer indices in rule patterns resolve against.
+    """
+    if cfg.family == "encdec":
+        sites = transformer.encoder_sites(cfg) + transformer.cross_decoder_sites(cfg)
+    else:
+        sites = transformer.stack_sites(cfg)
+    return sites, cfg.n_layers
+
+
 def _embed_inputs(cfg, params, batch):
     """Token embeddings, with the VLM patch prefix fused in."""
     x = layers.embed_apply(params["embed"], batch["tokens"])
@@ -55,7 +71,7 @@ def forward(
     cfg: ModelConfig,
     params,
     batch: Dict[str, jax.Array],
-    policy: SsPropPolicy = SsPropPolicy(),
+    policy: PolicyLike = DENSE,
 ) -> Tuple[jax.Array, jax.Array]:
     """Full-sequence forward. Returns (logits fp32 [B, S, V], aux_loss)."""
     x = _embed_inputs(cfg, params, batch)
@@ -77,7 +93,7 @@ def loss_fn(
     cfg: ModelConfig,
     params,
     batch: Dict[str, jax.Array],
-    policy: SsPropPolicy = SsPropPolicy(),
+    policy: PolicyLike = DENSE,
 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Next-token cross-entropy (+0.01·MoE aux)."""
     logits, aux = forward(cfg, params, batch, policy)
@@ -146,7 +162,7 @@ def decode_slots(
     *,
     enc_out: Optional[jax.Array] = None,
     block_tables: Optional[jax.Array] = None,  # [B, NB] int32 (paged cache)
-    policy: SsPropPolicy = SsPropPolicy(),
+    policy: PolicyLike = DENSE,
 ):
     """Mixed prefill/decode step over independently positioned slots.
 
@@ -235,7 +251,7 @@ def decode_step(
     pos: jax.Array,  # scalar int32: current write position
     *,
     enc_out: Optional[jax.Array] = None,
-    policy: SsPropPolicy = SsPropPolicy(),
+    policy: PolicyLike = DENSE,
 ):
     """One lock-step decode step (all rows at the same ``pos``).
 
@@ -262,7 +278,7 @@ def decode_step(
     return logits, new_cache
 
 
-def encode(cfg: ModelConfig, params, frames: jax.Array, policy=SsPropPolicy()):
+def encode(cfg: ModelConfig, params, frames: jax.Array, policy: PolicyLike = DENSE):
     """Whisper encoder pass (used once before decode)."""
     enc = transformer.encoder_apply(params["encoder"], frames, cfg, policy)
     return layers.rmsnorm_apply(params["enc_norm"], enc, cfg.norm_eps)

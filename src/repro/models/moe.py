@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sparse_dense
-from repro.core.policy import SsPropPolicy
+from repro.core.policy import DENSE, PolicyLike, policy_for
 from repro.models import layers
 
 
@@ -36,16 +36,28 @@ def moe_init(key, cfg, dtype=jnp.bfloat16):
     return p
 
 
-def _expert_ffn(gate_w, up_w, down_w, xb, act, policy):
-    """One expert's gated FFN on its [capacity, d] buffer (vmapped)."""
-    h = layers._ACTS[act](sparse_dense(xb, gate_w, policy=policy)) * sparse_dense(
-        xb, up_w, policy=policy
+def _expert_ffn(gate_w, up_w, down_w, xb, act, pols):
+    """One expert's gated FFN on its [capacity, d] buffer (vmapped).
+
+    ``pols`` = (gate, up, down) per-site policies, resolved before the
+    vmap (sites ``moe/gate``, ``moe/up``, ``moe/down``).
+    """
+    h = layers._ACTS[act](sparse_dense(xb, gate_w, policy=pols[0])) * sparse_dense(
+        xb, up_w, policy=pols[1]
     )
-    return sparse_dense(h, down_w, policy=policy)
+    return sparse_dense(h, down_w, policy=pols[2])
+
+
+def _expert_policies(policy: PolicyLike):
+    return (
+        policy_for(policy, "moe/gate"),
+        policy_for(policy, "moe/up"),
+        policy_for(policy, "moe/down"),
+    )
 
 
 def moe_apply(
-    p, x, cfg, policy: SsPropPolicy, *, full_capacity: bool = False,
+    p, x, cfg, policy: PolicyLike, *, full_capacity: bool = False,
     dp_groups: int = 0,
 ):
     """x [B, S, d] -> ([B, S, d], aux_metrics).
@@ -72,7 +84,7 @@ def moe_apply(
     tokens = b * s
     xf = x.reshape(tokens, d)
 
-    logits = layers.dense_apply(p["router"], xf.astype(jnp.float32), SsPropPolicy())
+    logits = layers.dense_apply(p["router"], xf.astype(jnp.float32), DENSE)
     probs = jax.nn.softmax(logits, axis=-1)  # [T, E]
     topw, topi = jax.lax.top_k(probs, k)  # [T, k]
     topw = topw / jnp.clip(topw.sum(-1, keepdims=True), 1e-9)
@@ -103,7 +115,7 @@ def moe_apply(
     )
 
     out_buf = jax.vmap(_expert_ffn, in_axes=(0, 0, 0, 0, None, None))(
-        p["gate"], p["up"], p["down"], buf, cfg.act, policy
+        p["gate"], p["up"], p["down"], buf, cfg.act, _expert_policies(policy)
     )  # [E, cap, d]
 
     # ---- combine ----
@@ -116,13 +128,13 @@ def moe_apply(
     y = contrib.sum(axis=1).astype(x.dtype)
 
     if "shared" in p:
-        y = y + layers.mlp_apply(p["shared"], xf, cfg.act, policy)
+        y = y + layers.mlp_apply(p["shared"], xf, cfg.act, policy, site="moe/shared")
 
     frac_dropped = 1.0 - keep.mean()
     return y.reshape(b, s, d), {"aux_loss": aux_loss, "dropped": frac_dropped}
 
 
-def _moe_apply_grouped(p, x, cfg, policy: SsPropPolicy, groups: int):
+def _moe_apply_grouped(p, x, cfg, policy: PolicyLike, groups: int):
     """DP-local dispatch: all index ops carry a leading [G] group axis.
 
     Token groups correspond to the data shards (G = dp size), so sorts,
@@ -171,7 +183,7 @@ def _moe_apply_grouped(p, x, cfg, policy: SsPropPolicy, groups: int):
     # the ssProp backward on every expert matmul.
     per_expert = jax.vmap(_expert_ffn, in_axes=(0, 0, 0, 0, None, None))
     out_buf = jax.vmap(per_expert, in_axes=(None, None, None, 0, None, None))(
-        p["gate"], p["up"], p["down"], buf, cfg.act, policy
+        p["gate"], p["up"], p["down"], buf, cfg.act, _expert_policies(policy)
     )  # [G, E, cap, d]
 
     gathered = out_buf[gidx, sorted_e, pos_c]  # [G, tg*k, d]
@@ -183,7 +195,7 @@ def _moe_apply_grouped(p, x, cfg, policy: SsPropPolicy, groups: int):
     y = contrib.sum(axis=2).astype(x.dtype)
 
     if "shared" in p:
-        y = y + layers.mlp_apply(p["shared"], xf, cfg.act, policy)
+        y = y + layers.mlp_apply(p["shared"], xf, cfg.act, policy, site="moe/shared")
 
     frac_dropped = 1.0 - keep.mean()
     return y.reshape(b, s, d), {"aux_loss": aux_loss, "dropped": frac_dropped}

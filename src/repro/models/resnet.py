@@ -18,7 +18,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import SsPropPolicy
+from repro.core.policy import DENSE, PolicyLike
 from repro.models import layers
 
 LAYOUTS = {
@@ -133,27 +133,56 @@ def block_strides(name: str):
     return out
 
 
-def _conv(p, x, stride, padding, policy, key=None):
-    return layers.conv_apply(p, x, policy, stride=stride, padding=padding, key=key)
+def site_names(name: str):
+    """Enumerate this ResNet's conv sites for policy-program resolution.
+
+    ``(sites, depth)`` with depth = number of residual blocks, so rule
+    patterns like ``block_{0,-1}/*`` address the first/last block.
+    """
+    kind, stages = LAYOUTS[name]
+    widths = (64, 128, 256, 512)
+    sites = ["stem"]
+    c_in, bi = 64, 0
+    for si, (n, w) in enumerate(zip(stages, widths)):
+        for b in range(n):
+            stride = 2 if (b == 0 and si > 0) else 1
+            convs = ("conv1", "conv2") if kind == "basic" else ("conv1", "conv2", "conv3")
+            sites.extend(f"block_{bi}/{c}" for c in convs)
+            c_out = w if kind == "basic" else w * 4
+            if stride != 1 or c_in != c_out:
+                sites.append(f"block_{bi}/down")
+            c_in = c_out
+            bi += 1
+    return tuple(sites), bi
 
 
-def _basic_apply(p, x, stride, policy, train):
-    h, _ = bn_apply(p["bn1"], _conv(p["conv1"], x, stride, 1, policy), train)
+def _conv(p, x, stride, padding, policy, site, key=None):
+    return layers.conv_apply(
+        p, x, policy, stride=stride, padding=padding, key=key, site=site
+    )
+
+
+def _basic_apply(p, x, stride, policy, train, prefix):
+    h, _ = bn_apply(p["bn1"], _conv(p["conv1"], x, stride, 1, policy, f"{prefix}/conv1"), train)
     h = jax.nn.relu(h)
-    h, _ = bn_apply(p["bn2"], _conv(p["conv2"], h, 1, 1, policy), train)
+    h, _ = bn_apply(p["bn2"], _conv(p["conv2"], h, 1, 1, policy, f"{prefix}/conv2"), train)
     if "down_conv" in p:
-        x, _ = bn_apply(p["down_bn"], _conv(p["down_conv"], x, stride, 0, policy), train)
+        x, _ = bn_apply(
+            p["down_bn"], _conv(p["down_conv"], x, stride, 0, policy, f"{prefix}/down"), train
+        )
     return jax.nn.relu(h + x)
 
 
-def _bottleneck_apply(p, x, stride, policy, train):
-    h, _ = bn_apply(p["bn1"], _conv(p["conv1"], x, 1, 0, policy), train)
+def _bottleneck_apply(p, x, stride, policy, train, prefix):
+    h, _ = bn_apply(p["bn1"], _conv(p["conv1"], x, 1, 0, policy, f"{prefix}/conv1"), train)
     h = jax.nn.relu(h)
-    h, _ = bn_apply(p["bn2"], _conv(p["conv2"], h, stride, 1, policy), train)
+    h, _ = bn_apply(p["bn2"], _conv(p["conv2"], h, stride, 1, policy, f"{prefix}/conv2"), train)
     h = jax.nn.relu(h)
-    h, _ = bn_apply(p["bn3"], _conv(p["conv3"], h, 1, 0, policy), train)
+    h, _ = bn_apply(p["bn3"], _conv(p["conv3"], h, 1, 0, policy, f"{prefix}/conv3"), train)
     if "down_conv" in p:
-        x, _ = bn_apply(p["down_bn"], _conv(p["down_conv"], x, stride, 0, policy), train)
+        x, _ = bn_apply(
+            p["down_bn"], _conv(p["down_conv"], x, stride, 0, policy, f"{prefix}/down"), train
+        )
     return jax.nn.relu(h + x)
 
 
@@ -161,7 +190,7 @@ def forward(
     name: str,
     params,
     x: jax.Array,
-    policy: SsPropPolicy = SsPropPolicy(),
+    policy: PolicyLike = DENSE,
     *,
     train: bool = True,
     small_stem: bool = True,
@@ -172,18 +201,20 @@ def forward(
     kind, _ = LAYOUTS[name]
     stem_stride = 1 if small_stem else 2
     stem_pad = 1 if small_stem else 3
-    h, _ = bn_apply(params["stem_bn"], _conv(params["stem"], x, stem_stride, stem_pad, policy), train)
+    h, _ = bn_apply(
+        params["stem_bn"], _conv(params["stem"], x, stem_stride, stem_pad, policy, "stem"), train
+    )
     h = jax.nn.relu(h)
     if not small_stem:
         h = -jax.lax.reduce_window(
             -h, jnp.inf, jax.lax.min, (1, 1, 3, 3), (1, 1, 2, 2), "SAME"
         )
     dk = dropout_key
-    for blk, stride in zip(params["blocks"], block_strides(name)):
+    for bi, (blk, stride) in enumerate(zip(params["blocks"], block_strides(name))):
         if kind == "basic":
-            h = _basic_apply(blk, h, stride, policy, train)
+            h = _basic_apply(blk, h, stride, policy, train, f"block_{bi}")
         else:
-            h = _bottleneck_apply(blk, h, stride, policy, train)
+            h = _bottleneck_apply(blk, h, stride, policy, train, f"block_{bi}")
         if dropout_rate > 0.0 and train:
             dk, sub = jax.random.split(dk)
             keep = jax.random.bernoulli(sub, 1.0 - dropout_rate, h.shape)
@@ -197,7 +228,7 @@ def flops_per_iter(
     batch: int,
     image: Tuple[int, int, int],
     drop_rate: float = 0.0,
-    policy: Optional[SsPropPolicy] = None,
+    policy: Optional[PolicyLike] = None,
 ):
     """Backward FLOPs per iteration from the paper's Eq. 6/7 model.
 
@@ -205,6 +236,11 @@ def flops_per_iter(
     Returns (dense_flops, ssprop_flops). The ssProp count uses the
     nominal Eq. 9 at ``drop_rate``; pass ``policy`` instead to count the
     engine's real keep counts (block rounding, Pallas tile padding).
+    ``policy`` may be a resolved
+    :class:`~repro.core.policy.SitePolicies` table over
+    :func:`site_names` — each conv then counts at its *own* site's keep
+    count, so per-site programs get honest per-layer accounting instead
+    of one global rate.
     """
     from repro.core import flops as F
 
@@ -213,12 +249,12 @@ def flops_per_iter(
     small = hh <= 64
     dense = sparse = 0
 
-    def add_conv(c_in, c_out, k, h_out, w_out):
+    def add_conv(site, c_in, c_out, k, h_out, w_out):
         nonlocal dense, sparse
         dense += F.conv_backward_flops(batch, h_out, w_out, c_in, c_out, k)
         if policy is not None:
-            sparse += F.conv_backward_flops_policy(
-                batch, h_out, w_out, c_in, c_out, k, policy
+            sparse += F.conv_backward_flops_site(
+                batch, h_out, w_out, c_in, c_out, k, policy, site
             )
         else:
             sparse += F.conv_backward_flops_ssprop(
@@ -229,30 +265,32 @@ def flops_per_iter(
         sparse += bn
 
     if small:
-        add_conv(c, 64, 3, hh, ww)
+        add_conv("stem", c, 64, 3, hh, ww)
         h_cur, w_cur = hh, ww
     else:
-        add_conv(c, 64, 7, hh // 2, ww // 2)
+        add_conv("stem", c, 64, 7, hh // 2, ww // 2)
         h_cur, w_cur = hh // 4, ww // 4  # stem stride + maxpool
     c_in = 64
     widths = (64, 128, 256, 512)
+    bi = 0
     for si, (n, w) in enumerate(zip(stages, widths)):
         for b in range(n):
             stride = 2 if (b == 0 and si > 0) else 1
             h_cur2, w_cur2 = h_cur // stride, w_cur // stride
             if kind == "basic":
-                add_conv(c_in, w, 3, h_cur2, w_cur2)
-                add_conv(w, w, 3, h_cur2, w_cur2)
+                add_conv(f"block_{bi}/conv1", c_in, w, 3, h_cur2, w_cur2)
+                add_conv(f"block_{bi}/conv2", w, w, 3, h_cur2, w_cur2)
                 if stride != 1 or c_in != w:
-                    add_conv(c_in, w, 1, h_cur2, w_cur2)
+                    add_conv(f"block_{bi}/down", c_in, w, 1, h_cur2, w_cur2)
                 c_out = w
             else:
-                add_conv(c_in, w, 1, h_cur, w_cur)
-                add_conv(w, w, 3, h_cur2, w_cur2)
-                add_conv(w, w * 4, 1, h_cur2, w_cur2)
+                add_conv(f"block_{bi}/conv1", c_in, w, 1, h_cur, w_cur)
+                add_conv(f"block_{bi}/conv2", w, w, 3, h_cur2, w_cur2)
+                add_conv(f"block_{bi}/conv3", w, w * 4, 1, h_cur2, w_cur2)
                 if stride != 1 or c_in != w * 4:
-                    add_conv(c_in, w * 4, 1, h_cur2, w_cur2)
+                    add_conv(f"block_{bi}/down", c_in, w * 4, 1, h_cur2, w_cur2)
                 c_out = w * 4
             c_in = c_out
             h_cur, w_cur = h_cur2, w_cur2
+            bi += 1
     return dense, sparse

@@ -14,8 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import sparse_dense
-from repro.core.policy import SsPropPolicy
+from repro.core.policy import PolicyLike
 from repro.models import layers
 
 _CONV_K = 4  # depthwise causal conv width (mamba default)
@@ -118,7 +117,7 @@ def ssd_chunked(x, dt, a_log, b_mat, c_mat, chunk):
     return y
 
 
-def ssm_apply(p, x, cfg, policy: SsPropPolicy, cache=None, token_valid=None):
+def ssm_apply(p, x, cfg, policy: PolicyLike, cache=None, token_valid=None):
     """Mamba-2 block. x [B, S, d].
 
     cache (decode): {"conv": [B, K-1, conv_ch], "state": [B, H, N, P]}.
@@ -131,7 +130,7 @@ def ssm_apply(p, x, cfg, policy: SsPropPolicy, cache=None, token_valid=None):
     di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
     pd = cfg.ssm_headdim
 
-    proj = layers.dense_apply(p["in_proj"], x, policy)
+    proj = layers.dense_apply(p["in_proj"], x, policy, site="ssm/in_proj")
     z, xbc, dt = _split_proj(cfg, proj)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
 
@@ -196,7 +195,7 @@ def ssm_apply(p, x, cfg, policy: SsPropPolicy, cache=None, token_valid=None):
     y = y.reshape(bsz, s, di).astype(x.dtype)
     y = y * jax.nn.silu(z)
     y = layers.rmsnorm_apply(p["norm"], y, cfg.norm_eps)
-    out = layers.dense_apply(p["out_proj"], y, policy)
+    out = layers.dense_apply(p["out_proj"], y, policy, site="ssm/out_proj")
     return out, new_cache
 
 

@@ -7,17 +7,27 @@ pattern repeats every ``period_len`` layers; parameters are stacked
 ``lax.scan`` over periods whose body unrolls the slots. This keeps the
 HLO one-period-sized (compile time sane at 512 devices) and composes
 with ``jax.checkpoint`` for activation memory.
+Per-site policies: every projection carries a site name
+``layer_{li}/{role}/{proj}`` (see :func:`stack_sites`). A
+:class:`~repro.core.policy.SitePolicies` table threads through
+``stack_apply`` exactly like a plain policy; the table is scoped to
+each layer before the slot bodies run. With ``scan_layers=True`` the
+whole stack shares one trace, so the resolved policies must be
+depth-uniform (same table at every layer) — depth-varying programs
+require ``scan_layers=False`` (the unrolled path traces each period
+separately and so supports a different policy per layer).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+import functools
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.policy import SsPropPolicy
+from repro.core.policy import PolicyLike, SitePolicies, site_tables_equal
 from repro.models import layers, moe, ssm
 
 
@@ -63,6 +73,75 @@ def n_periods(cfg: ModelConfig) -> int:
     return cfg.n_layers // plen
 
 
+def slot_sites(cfg: ModelConfig, slot: Slot) -> Tuple[str, ...]:
+    """Layer-relative site names of one period slot's projections."""
+    if slot.mixer == "attn":
+        sites = ["attn/q", "attn/k", "attn/v", "attn/o"]
+    else:
+        sites = ["ssm/in_proj", "ssm/out_proj"]
+    if slot.ffn == "moe":
+        sites += ["moe/gate", "moe/up", "moe/down"]
+        if cfg.n_shared_experts:
+            sites += ["moe/shared/up", "moe/shared/gate", "moe/shared/down"]
+    elif slot.ffn == "mlp":
+        sites += ["mlp/up"] + (["mlp/gate"] if cfg.gated_mlp else []) + ["mlp/down"]
+    return tuple(sites)
+
+
+def stack_sites(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Every sparsifiable site of the decoder stack, ``layer_{li}/...``."""
+    slots = period_pattern(cfg)
+    plen = len(slots)
+    out = []
+    for li in range(cfg.n_layers):
+        out.extend(f"layer_{li}/{s}" for s in slot_sites(cfg, slots[li % plen]))
+    return tuple(out)
+
+
+def _mlp_sites(cfg) -> Tuple[str, ...]:
+    return ("mlp/up",) + (("mlp/gate",) if cfg.gated_mlp else ()) + ("mlp/down",)
+
+
+def encoder_sites(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Whisper encoder sites, ``enc/layer_{i}/...``."""
+    per = ("attn/q", "attn/k", "attn/v", "attn/o") + _mlp_sites(cfg)
+    return tuple(
+        f"enc/layer_{i}/{s}" for i in range(cfg.n_enc_layers) for s in per
+    )
+
+
+def cross_decoder_sites(cfg: ModelConfig) -> Tuple[str, ...]:
+    """Cross-decoder sites: self- and cross-attention plus the MLP."""
+    per = tuple(
+        f"{role}/{proj}" for role in ("self", "cross") for proj in ("q", "k", "v", "o")
+    ) + _mlp_sites(cfg)
+    return tuple(f"layer_{li}/{s}" for li in range(cfg.n_layers) for s in per)
+
+
+def _layer_scopes(policy: PolicyLike, n_layers: int):
+    """Per-layer policy tables (or the plain policy broadcast)."""
+    if not isinstance(policy, SitePolicies):
+        return [policy] * n_layers
+    return [policy.scoped(f"layer_{li}") for li in range(n_layers)]
+
+
+def _check_scan_uniform(per_layer, plen: int, what: str):
+    """Under ``scan_layers=True`` every period shares one trace, so the
+    resolved policies must agree across periods slot-by-slot; reject a
+    depth-varying program with an actionable error instead of silently
+    applying the first period's policies everywhere."""
+    if not any(isinstance(p, SitePolicies) for p in per_layer):
+        return
+    for si in range(plen):
+        if not site_tables_equal(per_layer[si::plen]):
+            raise ValueError(
+                f"{what}: policy program varies with depth but "
+                "scan_layers=True shares one trace across layers; set "
+                "scan_layers=False (the unrolled path) to use per-depth "
+                "rules"
+            )
+
+
 # ----------------------------------------------------------------------
 # per-slot init / apply
 # ----------------------------------------------------------------------
@@ -94,7 +173,7 @@ def _slot_apply(
     x,
     cfg: ModelConfig,
     slot: Slot,
-    policy: SsPropPolicy,
+    policy: PolicyLike,
     *,
     positions=None,
     cache=None,
@@ -183,7 +262,7 @@ def stack_apply(
     params,
     x,
     cfg: ModelConfig,
-    policy: SsPropPolicy,
+    policy: PolicyLike,
     *,
     positions=None,
     caches=None,
@@ -191,11 +270,19 @@ def stack_apply(
     token_valid=None,
     block_tables=None,
 ):
-    """Run the full stack. Returns (x, new_caches, total_aux)."""
-    slots = period_pattern(cfg)
-    decode = caches is not None
+    """Run the full stack. Returns (x, new_caches, total_aux).
 
-    def period_body(carry, xs):
+    ``policy`` is a plain :class:`SsPropPolicy` (every site) or a
+    resolved :class:`SitePolicies` table over :func:`stack_sites` names;
+    the table is scoped per layer here. Depth-varying tables require
+    ``scan_layers=False`` (see :func:`_check_scan_uniform`).
+    """
+    slots = period_pattern(cfg)
+    plen = len(slots)
+    decode = caches is not None
+    per_layer = _layer_scopes(policy, cfg.n_layers)
+
+    def period_body(carry, xs, slot_pols):
         h, aux = carry
         slot_params, slot_caches = xs
         new_slot_caches = []
@@ -206,7 +293,7 @@ def stack_apply(
                 h,
                 cfg,
                 slot,
-                policy,
+                slot_pols[i],
                 positions=positions,
                 cache=cache_i,
                 cache_pos=cache_pos,
@@ -217,14 +304,18 @@ def stack_apply(
             new_slot_caches.append(nc if decode else None)
         return (h, aux), tuple(new_slot_caches)
 
-    body = period_body
-    if cfg.remat and not decode:
-        body = jax.checkpoint(
-            period_body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
-        )
+    def make_body(slot_pols):
+        body = functools.partial(period_body, slot_pols=slot_pols)
+        if cfg.remat and not decode:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            )
+        return body
 
     xs = (params["slots"], caches if decode else None)
     if cfg.scan_layers:
+        _check_scan_uniform(per_layer, plen, "stack_apply")
+        body = make_body(tuple(per_layer[:plen]))
         (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
     else:
         aux = jnp.zeros((), jnp.float32)
@@ -233,6 +324,7 @@ def stack_apply(
         for pi in range(np_):
             sp = jax.tree.map(lambda a: a[pi], params["slots"])
             sc = jax.tree.map(lambda a: a[pi], caches) if decode else None
+            body = make_body(tuple(per_layer[pi * plen : (pi + 1) * plen]))
             (x, aux), nc = body((x, aux), (sp, sc))
             ys.append(nc)
         new_caches = (
@@ -262,25 +354,31 @@ def encoder_init(key, cfg: ModelConfig):
     return jax.vmap(one)(keys)
 
 
-def encoder_apply(params, x, cfg, policy):
-    def body(h, p):
+def encoder_apply(params, x, cfg, policy: PolicyLike):
+    enc_scope = policy.scoped("enc") if isinstance(policy, SitePolicies) else policy
+    per_layer = _layer_scopes(enc_scope, cfg.n_enc_layers)
+
+    def body(h, p, pol):
         a, _ = layers.attn_apply(
-            p["attn"], layers.rmsnorm_apply(p["norm1"], h, cfg.norm_eps), cfg, policy,
+            p["attn"], layers.rmsnorm_apply(p["norm1"], h, cfg.norm_eps), cfg, pol,
             causal=False,
         )
         h = h + a
         m = layers.mlp_apply(
-            p["mlp"], layers.rmsnorm_apply(p["norm2"], h, cfg.norm_eps), cfg.act, policy
+            p["mlp"], layers.rmsnorm_apply(p["norm2"], h, cfg.norm_eps), cfg.act, pol
         )
         return h + m, None
 
-    if cfg.remat:
-        body = jax.checkpoint(body)
+    def make_body(pol):
+        b = functools.partial(body, pol=pol)
+        return jax.checkpoint(b) if cfg.remat else b
+
     if cfg.scan_layers:
-        x, _ = jax.lax.scan(body, x, params)
+        _check_scan_uniform(per_layer, 1, "encoder_apply")
+        x, _ = jax.lax.scan(make_body(per_layer[0] if per_layer else policy), x, params)
     else:
         for i in range(cfg.n_enc_layers):
-            x, _ = body(x, jax.tree.map(lambda a: a[i], params))
+            x, _ = make_body(per_layer[i])(x, jax.tree.map(lambda a: a[i], params))
     return x
 
 
@@ -303,41 +401,50 @@ def cross_decoder_init(key, cfg: ModelConfig):
 
 
 def cross_decoder_apply(
-    params, x, enc_out, cfg, policy, *, positions=None, caches=None, cache_pos=None,
-    token_valid=None, block_tables=None,
+    params, x, enc_out, cfg, policy: PolicyLike, *, positions=None, caches=None,
+    cache_pos=None, token_valid=None, block_tables=None,
 ):
     decode = caches is not None
+    per_layer = _layer_scopes(policy, cfg.n_layers)
 
-    def body(carry, xs):
+    def body(carry, xs, pol):
         h = carry
         p, cache = xs
         a, nc = layers.attn_apply(
-            p["self"], layers.rmsnorm_apply(p["norm1"], h, cfg.norm_eps), cfg, policy,
+            p["self"], layers.rmsnorm_apply(p["norm1"], h, cfg.norm_eps), cfg, pol,
             causal=True, positions=positions,
             kv_cache=cache if decode else None, cache_pos=cache_pos,
             token_valid=token_valid, block_tables=block_tables,
+            site="self",
         )
         h = h + a
         c, _ = layers.attn_apply(
-            p["cross"], layers.rmsnorm_apply(p["norm_x"], h, cfg.norm_eps), cfg, policy,
-            causal=False, x_kv=enc_out, use_rope=False,
+            p["cross"], layers.rmsnorm_apply(p["norm_x"], h, cfg.norm_eps), cfg, pol,
+            causal=False, x_kv=enc_out, use_rope=False, site="cross",
         )
         h = h + c
         m = layers.mlp_apply(
-            p["mlp"], layers.rmsnorm_apply(p["norm2"], h, cfg.norm_eps), cfg.act, policy
+            p["mlp"], layers.rmsnorm_apply(p["norm2"], h, cfg.norm_eps), cfg.act, pol
         )
         return h + m, (nc if decode else 0.0)
 
-    if cfg.remat and not decode:
-        body = jax.checkpoint(body)
+    def make_body(pol):
+        b = functools.partial(body, pol=pol)
+        if cfg.remat and not decode:
+            b = jax.checkpoint(b)
+        return b
+
     if cfg.scan_layers:
-        x, new_caches = jax.lax.scan(body, x, (params, caches if decode else None))
+        _check_scan_uniform(per_layer, 1, "cross_decoder_apply")
+        x, new_caches = jax.lax.scan(
+            make_body(per_layer[0]), x, (params, caches if decode else None)
+        )
     else:
         ys = []
         for i in range(cfg.n_layers):
             p_i = jax.tree.map(lambda a: a[i], params)
             c_i = jax.tree.map(lambda a: a[i], caches) if decode else None
-            x, nc = body(x, (p_i, c_i))
+            x, nc = make_body(per_layer[i])(x, (p_i, c_i))
             ys.append(nc)
         new_caches = jax.tree.map(lambda *a: jnp.stack(a), *ys) if decode else None
     return x, (new_caches if decode else None)

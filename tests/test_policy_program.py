@@ -1,0 +1,500 @@
+"""Policy programs: Schedule objects, per-site rules, end-to-end parity.
+
+Covers the redesigned control surface:
+
+* golden values for every ``Schedule.rate`` / ``average_rate`` (the
+  epoch bar must average to target/2 — the paper's ~40% saving claim);
+* the legacy string shim (``drop_rate_for_step``) stays consistent with
+  the objects, and bad scheduler names fail at policy construction;
+* rule-pattern grammar (globs, brace sets, negative indices, ranges),
+  first-match-wins resolution and table scoping;
+* the jit-cache property: a program never produces more distinct
+  per-step site tables than ``len(rate_buckets)``;
+* the trivial one-rule program is bit-exact with the global-policy
+  path, and genuinely per-site programs train end-to-end on two model
+  families with FLOPs accounted over the resolved site table.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core import flops, schedulers
+from repro.core.policy import (
+    DENSE,
+    PolicyProgram,
+    PolicyRules,
+    SitePolicies,
+    SsPropPolicy,
+    expand_pattern,
+    paper_default,
+    pattern_matches,
+    policy_for,
+)
+from repro.core.schedulers import (
+    Bar,
+    Constant,
+    Cosine,
+    EpochBar,
+    Linear,
+    PeriodicBar,
+    make_schedule,
+)
+from repro.data.pipeline import ImagePipeline, ImagePipelineConfig
+from repro.launch import steps as steps_lib
+from repro.models import model as lm
+from repro.models import resnet
+from repro.optim import adam
+
+
+# ----------------------------------------------------------------------
+# schedules
+# ----------------------------------------------------------------------
+
+
+class TestScheduleGolden:
+    def test_constant(self):
+        s = Constant(target=0.8)
+        assert [s.rate(i) for i in (0, 7, 99)] == [0.8, 0.8, 0.8]
+        assert s.average_rate(10) == 0.8
+        assert s.average_rate(0) == 0.0
+
+    def test_linear(self):
+        s = Linear(target=0.8, total_steps=5)
+        np.testing.assert_allclose(
+            [s.rate(i) for i in range(5)], [0.0, 0.2, 0.4, 0.6, 0.8]
+        )
+        np.testing.assert_allclose(s.average_rate(5), 0.4)
+
+    def test_cosine(self):
+        s = Cosine(target=0.8, total_steps=3)
+        np.testing.assert_allclose(
+            [s.rate(i) for i in range(3)], [0.0, 0.4, 0.8], atol=1e-12
+        )
+
+    def test_bar(self):
+        s = Bar(target=0.6, total_steps=10)
+        assert [s.rate(i) for i in range(10)] == [0.0] * 5 + [0.6] * 5
+        np.testing.assert_allclose(s.average_rate(10), 0.3)
+
+    def test_epoch_bar(self):
+        s = EpochBar(target=0.8, steps_per_epoch=3)
+        assert [s.rate(i) for i in range(9)] == [0.0] * 3 + [0.8] * 3 + [0.0] * 3
+        # the paper's "nearly 40% computation saved" at the 0.8 target
+        assert s.average_rate(96) == 0.4  # whole 2-epoch periods
+        # partial runs report the true mean, not the closed form: a
+        # 1-epoch run trains entirely dense
+        assert EpochBar(target=0.8, steps_per_epoch=10).average_rate(10) == 0.0
+        np.testing.assert_allclose(
+            EpochBar(target=0.8, steps_per_epoch=20).average_rate(30), 0.8 / 3
+        )
+
+    def test_periodic_bar(self):
+        s = PeriodicBar(target=0.8, period=4)
+        assert [s.rate(i) for i in range(8)] == [0.0, 0.0, 0.8, 0.8] * 2
+        np.testing.assert_allclose(s.average_rate(8), 0.4)
+        # odd period: 3 of 5 steps sparse
+        np.testing.assert_allclose(
+            PeriodicBar(target=0.8, period=5).average_rate(10), 0.48
+        )
+        with pytest.raises(ValueError):
+            PeriodicBar(target=0.8, period=0)
+
+    def test_bucketed_rate_and_scale(self):
+        s = Linear(target=0.8, total_steps=100)
+        assert s.bucketed_rate(99) == 0.8
+        assert s.bucketed_rate(0) == 0.0
+        assert s.scale(99) == 1.0
+        assert s.scale(0) == 0.0
+        assert Constant(target=0.0).scale(5) == 0.0
+
+
+class TestLegacyShim:
+    @pytest.mark.parametrize(
+        "name", ["constant", "linear", "cosine", "bar", "epoch_bar", "periodic_bar"]
+    )
+    def test_drop_rate_for_step_matches_objects(self, name):
+        sched = make_schedule(
+            name, target=0.7, total_steps=40, steps_per_epoch=5, period=8
+        )
+        for step in range(40):
+            legacy = schedulers.drop_rate_for_step(
+                name, step=step, steps_per_epoch=5, total_steps=40,
+                target=0.7, period=8,
+            )
+            assert legacy == sched.rate(step)
+
+    def test_periodic_bar_legacy_string_is_valid_policy(self):
+        # The satellite regression: "periodic_bar" used to pass the
+        # dataclass but be missing from the scheduler registry.
+        pol = SsPropPolicy(scheduler="periodic_bar")
+        assert pol.scheduler in schedulers.SCHEDULE_NAMES
+
+    def test_unknown_scheduler_fails_at_construction(self):
+        with pytest.raises(ValueError, match="unknown scheduler"):
+            SsPropPolicy(scheduler="cosine_bar")
+        with pytest.raises(ValueError, match="unknown scheduler"):
+            make_schedule("nope", target=0.8)
+
+    def test_average_rate_shim(self):
+        avg = schedulers.average_rate(
+            "epoch_bar", total_steps=100, steps_per_epoch=10, target=0.8
+        )
+        assert abs(avg - 0.4) < 1e-9
+
+
+# ----------------------------------------------------------------------
+# rule patterns + resolution
+# ----------------------------------------------------------------------
+
+
+class TestRules:
+    def test_expand_negative_and_range(self):
+        assert expand_pattern("layer_{0,-1}/*", 12) == ("layer_0/*", "layer_11/*")
+        assert expand_pattern("layer_{2..4}/mlp", 12) == (
+            "layer_2/mlp", "layer_3/mlp", "layer_4/mlp",
+        )
+        assert expand_pattern("block_{0..-3}/x", 4) == ("block_0/x", "block_1/x")
+        assert expand_pattern("{a,b}/{c,d}") == ("a/c", "a/d", "b/c", "b/d")
+
+    def test_negative_without_depth_raises(self):
+        with pytest.raises(ValueError, match="negative index"):
+            expand_pattern("layer_{-1}/*", None)
+
+    def test_pattern_matches(self):
+        assert pattern_matches("*/attn/*", "layer_3/attn/q")
+        assert pattern_matches("conv*", "conv1")
+        assert not pattern_matches("layer_{0,-1}/*", "layer_1/attn/q", 4)
+        assert pattern_matches("layer_{0,-1}/*", "layer_3/attn/q", 4)
+
+    def test_first_match_wins_and_default(self):
+        base = paper_default(0.8)
+        rules = PolicyRules.of(
+            ("layer_0/*", 0.0), ("*/attn/*", 0.5), base=base
+        )
+        tab = rules.resolve(
+            ["layer_0/attn/q", "layer_1/attn/q", "layer_1/mlp/up"], depth=2
+        )
+        assert tab["layer_0/attn/q"].target_rate == 0.0  # rule 1 beats rule 2
+        assert tab["layer_1/attn/q"].target_rate == 0.5
+        assert tab["layer_1/mlp/up"].target_rate == 0.0  # default: dense
+        assert tab["not/a/site"] == tab.default
+
+    def test_parse_grammar(self):
+        rules = PolicyRules.parse(
+            "layer_{0,-1}/*=dense; */attn/*=0.5; *=0.8", base=paper_default(0.8)
+        )
+        assert [p.target_rate for _, p in rules.rules] == [0.0, 0.5, 0.8]
+        with pytest.raises(ValueError):
+            PolicyRules.parse("justapattern", base=paper_default(0.8))
+
+    def test_scoped_and_uniform(self):
+        tab = SitePolicies(
+            (("layer_0/attn/q", DENSE), ("layer_0/mlp/up", paper_default(0.8))),
+        )
+        sub = tab.scoped("layer_0")
+        assert sub["attn/q"] == DENSE
+        assert sub["mlp/up"].drop_rate == 0.8
+        assert tab.uniform() is None
+        uni = SitePolicies((("a", DENSE), ("b", DENSE)), default=DENSE)
+        assert uni.uniform() == DENSE
+
+    def test_policy_for_plain_passthrough(self):
+        pol = paper_default(0.5)
+        assert policy_for(pol, "anything") is pol
+
+
+# ----------------------------------------------------------------------
+# programs
+# ----------------------------------------------------------------------
+
+
+def _resnet_program(schedule):
+    rules = PolicyRules.of(
+        ("stem", 0.0), ("block_{0,-1}/*", 0.0), ("*", 0.8),
+        base=paper_default(0.8),
+    )
+    sites, depth = resnet.site_names("resnet18")
+    return PolicyProgram(rules=rules, schedule=schedule).resolve(sites, depth=depth)
+
+
+class TestProgram:
+    def test_trivial_program_is_identity(self):
+        pol = paper_default(0.8)
+        res = PolicyProgram.single(pol).resolve(["a/b", "c"], depth=None)
+        tab = res.policies_for_step(123)
+        assert tab["a/b"] == pol
+        assert tab["c"] == pol
+
+    def test_single_off_bucket_rate_stays_exact(self):
+        # 0.6 is not in the default rate_buckets; the trivial program
+        # must still run exactly 0.6, not quantize it to 0.5
+        res = PolicyProgram.single(paper_default(0.6)).resolve(["x"])
+        assert res.peak()["x"].drop_rate == 0.6
+        assert res.policies_for_step(7)["x"].drop_rate == 0.6
+
+    def test_single_dense_stays_dense(self):
+        # SsPropPolicy(0.0) carries the legacy target_rate=0.8 default;
+        # the trivial program must still never schedule it sparse.
+        res = PolicyProgram.single(SsPropPolicy(0.0)).resolve(["x"])
+        assert res.peak()["x"].drop_rate == 0.0
+
+    def test_epoch_bar_program_flips_all_sites(self):
+        res = _resnet_program(EpochBar(target=0.8, steps_per_epoch=2))
+        dense_tab = res.policies_for_step(0)
+        sparse_tab = res.policies_for_step(2)
+        assert all(p.drop_rate == 0.0 for _, p in dense_tab.entries)
+        assert sparse_tab["block_1/conv1"].drop_rate == 0.8
+        assert sparse_tab["block_0/conv1"].drop_rate == 0.0  # pinned dense
+        assert sparse_tab["stem"].drop_rate == 0.0
+
+    @pytest.mark.parametrize(
+        "schedule",
+        [
+            Linear(target=0.8, total_steps=97),
+            Cosine(target=0.8, total_steps=97),
+            EpochBar(target=0.8, steps_per_epoch=7),
+            PeriodicBar(target=0.8, period=13),
+            Constant(target=0.8),
+        ],
+    )
+    def test_jit_cache_bound_property(self, schedule):
+        """Bucket quantization bounds the number of distinct compiled
+        step tables by len(rate_buckets), whatever the schedule."""
+        res = _resnet_program(schedule)
+        tables = {res.policies_for_step(s) for s in range(97)}
+        assert len(tables) <= len(schedule.rate_buckets)
+
+    def test_average_rates_per_site(self):
+        res = _resnet_program(EpochBar(target=0.8, steps_per_epoch=10))
+        rates = res.average_rates(100)
+        assert rates["stem"] == 0.0
+        np.testing.assert_allclose(rates["block_3/conv1"], 0.4)
+
+
+# ----------------------------------------------------------------------
+# end-to-end: bit-exact parity + per-site training on two families
+# ----------------------------------------------------------------------
+
+
+def _train_resnet(policy_at_step, steps=4, seed=0):
+    """Tiny resnet18 loop; returns (losses, params)."""
+    pipe = ImagePipeline(ImagePipelineConfig((3, 16, 16), 10, 16, seed=3), n_train=64)
+    params = resnet.init_params("resnet18", jax.random.PRNGKey(seed), num_classes=10)
+    opt = adam.init(params)
+    ocfg = adam.AdamConfig(lr=1e-3)
+    cache = {}
+
+    def get_step(pol):
+        if pol not in cache:
+            def loss_fn(p, x, y):
+                logits = resnet.forward("resnet18", p, x, pol)
+                return -jax.nn.log_softmax(logits)[jnp.arange(x.shape[0]), y].mean()
+
+            @jax.jit
+            def step(p, o, x, y):
+                lv, g = jax.value_and_grad(loss_fn)(p, x, y)
+                p2, o2, _ = adam.apply_updates(ocfg, p, g, o)
+                return p2, o2, lv
+
+            cache[pol] = step
+        return cache[pol]
+
+    losses = []
+    for i in range(steps):
+        b = jax.tree.map(jnp.asarray, pipe.batch_at(i))
+        params, opt, lv = get_step(policy_at_step(i))(
+            params, opt, b["images"], b["labels"]
+        )
+        losses.append(float(lv))
+    return losses, params
+
+
+class TestBitExactParity:
+    def test_one_rule_program_matches_global_policy_path(self):
+        """The pre-redesign path (bucketed(drop_rate_for_step(...)) on a
+        global policy) and the one-rule program produce bit-identical
+        training trajectories."""
+        base = paper_default(0.8)
+        sched = EpochBar(target=0.8, steps_per_epoch=2)
+
+        def legacy(i):
+            rate = schedulers.drop_rate_for_step(
+                "epoch_bar", step=i, steps_per_epoch=2, total_steps=4, target=0.8
+            )
+            return base.bucketed(rate)
+
+        sites, depth = resnet.site_names("resnet18")
+        res = PolicyProgram(
+            rules=PolicyRules.single(base), schedule=sched
+        ).resolve(sites, depth=depth)
+
+        l1, p1 = _train_resnet(legacy)
+        l2, p2 = _train_resnet(res.policies_for_step)
+        assert l1 == l2  # bit-exact, not approximately equal
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestPerSiteEndToEnd:
+    def test_resnet_per_site_trains_and_differs_from_global(self):
+        res = _resnet_program(EpochBar(target=0.8, steps_per_epoch=1))
+        losses, _ = _train_resnet(res.policies_for_step)
+        assert all(np.isfinite(losses))
+        # sparse steps genuinely differ from the global-0.8 trajectory
+        g_losses, _ = _train_resnet(lambda i: paper_default(0.8).bucketed(
+            EpochBar(target=0.8, steps_per_epoch=1).rate(i)
+        ))
+        assert losses != g_losses
+
+    def test_resnet_flops_match_resolved_site_table(self):
+        """FLOPs are summed over the site table: the per-site count must
+        equal the global-0.8 count plus exactly the delta of the sites
+        pinned dense (counted at their own shapes)."""
+        res = _resnet_program(Constant(target=0.8))
+        peak = res.peak()
+        batch, image = 8, (3, 32, 32)
+        _, site_f = resnet.flops_per_iter("resnet18", batch, image, policy=peak)
+        _, global_f = resnet.flops_per_iter(
+            "resnet18", batch, image, policy=paper_default(0.8)
+        )
+        # dense-pinned sites: stem + block_0 (2 convs) + block_7 (2 convs)
+        pinned = [
+            (3, 64, 3, 32, 32),     # stem
+            (64, 64, 3, 32, 32),    # block_0/conv1
+            (64, 64, 3, 32, 32),    # block_0/conv2
+            (512, 512, 3, 4, 4),    # block_7/conv1
+            (512, 512, 3, 4, 4),    # block_7/conv2
+        ]
+        delta = 0
+        for c_in, c_out, k, h, w in pinned:
+            delta += flops.conv_backward_flops_policy(
+                batch, h, w, c_in, c_out, k, DENSE
+            ) - flops.conv_backward_flops_policy(
+                batch, h, w, c_in, c_out, k, paper_default(0.8)
+            )
+        assert site_f == global_f + delta
+
+    def test_uniform_site_table_equals_global_count(self):
+        pol = paper_default(0.8)
+        sites, depth = resnet.site_names("resnet18")
+        uni = PolicyProgram.single(pol).resolve(sites, depth=depth).peak()
+        a = resnet.flops_per_iter("resnet18", 8, (3, 32, 32), policy=uni)
+        b = resnet.flops_per_iter("resnet18", 8, (3, 32, 32), policy=pol)
+        assert a == b
+
+    def test_transformer_per_site_trains_end_to_end(self):
+        """Second model family: reduced LM, first/last layer dense, MLP
+        at 0.8, attention at 0.5, trained through make_train_step."""
+        cfg = get_config("qwen2.5-3b").reduced(n_layers=4, scan_layers=False)
+        sites, depth = lm.site_names(cfg)
+        rules = PolicyRules.of(
+            ("layer_{0,-1}/*", 0.0),
+            ("*/attn/*", 0.5),
+            ("*/mlp/*", 0.8),
+            base=paper_default(0.8),
+        )
+        res = PolicyProgram(
+            rules=rules, schedule=EpochBar(target=0.8, steps_per_epoch=1)
+        ).resolve(sites, depth=depth)
+        tab = res.policies_for_step(1)  # sparse epoch
+        assert tab["layer_0/attn/q"].drop_rate == 0.0
+        assert tab["layer_3/mlp/up"].drop_rate == 0.0
+        assert tab["layer_1/attn/q"].drop_rate == 0.5
+        assert tab["layer_2/mlp/up"].drop_rate == 0.8
+
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        opt = adam.init(params)
+        batch = {
+            "tokens": jnp.ones((2, 16), jnp.int32),
+            "targets": jnp.ones((2, 16), jnp.int32),
+        }
+        step = jax.jit(
+            steps_lib.make_train_step(cfg, tab, adam.AdamConfig(lr=1e-3))
+        )
+        for _ in range(2):
+            params, opt, metrics = step(params, opt, batch)
+        assert np.isfinite(float(metrics["loss"]))
+
+        # per-site FLOPs for the LM: summed over the resolved table,
+        # each projection at its own keep count — not one global rate.
+        d, ff, m = cfg.d_model, cfg.d_ff, 2 * 16
+        hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+        shapes = {"attn/q": (d, nh * hd), "attn/k": (d, nkv * hd),
+                  "attn/v": (d, nkv * hd), "attn/o": (nh * hd, d),
+                  "mlp/up": (d, ff), "mlp/gate": (d, ff), "mlp/down": (ff, d)}
+        site_total = sum(
+            flops.dense_backward_flops_site(m, *shapes[s.split("/", 1)[1]], tab, s,
+                                            bias=False)
+            for s in sites
+        )
+        global_total = sum(
+            flops.dense_backward_flops_policy(m, *shapes[s.split("/", 1)[1]],
+                                              paper_default(0.8), bias=False)
+            for s in sites
+        )
+        assert site_total > global_total  # dense/0.5 sites cost more than all-0.8
+
+    def test_scan_layers_rejects_depth_varying_program(self):
+        cfg = get_config("qwen2.5-3b").reduced(n_layers=4)  # scan_layers=True
+        sites, depth = lm.site_names(cfg)
+        rules = PolicyRules.of(
+            ("layer_{0,-1}/*", 0.0), ("*", 0.8), base=paper_default(0.8)
+        )
+        tab = PolicyProgram(
+            rules=rules, schedule=Constant(target=0.8)
+        ).resolve(sites, depth=depth).peak()
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        batch = {
+            "tokens": jnp.ones((2, 8), jnp.int32),
+            "targets": jnp.ones((2, 8), jnp.int32),
+        }
+        with pytest.raises(ValueError, match="scan_layers"):
+            lm.loss_fn(cfg, params, batch, tab)
+
+
+# ----------------------------------------------------------------------
+# config satellite: active-param counts
+# ----------------------------------------------------------------------
+
+
+class TestActiveParamCounts:
+    """Pins the MoE active-param accounting (the dead hybrid clause in
+    ``active_param_count`` was removed; these totals must not move)."""
+
+    PINNED = {
+        "jamba-1.5-large-398b": (397_704_429_568, 93_298_622_464),
+        "kimi-k2-1t-a32b": (1_043_852_558_336, 33_746_714_624),
+        "llama4-maverick-400b-a17b": (397_691_453_440, 14_164_295_680),
+    }
+
+    @pytest.mark.parametrize("arch", sorted(PINNED))
+    def test_moe_counts_pinned(self, arch):
+        cfg = get_config(arch)
+        total, active = self.PINNED[arch]
+        assert cfg.param_count() == total
+        assert cfg.active_param_count() == active
+        assert active < total
+
+    def test_dense_active_equals_total(self):
+        cfg = get_config("deepseek-67b")
+        assert not cfg.is_moe
+        assert cfg.active_param_count() == cfg.param_count()
+
+
+def test_model_site_names_cover_all_families():
+    """Every family enumerates sites; encdec includes encoder + cross."""
+    for arch in ("qwen2.5-3b", "mamba2-1.3b", "jamba-1.5-large-398b",
+                 "whisper-large-v3", "kimi-k2-1t-a32b"):
+        cfg = get_config(arch).reduced()
+        sites, depth = lm.site_names(cfg)
+        assert depth == cfg.n_layers
+        assert len(sites) == len(set(sites))
+        if cfg.family == "encdec":
+            assert any(s.startswith("enc/") for s in sites)
+            assert any("/cross/" in s for s in sites)
+        if cfg.family == "ssm":
+            assert all("/ssm/" in s for s in sites)
+        if cfg.is_moe:
+            assert any("/moe/" in s for s in sites)

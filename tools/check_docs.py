@@ -36,6 +36,14 @@ SEARCH_ROOTS = (ROOT, ROOT / "src", ROOT / "src" / "repro")
 CHECK_EXTS = (".py", ".md", ".json", ".toml", ".yml", ".yaml", ".txt")
 # artifacts produced by running benchmarks — documented but not committed
 GENERATED = re.compile(r"^BENCH_.*\.json$")
+# ssProp policy-program site names (docs/policies.md) look path-like but
+# name model call sites, not files: layer_3/attn/q, block_0/conv1,
+# moe/shared/up, enc/layer_0/mlp/down, ...
+SITE_NAME = re.compile(
+    r"^(enc/)?(layer|block)_\d+/"
+    r"|^(stem|out|mid\d|down\d|up\d)/"
+    r"|^(attn|self|cross|mlp|moe|ssm)/"
+)
 
 INLINE_CODE = re.compile(r"`([^`\n]+)`")
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
@@ -56,6 +64,8 @@ def iter_path_tokens(text: str):
 
 def resolve(tok: str) -> bool:
     if GENERATED.match(tok.rsplit("/", 1)[-1]):
+        return True
+    if SITE_NAME.match(tok):
         return True
     for root in SEARCH_ROOTS:
         if (root / tok).exists():
