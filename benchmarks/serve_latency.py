@@ -1,6 +1,6 @@
 """Continuous batching vs. static lock-step, and paged vs. contiguous.
 
-Two serving-side headlines:
+Four serving-side headlines:
 
 1. A staggered-arrival (Poisson) workload with heterogeneous generation
    lengths through the continuous-batching engine completes in
@@ -15,15 +15,27 @@ Two serving-side headlines:
    per request, pages are spent only on tokens actually cached. The
    same comparison also measures the decode-width ladder ({1, 4, chunk}
    vs {1, chunk}): fewer padded token-slots on mixed steps.
+3. A **sampled** workload (per-request temperature/top-k/top-p + seeded
+   PRNG lanes) pays no extra steps over greedy, and its outputs match
+   the sampled lock-step oracle token-for-token.
+4. **Swap** preemption costs no recompute steps: a pool too small for
+   the working set forces evictions, and restoring the victim's staged
+   cache finishes the workload in no more engine steps than replaying
+   its token history (the swap-vs-recompute cost row); a seeded sampled
+   run under forced swap preemption is bit-identical to the same
+   workload with a pressure-free pool.
 
-Per-request greedy outputs are verified identical between every engine
-pair before any number is reported; the paged claims are hard asserts.
+Per-request outputs are verified identical between every engine pair
+before any number is reported; the paged/sampled/swap claims are hard
+asserts.
 
 Emits CSV rows (``name,us_per_call,derived``) like every other table and
 writes ``BENCH_serve.json`` with throughput, p50/p99 per-token latency,
-slot utilization and the paged-vs-contiguous comparison per arch.
+slot utilization and the engine comparisons per arch.
 
 Run:  PYTHONPATH=src python benchmarks/serve_latency.py [--arch qwen2.5-3b]
+      PYTHONPATH=src python benchmarks/serve_latency.py --smoke
+        (CI: one arch, the sampled + forced-preemption workloads only)
 """
 import argparse
 import json
@@ -216,6 +228,186 @@ def bench_paged_longtail(arch: str) -> dict:
     }
 
 
+# --- sampled workload: parity vs the sampled lock-step oracle --------
+SAMPLED_TEMP = 0.8
+SAMPLED_TOP_K = 16
+SAMPLED_TOP_P = 0.95
+
+
+def bench_sampled(arch: str) -> dict:
+    """Sampled Poisson workload through the continuous engine; every
+    request verified token-for-token against the sampled lock-step
+    oracle before the row is reported."""
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    reqs = poisson_workload(
+        cfg, n_requests=N_REQUESTS, arrival_rate=ARRIVAL_RATE,
+        prompt_len=PROMPT_LEN, gen_len=GEN_RANGE, seed=11,
+        uniform_prompts=True, temperature=SAMPLED_TEMP,
+        top_k=SAMPLED_TOP_K, top_p=SAMPLED_TOP_P,
+    )
+    engine = ContinuousBatchingEngine(
+        cfg, params,
+        ServeConfig(max_slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=PROMPT_LEN),
+    )
+    for r in reqs:
+        engine.submit(r)
+    out = engine.run()
+    stats = engine.stats()
+
+    for wave in lockstep_waves(reqs, SLOTS):
+        res = generate_lockstep(
+            cfg, params,
+            np.stack([r.prompt for r in wave]),
+            [r.max_new_tokens for r in wave],
+            max_seq=MAX_SEQ,
+            frames=np.stack([r.frames for r in wave])
+            if cfg.family == "encdec"
+            else None,
+            sampling=[r.sampling for r in wave],
+        )
+        for r, toks in zip(wave, res["tokens"]):
+            if not np.array_equal(out[r.rid], toks):
+                raise RuntimeError(
+                    f"{arch} rid={r.rid}: continuous != lockstep sampled output"
+                )
+
+    gen_total = sum(len(v) for v in out.values())
+    return {
+        "arch": arch,
+        "family": cfg.family,
+        "workload": "sampled",
+        "temperature": SAMPLED_TEMP,
+        "top_k": SAMPLED_TOP_K,
+        "top_p": SAMPLED_TOP_P,
+        "requests": N_REQUESTS,
+        "slots": SLOTS,
+        "generated_tokens": gen_total,
+        "sampled_steps": stats["compute_steps"],
+        "tokens_per_step": gen_total / max(stats["compute_steps"], 1),
+        "slot_utilization": stats["slot_utilization"],
+        "tokens_per_s": stats["tokens_per_s"],
+        "p50_token_latency_us": stats["p50_token_latency_s"] * 1e6,
+        "p99_token_latency_us": stats["p99_token_latency_s"] * 1e6,
+        "wall_s": stats["wall_s"],
+    }
+
+
+# --- swap vs recompute preemption cost (small-pool pressure) ---------
+PRE_SLOTS = 3
+PRE_BLOCK = 4
+PRE_BLOCKS = 7  # < 3 slots x 6 pages worst case -> forced evictions
+PRE_REQUESTS = 6
+
+
+def _pressure_workload(cfg, temperature=0.0):
+    return poisson_workload(
+        cfg, n_requests=PRE_REQUESTS, arrival_rate=2.0, prompt_len=(3, 7),
+        gen_len=(6, 12), seed=5, temperature=temperature,
+        top_k=SAMPLED_TOP_K,
+    )
+
+
+def _run_pressure(cfg, params, reqs, *, preempt, n_blocks=PRE_BLOCKS):
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ServeConfig(max_slots=PRE_SLOTS, max_seq=MAX_SEQ,
+                    prefill_chunk=PRE_BLOCK, block_size=PRE_BLOCK,
+                    n_blocks=n_blocks, preempt=preempt),
+    )
+    for r in reqs:
+        eng.submit(r)
+    out = eng.run()
+    return eng.stats(), out
+
+
+def bench_preemption(arch: str) -> dict:
+    """Preemption-cost A/B under pool pressure.
+
+    Greedy workload: swap vs recompute at the same (too-small) pool —
+    swap must finish in no more engine steps, with identical outputs.
+    Sampled workload: forced swap preemption must be bit-identical to a
+    pressure-free pool (the determinism claim recompute can't make).
+    """
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+
+    swap_st, swap_out = _run_pressure(
+        cfg, params, _pressure_workload(cfg), preempt="swap")
+    rec_st, rec_out = _run_pressure(
+        cfg, params, _pressure_workload(cfg), preempt="recompute")
+    assert swap_st["swap_preemptions"] > 0, f"{arch}: pool never pressured"
+    assert rec_st["recompute_preemptions"] > 0, f"{arch}: pool never pressured"
+    for rid in rec_out:
+        if not np.array_equal(swap_out[rid], rec_out[rid]):
+            raise RuntimeError(f"{arch} rid={rid}: swap != recompute greedy")
+    assert swap_st["compute_steps"] <= rec_st["compute_steps"], (
+        f"{arch}: swap took {swap_st['compute_steps']} steps > "
+        f"recompute {rec_st['compute_steps']}"
+    )
+
+    sampled = _pressure_workload(cfg, temperature=SAMPLED_TEMP)
+    forced_st, forced_out = _run_pressure(cfg, params, sampled, preempt="auto")
+    sampled2 = _pressure_workload(cfg, temperature=SAMPLED_TEMP)
+    free_st, free_out = _run_pressure(
+        cfg, params, sampled2, preempt="auto",
+        n_blocks=PRE_SLOTS * (-(-MAX_SEQ // PRE_BLOCK)),
+    )
+    assert forced_st["swap_preemptions"] > 0, f"{arch}: sampled never preempted"
+    assert free_st["preemptions"] == 0, f"{arch}: reference pool pressured"
+    for rid in free_out:
+        if not np.array_equal(forced_out[rid], free_out[rid]):
+            raise RuntimeError(
+                f"{arch} rid={rid}: sampled output changed under swap preemption"
+            )
+
+    return {
+        "arch": arch,
+        "family": cfg.family,
+        "workload": "preemption",
+        "requests": PRE_REQUESTS,
+        "slots": PRE_SLOTS,
+        "block_size": PRE_BLOCK,
+        "n_blocks": PRE_BLOCKS,
+        "swap_steps": swap_st["compute_steps"],
+        "recompute_steps": rec_st["compute_steps"],
+        "step_ratio": rec_st["compute_steps"] / max(swap_st["compute_steps"], 1),
+        "swap_wall_s": swap_st["wall_s"],
+        "recompute_wall_s": rec_st["wall_s"],
+        "swap_preemptions": swap_st["swap_preemptions"],
+        "recompute_preemptions": rec_st["recompute_preemptions"],
+        "swapped_bytes": swap_st["swapped_bytes"],
+        "sampled_swap_preemptions": forced_st["swap_preemptions"],
+        "sampled_deterministic": True,
+    }
+
+
+def _emit_sampled(row):
+    emit(
+        f"serve_sampled_{row['arch']}",
+        row["wall_s"] / max(row["sampled_steps"], 1) * 1e6,
+        f"temp {row['temperature']} top-k {row['top_k']} top-p {row['top_p']};"
+        f" steps {row['sampled_steps']};"
+        f" {row['tokens_per_step']:.2f} gen tok/step;"
+        f" util {row['slot_utilization']*100:.0f}%;"
+        f" lockstep parity OK",
+    )
+
+
+def _emit_preemption(row):
+    emit(
+        f"serve_preempt_swap_vs_recompute_{row['arch']}",
+        0.0,
+        f"swap {row['swap_steps']} steps vs recompute"
+        f" {row['recompute_steps']} (x{row['step_ratio']:.2f});"
+        f" {row['swap_preemptions']} swaps"
+        f" ({row['swapped_bytes']} bytes staged) vs"
+        f" {row['recompute_preemptions']} recomputes;"
+        f" sampled deterministic under {row['sampled_swap_preemptions']}"
+        f" forced swaps",
+    )
+
+
 def run(archs=ARCHS, json_path=None):
     rows = []
     for arch in archs:
@@ -245,9 +437,30 @@ def run(archs=ARCHS, json_path=None):
             f" {row['two_width_padded_tokens']}"
             f" (-{row['ladder_padding_saved']*100:.0f}%)",
         )
+    for arch in archs:
+        row = bench_sampled(arch)
+        rows.append(row)
+        _emit_sampled(row)
+    for arch in archs:
+        row = bench_preemption(arch)
+        rows.append(row)
+        _emit_preemption(row)
     path = json_path or os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
     with open(path, "w") as f:
         json.dump(rows, f, indent=2)
+    return rows
+
+
+def run_smoke(arch=ARCHS[0], json_path=None):
+    """CI-sized run: one arch, the sampled workload + the forced swap
+    preemption A/B only (each internally asserts parity/determinism).
+    Does NOT overwrite BENCH_serve.json unless --json is given."""
+    rows = [bench_sampled(arch), bench_preemption(arch)]
+    _emit_sampled(rows[0])
+    _emit_preemption(rows[1])
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(rows, f, indent=2)
     return rows
 
 
@@ -255,8 +468,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCHS, default=None)
     ap.add_argument("--json", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one arch, sampled + forced-preemption only (CI)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    if args.smoke:
+        run_smoke(args.arch or ARCHS[0], json_path=args.json)
+        return
     run((args.arch,) if args.arch else ARCHS, json_path=args.json)
 
 

@@ -28,6 +28,11 @@ Sharding rule table (tensor → mesh axis placement):
     (paged=True: page axis replicated — block tables index the
      pool globally, so dp-sharding pages would make every gather
      a collective; block tables themselves are replicated)
+  swap-staged KV pages         [np, n, bs, KV, hd]         (-, -, -, "model", -)
+  swap-staged ssm state row    [np, H, N, P]               (-, "model", -, -)
+  swap-staged conv row         [np, K-1, C]                (-, -, "model")
+    (``swap_shardings``: host-staged swap-preemption bundles land
+     pre-sharded like the pool they scatter into)
   ===========================  ==========================  ============
 
 ``dp`` is the data-parallel axis group — ``("pod", "data")`` on the

@@ -215,6 +215,41 @@ def cache_shardings(
     return jax.tree_util.tree_map_with_path(one, a_cache)
 
 
+def swap_shardings(mesh, a_swapped: Any) -> Any:
+    """Staging shardings for one slot's swapped-out cache bundle.
+
+    Swap preemption stages a slot's cache state through the host
+    (:meth:`repro.serve.cache.PagedCacheManager.swap_out` /
+    ``swap_in``); on the way back in, each leaf should land on the mesh
+    already laid out like the pool it is scattered into, so the
+    ``.at[...].set`` needs no resharding collective. Bundle leaves have
+    the slot/batch dim removed relative to :func:`cache_shardings`:
+
+    * K/V page bundles ``[np, n_pages, bs, KV, hd]`` — ``model`` on the
+      kv-head dim, page axis replicated (matching the paged pool rule);
+    * SSM state rows ``[np, H, N, P]`` — ``model`` on the head dim;
+    * conv rows ``[np, K-1, C]`` — ``model`` on the channel dim.
+
+    Anything else is replicated. Illegal placements are repaired with
+    :func:`fit_spec` like every other rule table.
+    """
+
+    def one(path, a):
+        ndim = getattr(a, "ndim", 0)
+        entries = [None] * ndim
+        keys = [str(k.key) for k in path if hasattr(k, "key")]
+        name = keys[-1] if keys else ""
+        if name in ("k", "v") and ndim >= 5:
+            entries[3] = "model"
+        elif name == "state" and ndim >= 2:
+            entries[1] = "model"
+        elif name == "conv" and ndim >= 2:
+            entries[-1] = "model"
+        return NamedSharding(mesh, fit_spec(P(*entries), a.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, a_swapped)
+
+
 def block_table_sharding(mesh) -> NamedSharding:
     """Block tables are small int32 host state — replicated everywhere
     (every shard of the pool needs the full logical→physical map)."""

@@ -9,8 +9,17 @@ lockstep`` runs the static lock-step baseline instead (every request
 arrives together, the whole batch stalls until the longest generation
 finishes) — kept for A/B comparison and as the parity oracle.
 
+Sampling: ``--temperature`` > 0 samples every request (with
+``--top-k``/``--top-p``) under per-request seeds derived from
+``--seed``; the default 0 keeps greedy argmax. ``--preempt
+swap|recompute|auto`` picks the pool-exhaustion policy (paged engine);
+sampled requests require swap (auto does the right thing). ``--stream``
+prints each token event as it is emitted instead of only the final
+summary.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
-      --reduced --batch 4 --prompt-len 16 --gen 32 --arrival-rate 0.5
+      --reduced --batch 4 --prompt-len 16 --gen 32 --arrival-rate 0.5 \
+      --temperature 0.8 --top-p 0.95 --stream
 """
 from __future__ import annotations
 
@@ -50,6 +59,17 @@ def build_parser():
                     help="tokens per KV page (paged engine)")
     ap.add_argument("--n-blocks", type=int, default=0,
                     help="page-pool size (0 = contiguous-parity pool)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k filter (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus mass (1.0 = off)")
+    ap.add_argument("--preempt", choices=("auto", "swap", "recompute"),
+                    default="auto",
+                    help="pool-exhaustion policy (paged engine)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print token events as they are emitted")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--data-mesh", type=int, default=1)
     ap.add_argument("--model-mesh", type=int, default=1)
@@ -75,6 +95,9 @@ def run(args) -> dict:
             gen_len=args.gen,
             seed=args.seed,
             uniform_prompts=True,
+            temperature=args.temperature,
+            top_k=args.top_k,
+            top_p=args.top_p,
         )
 
         if args.engine == "lockstep":
@@ -93,6 +116,7 @@ def run(args) -> dict:
                     frames=np.stack([r.frames for r in wave])
                     if cfg.family == "encdec"
                     else None,
+                    sampling=[r.sampling for r in wave],
                 )
                 steps += out["steps"]
                 gen_tokens += out["generated_tokens"]
@@ -121,12 +145,18 @@ def run(args) -> dict:
                 token_budget=args.token_budget,
                 block_size=args.block_size if paged else 0,
                 n_blocks=args.n_blocks if paged else 0,
+                preempt=args.preempt,
             ),
             mesh=mesh,
         )
         for r in reqs:
             engine.submit(r)
-        results = engine.run()
+        on_token = None
+        if args.stream:
+            def on_token(ev):
+                tail = " <eos>" if ev.is_last else ""
+                print(f"[stream] rid={ev.rid} token={ev.token}{tail}")
+        results = engine.run(on_token=on_token)
         stats = engine.stats()
 
     gen = np.stack([results[r.rid] for r in reqs])
@@ -141,6 +171,8 @@ def run(args) -> dict:
         "slot_utilization": stats["slot_utilization"],
         "peak_concurrency": stats["peak_concurrency"],
         "preemptions": stats["preemptions"],
+        "swap_preemptions": stats["swap_preemptions"],
+        "recompute_preemptions": stats["recompute_preemptions"],
     }
 
 
@@ -154,7 +186,9 @@ def main():
           f"slot util {out['slot_utilization']*100:.0f}%)")
     if "preemptions" in out:
         print(f"[serve] peak concurrency {out['peak_concurrency']}, "
-              f"preemptions {out['preemptions']}")
+              f"preemptions {out['preemptions']} "
+              f"(swap {out['swap_preemptions']}, "
+              f"recompute {out['recompute_preemptions']})")
     print("[serve] first request tokens:", out["generated"][0][:16].tolist())
 
 

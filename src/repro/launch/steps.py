@@ -7,6 +7,14 @@ carry of a full 256-batch remat'd scan would exceed HBM; microbatching is
 how production frameworks bound it. One optimizer update per step.
 
 ``make_serve_step`` is a single-token decode step over the KV/SSM cache.
+
+Both serving steps share :func:`sample_tokens`: sampling parameters ride
+in the step state as per-slot *data* arrays (``temps``/``top_ks``/
+``top_ps`` plus a ``[B, 2]`` PRNG-lane array ``rng``), so one compiled
+executable per step width serves any mix of greedy and sampled slots —
+the same "occupancy is data" design as ``count``/``block_tables``. When
+the state omits ``rng`` the step falls back to pure greedy argmax
+(legacy callers: dryrun, roofline).
 """
 from __future__ import annotations
 
@@ -103,11 +111,59 @@ def make_prefill_step(cfg: ModelConfig) -> Callable:
     return prefill
 
 
+def sample_tokens(logits, *, rng, temps, top_ks, top_ps, fold):
+    """Per-slot temperature / top-k / top-p sampling over ``[B, V]`` logits.
+
+    All controls are per-slot data: ``temps [B]`` (0 = greedy argmax for
+    that slot), ``top_ks [B]`` int32 (0 = off), ``top_ps [B]`` (1.0 =
+    off), ``rng [B, 2]`` uint32 base PRNG lanes, ``fold [B]`` int32 the
+    per-token fold value (the absolute cache position of the token whose
+    logits these are). The subkey for each draw is
+    ``fold_in(rng[b], fold[b])`` — a pure function of (seed, position),
+    so the sampled stream is invariant to chunking, batch composition
+    and preemption. Returns ``[B]`` int32 tokens.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    v = logits.shape[-1]
+    scaled = logits / jnp.where(temps > 0, temps, 1.0)[:, None]
+    # top-k: mask everything below the k-th largest logit (k = 0 -> off)
+    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(
+        sorted_desc, (jnp.clip(top_ks, 1, v) - 1)[:, None], axis=-1
+    )
+    scaled = jnp.where(
+        (top_ks[:, None] > 0) & (scaled < kth), -jnp.inf, scaled
+    )
+    # top-p (nucleus): keep the smallest sorted prefix with mass >= p.
+    # The exclusive cumsum comparison always keeps the top-1 token.
+    idx = jnp.argsort(-scaled, axis=-1)
+    probs = jax.nn.softmax(jnp.take_along_axis(scaled, idx, axis=-1), axis=-1)
+    keep_sorted = (jnp.cumsum(probs, axis=-1) - probs) < top_ps[:, None]
+    keep = jnp.take_along_axis(keep_sorted, jnp.argsort(idx, axis=-1), axis=-1)
+    scaled = jnp.where(keep, scaled, -jnp.inf)
+    keys = jax.vmap(jax.random.fold_in)(rng, fold)
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
+def _emit_tokens(logits, state, fold):
+    """Greedy-or-sampled next tokens for a serving step's logits."""
+    rng = state.get("rng")
+    if rng is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return sample_tokens(
+        logits, rng=rng, temps=state["temps"], top_ks=state["top_ks"],
+        top_ps=state["top_ps"], fold=fold,
+    )
+
+
 def make_serve_step(cfg: ModelConfig) -> Callable:
     """One new token against a seq_len KV cache.
 
     state = {"tokens": [B,1] int32, "pos": scalar int32, "cache": pytree,
-             optional "enc_out": [B, enc_seq, d]}.
+             optional "enc_out": [B, enc_seq, d], optional sampling
+             arrays "rng" [B,2] u32 / "temps" [B] / "top_ks" [B] /
+             "top_ps" [B] (absent -> greedy)}.
     Returns (next_tokens [B,1], new_state).
     """
 
@@ -117,7 +173,8 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
             cfg, params, state["tokens"], state["cache"], state["pos"],
             enc_out=enc_out,
         )
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        fold = jnp.full((logits.shape[0],), state["pos"], jnp.int32)
+        nxt = _emit_tokens(logits, state, fold)[:, None]
         new_state = dict(state, tokens=nxt, pos=state["pos"] + 1, cache=new_cache)
         return new_state
 
@@ -131,15 +188,21 @@ def make_slot_step(cfg: ModelConfig) -> Callable:
     slot; 0 = idle), "pos": [B] int32 (per-slot cache offsets),
     "cache": pytree, optional "enc_out": [B, enc_seq, d], optional
     "block_tables": [B, NB] int32 (paged cache: logical block ->
-    physical page per slot)}.
+    physical page per slot), optional per-slot sampling arrays
+    "rng" [B,2] u32 / "temps" [B] / "top_ks" [B] / "top_ps" [B]
+    (absent -> greedy argmax everywhere)}.
 
     One compiled step serves any slot occupancy: which slots decode,
     which prefill a chunk and which sit idle is *data* (count/pos), not
-    shape — and with the paged cache the page assignment is data too
-    (block tables ride in the state dict), so one executable per chunk
-    width serves any batch composition *and* any page layout. Returns
-    ``(next_tokens [B] int32 greedy, new_state)`` with the cache written
-    and ``pos`` advanced by ``count``; rows with count==0 return garbage
+    shape — with the paged cache the page assignment is data too (block
+    tables ride in the state dict), and so are the sampling controls:
+    each slot's temperature/top-k/top-p and PRNG lane are arrays, so one
+    executable per chunk width serves any mix of greedy and sampled
+    slots. The per-token subkey folds the slot's lane by the absolute
+    position of its last real token (``pos + count - 1``), keeping the
+    sampled stream independent of chunking and preemption. Returns
+    ``(next_tokens [B] int32, new_state)`` with the cache written and
+    ``pos`` advanced by ``count``; rows with count==0 return garbage
     tokens the scheduler ignores.
     """
 
@@ -149,7 +212,7 @@ def make_slot_step(cfg: ModelConfig) -> Callable:
             state["pos"], state["count"], enc_out=state.get("enc_out"),
             block_tables=state.get("block_tables"),
         )
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        nxt = _emit_tokens(logits, state, state["pos"] + state["count"] - 1)
         new_state = dict(
             state, cache=new_cache, pos=state["pos"] + state["count"]
         )

@@ -243,6 +243,45 @@ def reset_paged(cache, slot_mask: jax.Array, page_mask: jax.Array):
     return jax.tree_util.tree_map_with_path(one, cache)
 
 
+def swap_out_slot(cache, slot: int, pages):
+    """Gather one slot's swappable decode state from a paged cache.
+
+    Returns a pytree mirroring ``cache`` where each K/V leaf holds only
+    the slot's ``pages`` (``[np, n_pages, bs, KV, hd]``) and every
+    slot-major leaf (SSM conv/state) holds only the slot's row
+    (``[np, ...]``). The bundle plus the slot's position is everything a
+    swap preemption needs to restore the request's device state exactly
+    — the host-swap counterpart of the recompute path in
+    ``repro.serve.request``.
+    """
+
+    def one(path, a):
+        keys = [str(k.key) for k in path if hasattr(k, "key")]
+        if keys and keys[-1] in ("k", "v"):
+            return a[:, pages]
+        return a[:, slot]
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def swap_in_slot(cache, data, slot: int, pages):
+    """Scatter a :func:`swap_out_slot` bundle back into a paged cache.
+
+    ``pages`` are the freshly allocated physical pages (same count as at
+    swap-out; the ids may differ — block tables are remapped by the
+    cache manager, the page *contents* are position-addressed within
+    each page so they relocate freely).
+    """
+
+    def one(path, a, d):
+        keys = [str(k.key) for k in path if hasattr(k, "key")]
+        if keys and keys[-1] in ("k", "v"):
+            return a.at[:, pages].set(jnp.asarray(d, a.dtype))
+        return a.at[:, slot].set(jnp.asarray(d, a.dtype))
+
+    return jax.tree_util.tree_map_with_path(one, cache, data)
+
+
 def decode_step(
     cfg: ModelConfig,
     params,

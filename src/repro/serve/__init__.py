@@ -2,13 +2,15 @@
 
 Layout::
 
-  request.py    request record + lifecycle states
+  request.py    request record + lifecycle states + SamplingParams
   cache.py      SlotCacheManager (contiguous rows) / PagedCacheManager
-                (page pool + block tables) / BlockAllocator (free list)
+                (page pool + block tables + swap_out/swap_in) /
+                BlockAllocator (free list) / SwappedSlot (host bundle)
   scheduler.py  ServeConfig + token-budget prefill/decode packing,
-                free-page-gated admission
-  engine.py     ContinuousBatchingEngine — the serving loop
+                free-page-gated admission, preemption policy
+  engine.py     ContinuousBatchingEngine — the serving loop + streaming
   lockstep.py   static lock-step baseline + per-request parity oracle
+                (greedy and sampled)
   workload.py   Poisson staggered-arrival + long-tail workload generators
 
 Request lifecycle (the engine owns every transition)::
@@ -19,7 +21,42 @@ Request lifecycle (the engine owns every transition)::
    available)                ^                        |                 zeroed)
                              +------- preempt --------+
                               (paged engine, pool exhausted: pages freed
-                               + zeroed, cache recomputed on re-admission)
+                               + zeroed; cache recomputed on re-admission,
+                               or swap-staged on the host and restored)
+
+Sampling (per-request ``SamplingParams`` on ``Request.sampling``)::
+
+  temperature   0.0 = greedy argmax (default); > 0 scales logits
+  top_k         0 = off; keep only the k largest logits
+  top_p         1.0 = off; nucleus — smallest prefix with mass >= p
+  seed          per-request PRNG lane (uint32[2] via ``key_data()``)
+
+All controls are per-slot *data* in the jitted step — one compiled
+executable per width serves any mix of greedy and sampled slots. The
+subkey for the token emitted at absolute cache position p is
+``fold_in(key_data(seed), p)``: a pure function of (seed, position),
+so the sampled stream is invariant to chunking, slot assignment, batch
+composition and preemption, and the continuous engine matches the
+lock-step oracle token-for-token even when sampling.
+
+Preemption policy (``ServeConfig.preempt``) — what happens to the
+victim's cache when the page pool runs dry:
+
+  ============  =====================  ================================
+  policy        greedy request         sampled request
+  ============  =====================  ================================
+  "recompute"   drop pages, re-prefill  **rejected** (``Request.preempt``
+                token history (cheap,   raises — replayed prefill does
+                bit-exact)              not re-fold the sampled draws)
+  "swap"        stage KV pages +        same — host round-trip, exact
+                SSM/conv rows on host   for any request
+  "auto"        recompute               swap
+  ============  =====================  ================================
+
+Streaming: ``engine.step()`` returns ``TokenEvent(rid, token,
+is_last)`` tuples as tokens are emitted; ``engine.run(on_token=...)``
+invokes a callback per event, and ``engine.stream()`` is a generator
+yielding events as ticks execute.
 
 Block-table protocol (paged cache, ``ServeConfig.block_size > 0``):
 
@@ -67,14 +104,22 @@ from repro.serve.cache import (
     NoFreeBlocks,
     PagedCacheManager,
     SlotCacheManager,
+    SwappedSlot,
 )
-from repro.serve.engine import ContinuousBatchingEngine
+from repro.serve.engine import ContinuousBatchingEngine, TokenEvent
 from repro.serve.lockstep import (
     generate_lockstep,
     generate_reference,
     lockstep_waves,
 )
-from repro.serve.request import DECODE, FINISHED, PREFILL, WAITING, Request
+from repro.serve.request import (
+    DECODE,
+    FINISHED,
+    PREFILL,
+    WAITING,
+    Request,
+    SamplingParams,
+)
 from repro.serve.scheduler import Scheduler, ServeConfig
 from repro.serve.workload import longtail_workload, poisson_workload
 
@@ -84,9 +129,12 @@ __all__ = [
     "NoFreeBlocks",
     "PagedCacheManager",
     "SlotCacheManager",
+    "SwappedSlot",
     "Scheduler",
     "ServeConfig",
     "Request",
+    "SamplingParams",
+    "TokenEvent",
     "WAITING",
     "PREFILL",
     "DECODE",

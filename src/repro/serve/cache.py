@@ -23,6 +23,13 @@ per-slot positions. Freed state is **zeroed before reuse** — mandatory
 for SSM/conv state (which has no position to mask by) and enforced for
 freed KV pages too (the property test reads freed pages back as zero).
 
+The paged manager additionally supports **swap preemption**:
+:meth:`PagedCacheManager.swap_out` stages one slot's KV pages and
+SSM/conv rows on the host (:class:`SwappedSlot`) and
+:meth:`PagedCacheManager.swap_in` restores them into a fresh slot with
+remapped pages — the eviction strategy that stays correct for *sampled*
+requests, where recompute-from-token-history would silently diverge.
+
 Under a data×model mesh the cache is placed with the production
 partition rules (:func:`repro.dist.sharding.cache_shardings`); the paged
 pool passes ``paged=True`` (pages replicated over data, kv-heads over
@@ -31,7 +38,8 @@ would turn every gather into a collective).
 """
 from __future__ import annotations
 
-from typing import Iterable, List, Optional, Sequence
+import dataclasses
+from typing import Any, Iterable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +47,29 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as lm
+
+
+@dataclasses.dataclass
+class SwappedSlot:
+    """One slot's cache state, staged on the host by :meth:`PagedCacheManager.swap_out`.
+
+    ``data`` mirrors the cache pytree: K/V leaves hold the slot's pages
+    (``[np, n_pages, bs, KV, hd]`` host arrays), slot-major leaves (SSM
+    conv/state) hold the slot's row. ``pos`` is the slot's write
+    position at eviction; ``n_pages`` the page count to re-allocate at
+    swap-in. The bundle restores the request's device state exactly —
+    the preemption strategy that stays correct under sampling, where the
+    recompute path (``Request.preempt``) would silently diverge.
+    """
+
+    pos: int
+    n_pages: int
+    data: Any  # host-side pytree (np.ndarray leaves)
+
+    @property
+    def nbytes(self) -> int:
+        """Host bytes staged — the swap-traffic cost the benchmark reports."""
+        return int(sum(a.nbytes for a in jax.tree.leaves(self.data)))
 
 
 class SlotCacheManager:
@@ -224,6 +255,7 @@ class PagedCacheManager:
         cache = lm.init_paged_cache(
             cfg, n_slots, n_blocks, block_size, dtype=dtype
         )
+        self.mesh = mesh
         self.table_sharding = None
         if mesh is not None:
             from repro.dist import sharding as shd
@@ -323,6 +355,64 @@ class PagedCacheManager:
         at :meth:`free` time; this keeps the admission-time interface of
         :class:`SlotCacheManager` (idempotent on freshly freed slots)."""
         self._zero(slots=list(slots), pages=[])
+
+    # ------------------------------------------------------------------
+    # swap preemption (host staging)
+    # ------------------------------------------------------------------
+
+    def swap_out(self, slot: int) -> SwappedSlot:
+        """Stage ``slot``'s cache state on the host and release the slot.
+
+        Copies the slot's KV pages and SSM/conv rows to host memory,
+        then frees the slot and its pages (zeroed as usual — the freed
+        pages may be re-allocated this same tick). The returned
+        :class:`SwappedSlot` restores the exact device state through
+        :meth:`swap_in`; unlike the recompute path this is correct for
+        sampled requests too (positions are preserved, so the stateless
+        per-position RNG lane re-emits the identical stream).
+        """
+        if slot in self._free_slots:
+            raise ValueError(f"slot {slot} already free")
+        n = int(self.n_table_blocks[slot])
+        pages = np.asarray(self.block_tables[slot, :n], np.int32)
+        pos = int(self.pos[slot])
+        data = jax.tree.map(
+            np.asarray, lm.swap_out_slot(self.cache, slot, pages)
+        )
+        self.free(slot)
+        return SwappedSlot(pos=pos, n_pages=n, data=data)
+
+    def swap_in(self, slot: int, swapped: SwappedSlot) -> bool:
+        """Restore a :meth:`swap_out` bundle into (freshly reset) ``slot``.
+
+        Allocates ``swapped.n_pages`` fresh pages (the physical ids may
+        differ from eviction time — contents are position-addressed
+        within each page, so the block-table remap is free), scatters
+        the host bundle back and restores the slot's position. Returns
+        ``False`` with the pool untouched if the pages aren't free —
+        admission gates on this, so a ``False`` here is an engine bug.
+
+        Under a mesh the host bundle is first staged with
+        :func:`repro.dist.sharding.swap_shardings`, so each leaf lands
+        pre-sharded like its pool (kv-heads over ``model``) and the
+        scatter needs no resharding collective.
+        """
+        try:
+            pages = self.allocator.alloc(swapped.n_pages)
+        except NoFreeBlocks:
+            return False
+        self.block_tables[slot, : swapped.n_pages] = pages
+        self.n_table_blocks[slot] = swapped.n_pages
+        self.pos[slot] = swapped.pos
+        data = swapped.data
+        if self.mesh is not None:
+            from repro.dist import sharding as shd
+
+            data = jax.device_put(data, shd.swap_shardings(self.mesh, data))
+        self.cache = lm.swap_in_slot(
+            self.cache, data, slot, np.asarray(pages, np.int32)
+        )
+        return True
 
     def _zero(self, *, slots: Sequence[int], pages: Sequence[int]) -> None:
         if not slots and not pages:

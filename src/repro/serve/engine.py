@@ -1,39 +1,54 @@
-"""The continuous-batching engine: slot-scheduled greedy serving.
+"""The continuous-batching engine: slot-scheduled sampling-safe serving.
 
 One engine iteration (:meth:`ContinuousBatchingEngine.step`):
 
 1. **admission** — freed slots are handed to arrived waiting requests
    (FIFO; under the paged cache also gated on free pages); each new
    occupant's cache rows are zeroed and, for encdec families, its
-   encoder output is written into the slot's row.
+   encoder output is written into the slot's row. A request returning
+   from a **swap** preemption has its staged KV pages and SSM/conv rows
+   restored instead of re-prefilling.
 2. **planning** — the :class:`~repro.serve.scheduler.Scheduler` packs
    decode tokens (1 per running slot) and chunked-prefill tokens under
    the token budget. With the paged cache the engine then grows each
    planned slot's block table to cover the step; if the pool runs dry
-   it **preempts** the youngest running request back to WAITING
-   (its pages freed and zeroed, its cache recomputed on re-admission —
-   greedy decode makes the recompute bit-exact) and retries.
+   it **preempts** the youngest running request back to WAITING and
+   retries. The eviction strategy is ``ServeConfig.preempt``:
+   ``recompute`` (re-prefill the token history — bit-exact for greedy
+   only, and ``Request.preempt`` enforces that), ``swap`` (stage the
+   cache state on the host), or ``auto`` (swap sampled requests,
+   recompute greedy ones).
 3. **one jitted mixed step** — :func:`repro.launch.steps.make_slot_step`
    runs prefill chunks and decode tokens together; per-slot cache
    positions (and, when paged, per-slot block tables) mean no slot
-   waits for another. The step width is the smallest compiled width in
-   ``ServeConfig.widths`` that fits the largest per-slot count, so
-   mixed steps don't pad every row to the full prefill chunk.
+   waits for another. Per-request
+   :class:`~repro.serve.request.SamplingParams` ride in the step state
+   as per-slot data arrays (temperature / top-k / top-p plus a
+   ``[B, 2]`` PRNG-lane array), so one compiled executable per width
+   serves any mix of greedy and sampled slots. The step width is the
+   smallest compiled width in ``ServeConfig.widths`` that fits the
+   largest per-slot count.
 4. **completion** — slots that consumed their last prompt token emit
    their first generated token; slots that hit ``max_new_tokens`` finish
    and release their slot (and pages) for the next waiting request.
+   Each emitted token is **streamed** out of :meth:`step` as a
+   :class:`TokenEvent` ``(rid, token, is_last)``; :meth:`run` forwards
+   them to an ``on_token`` callback and :meth:`stream` yields them.
 
 Requests therefore join and leave the batch mid-flight: throughput is
 bounded by slot capacity — and with the paged cache by *actual* cache
 use rather than worst-case sequence length. Greedy outputs are
-identical per request to lock-step decode of the same prompt
-(`repro.serve.lockstep` is the reference; `tests/test_serve.py` pins
-paged ≡ contiguous ≡ lock-step across all model families).
+identical per request to lock-step decode of the same prompt, and
+seeded sampled outputs are identical to the lock-step sampling path —
+with and without preemption (`repro.serve.lockstep` is the reference;
+`tests/test_serve.py` pins paged ≡ contiguous ≡ lock-step across all
+model families, greedy and sampled).
 """
 from __future__ import annotations
 
+import math
 import time
-from typing import Dict, List, Optional
+from typing import Callable, Dict, Iterator, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +60,16 @@ from repro.models import model as lm
 from repro.serve import request as rq
 from repro.serve.cache import PagedCacheManager, SlotCacheManager
 from repro.serve.scheduler import Scheduler, ServeConfig
+
+
+class TokenEvent(NamedTuple):
+    """One streamed token: emitted by :meth:`ContinuousBatchingEngine.step`
+    the tick it is generated, in slot order. ``is_last`` marks the
+    request's final token (its slot is already released)."""
+
+    rid: int
+    token: int
+    is_last: bool
 
 
 class ContinuousBatchingEngine:
@@ -103,6 +128,9 @@ class ContinuousBatchingEngine:
         self.prefill_s = 0.0
         self.decode_s = 0.0
         self.preemptions = 0
+        self.swap_preemptions = 0
+        self.recompute_preemptions = 0
+        self.swapped_bytes = 0
         self.peak_concurrency = 0
         self.padded_tokens = 0  # B × width summed over compute steps
         self.step_times: List[float] = []
@@ -123,7 +151,19 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------------
 
     def submit(self, req: rq.Request) -> None:
-        """Queue a request. Raises if it can never fit the cache."""
+        """Queue a request. Raises if it can never fit the cache, or if
+        its rid is already known (waiting, running or finished) — a
+        duplicate would silently overwrite the first request's output in
+        :attr:`finished`."""
+        if (
+            req.rid in self.finished
+            or any(r.rid == req.rid for r in self.waiting)
+            or any(r.rid == req.rid for r in self.by_slot.values())
+        ):
+            raise ValueError(
+                f"request {req.rid}: duplicate rid — already "
+                "waiting, running or finished in this engine"
+            )
         need = req.prompt_len + req.max_new_tokens - 1  # last token not cached
         if need > self.serve_cfg.max_seq:
             raise ValueError(
@@ -153,6 +193,7 @@ class ContinuousBatchingEngine:
         if not admitted:
             return
         new_slots = []
+        swapped_in = []
         for req in admitted:
             self.waiting.remove(req)
             slot = self.slots.alloc()
@@ -160,10 +201,22 @@ class ContinuousBatchingEngine:
             req.state = rq.PREFILL
             self.by_slot[slot] = req
             new_slots.append(slot)
+            if req.swap is not None:
+                swapped_in.append(req)
             if self._encode is not None:
                 enc = self._encode(self.params, jnp.asarray(req.frames)[None])
                 self.enc_out = self.enc_out.at[slot].set(enc[0])
         self.slots.reset(new_slots)  # clear the previous occupants' state
+        for req in swapped_in:
+            # restore the staged cache state (after the reset above);
+            # admission already reserved the page count, so a failed
+            # swap-in is an accounting bug, not a recoverable state
+            if not self.slots.swap_in(req.slot, req.swap):
+                raise RuntimeError(
+                    f"request {req.rid}: swap-in failed for "
+                    f"{req.swap.n_pages} pages despite admission gate"
+                )
+            req.resume_from_swap()
 
     # ------------------------------------------------------------------
     # paged-cache block management
@@ -181,12 +234,27 @@ class ContinuousBatchingEngine:
     def _preempt(self, slot: int) -> None:
         """Evict ``slot``'s request back to WAITING and free its pages.
 
-        The freed pages are zeroed eagerly (they may be re-allocated
-        within this same tick); the request's cache is recomputed on
-        re-admission (greedy decode makes the recompute bit-exact)."""
+        The strategy is ``ServeConfig.preempt``: **swap** stages the
+        slot's KV pages and SSM/conv rows on the host (restored at
+        re-admission — correct for any request), **recompute** drops the
+        cache and re-prefills the token history (``Request.preempt``
+        raises for sampled requests, whose resumed stream would be
+        re-sampled and silently diverge), **auto** picks swap for
+        sampled and recompute for greedy requests. Freed pages are
+        zeroed eagerly either way (they may be re-allocated within this
+        same tick)."""
         req = self.by_slot.pop(slot)
-        self.slots.free(slot)
-        req.preempt()
+        mode = self.serve_cfg.preempt
+        use_swap = mode == "swap" or (mode == "auto" and not req.sampling.greedy)
+        if use_swap:
+            swapped = self.slots.swap_out(slot)  # frees slot + pages
+            req.preempt_swap(swapped)
+            self.swap_preemptions += 1
+            self.swapped_bytes += swapped.nbytes
+        else:
+            req.preempt()  # validates the greedy-recompute invariant
+            self.slots.free(slot)
+            self.recompute_preemptions += 1
         self.preemptions += 1
         self.waiting.append(req)
         self.waiting.sort(key=lambda r: (r.arrival, r.rid))
@@ -226,8 +294,9 @@ class ContinuousBatchingEngine:
                 return w
         return self.serve_cfg.prefill_chunk
 
-    def step(self) -> bool:
-        """Run one engine tick. Returns True when compute happened."""
+    def step(self) -> List[TokenEvent]:
+        """Run one engine tick. Returns the tokens emitted this tick (in
+        slot order) — empty on an idle tick or a pure-prefill step."""
         self._admit()
         self.peak_concurrency = max(self.peak_concurrency, len(self.by_slot))
         plan = self.scheduler.plan(self.by_slot)
@@ -236,12 +305,16 @@ class ContinuousBatchingEngine:
         if not plan:
             self.clock += 1
             self.idle_steps += 1
-            return False
+            return []
 
         b = self.serve_cfg.max_slots
         width = self._pick_width(plan)
         tokens = np.zeros((b, width), np.int32)
         count = np.zeros((b,), np.int32)
+        temps = np.zeros((b,), np.float32)
+        top_ks = np.zeros((b,), np.int32)
+        top_ps = np.ones((b,), np.float32)
+        rng = np.zeros((b, 2), np.uint32)
         n_prefill = 0
         for slot, n in plan.items():
             req = self.by_slot[slot]
@@ -253,12 +326,23 @@ class ContinuousBatchingEngine:
             else:
                 tokens[slot, 0] = req.generated[-1]
                 count[slot] = 1
+            sp = req.sampling
+            temps[slot] = sp.temperature
+            top_ks[slot] = sp.top_k
+            top_ps[slot] = sp.top_p
+            rng[slot] = sp.key_data()
 
         state = {
             "tokens": jnp.asarray(tokens),
             "count": jnp.asarray(count),
             "pos": jnp.asarray(self.slots.pos),
             "cache": self.slots.cache,
+            # sampling is data: per-slot controls + PRNG lanes, so the
+            # same executable serves any greedy/sampled mix
+            "temps": jnp.asarray(temps),
+            "top_ks": jnp.asarray(top_ks),
+            "top_ps": jnp.asarray(top_ps),
+            "rng": jnp.asarray(rng),
         }
         if self.serve_cfg.paged:
             # host table -> device, replicated under a mesh (every pool
@@ -277,6 +361,7 @@ class ContinuousBatchingEngine:
         self.slots.cache = new_state["cache"]
         self.slots.pos = self.slots.pos + count
 
+        events: List[TokenEvent] = []
         done_slots = []
         for slot, n in sorted(plan.items()):
             req = self.by_slot[slot]
@@ -287,9 +372,10 @@ class ContinuousBatchingEngine:
                     req.state = rq.DECODE
                     if req.first_token_step < 0:
                         req.first_token_step = self.clock
-                    # A resumed (preempted) request's re-prefill ends on
-                    # generated[-2]; the logits there re-predict the
-                    # already-known generated[-1] — don't emit it twice.
+                    # A resumed (recompute-preempted) request's
+                    # re-prefill ends on generated[-2]; the logits there
+                    # re-predict the already-known generated[-1] — don't
+                    # emit it twice.
                     if not req.generated:
                         emitted = int(nxt[slot])
             else:
@@ -303,6 +389,7 @@ class ContinuousBatchingEngine:
                     req.finish_step = self.clock
                     self.finished[req.rid] = req
                     done_slots.append(slot)
+                events.append(TokenEvent(req.rid, emitted, req.done))
         for slot in done_slots:
             del self.by_slot[slot]
             self.slots.free(slot)
@@ -320,17 +407,42 @@ class ContinuousBatchingEngine:
         self.decode_s += dt * (1.0 - frac)
         self._occupancy_sum += len(plan)
         self.clock += 1
-        return True
+        return events
 
-    def run(self, max_ticks: Optional[int] = None) -> Dict[int, np.ndarray]:
-        """Drive to completion (incl. future arrivals). rid -> tokens."""
+    def run(
+        self,
+        max_ticks: Optional[int] = None,
+        *,
+        on_token: Optional[Callable[[TokenEvent], None]] = None,
+    ) -> Dict[int, np.ndarray]:
+        """Drive to completion (incl. future arrivals). rid -> tokens.
+
+        ``on_token`` is called with each :class:`TokenEvent` the tick it
+        is generated — the callback flavour of the streaming API (use
+        :meth:`stream` for the iterator flavour)."""
         ticks = 0
         while self.waiting or self.by_slot:
-            self.step()
+            for ev in self.step():
+                if on_token is not None:
+                    on_token(ev)
             ticks += 1
             if max_ticks is not None and ticks >= max_ticks:
                 break
         return {rid: r.tokens() for rid, r in sorted(self.finished.items())}
+
+    def stream(self, max_ticks: Optional[int] = None) -> Iterator[TokenEvent]:
+        """Drive to completion, yielding each token as it is generated.
+
+        The iterator flavour of the streaming API: yields
+        :class:`TokenEvent` tuples in generation order (slot order
+        within a tick). Finished outputs accumulate in
+        :attr:`finished` as usual."""
+        ticks = 0
+        while self.waiting or self.by_slot:
+            yield from self.step()
+            ticks += 1
+            if max_ticks is not None and ticks >= max_ticks:
+                break
 
     # ------------------------------------------------------------------
     # stats
@@ -353,9 +465,14 @@ class ContinuousBatchingEngine:
         )
 
         def pct(p):
+            # nearest-rank percentile: the ceil(p*n/100)-th smallest
+            # sample (1-indexed), clamped into range — int(p/100*n)
+            # indexed one element too high (p50 of 2 samples returned
+            # the max)
             if not lat:
                 return 0.0
-            return lat[min(len(lat) - 1, int(p / 100.0 * len(lat)))]
+            n = len(lat)
+            return lat[min(n - 1, max(0, math.ceil(p * n / 100.0) - 1))]
 
         wall = sum(self.step_times)
         return {
@@ -369,6 +486,9 @@ class ContinuousBatchingEngine:
             / (steps * self.serve_cfg.max_slots),
             "peak_concurrency": self.peak_concurrency,
             "preemptions": self.preemptions,
+            "swap_preemptions": self.swap_preemptions,
+            "recompute_preemptions": self.recompute_preemptions,
+            "swapped_bytes": self.swapped_bytes,
             "padded_tokens": self.padded_tokens,
             "padding_efficiency": total_tokens / max(self.padded_tokens, 1),
             "wall_s": wall,

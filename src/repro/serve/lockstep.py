@@ -6,6 +6,13 @@ the whole batch decodes in lock-step until the *longest* generation
 finishes — finished requests burn decode slots as padding. It survives
 as (a) the reference the continuous engine must match token-for-token,
 and (b) the baseline `benchmarks/serve_latency.py` beats.
+
+The oracle covers sampling too: pass per-request
+:class:`~repro.serve.request.SamplingParams` and the lock-step decode
+draws through the same stateless per-position PRNG lanes as the
+continuous engine (subkey = ``fold_in(key_data(seed), position)``), so
+a seeded sampled continuous run must match the lock-step sampled run
+token-for-token — the property that makes sampling testable at all.
 """
 from __future__ import annotations
 
@@ -19,6 +26,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.launch import steps as steps_lib
 from repro.models import model as lm
+from repro.serve.request import SamplingParams
 
 
 def generate_lockstep(
@@ -30,8 +38,13 @@ def generate_lockstep(
     max_seq: int,
     frames: Optional[np.ndarray] = None,  # [B, enc_seq, d_model] (encdec)
     cache_dtype=jnp.float32,
+    sampling: Optional[Sequence[SamplingParams]] = None,
 ) -> Dict[str, object]:
-    """Greedy lock-step decode of one static batch.
+    """Lock-step decode of one static batch (greedy by default).
+
+    ``sampling`` (one :class:`SamplingParams` per request, or None for
+    all-greedy) routes decode through the same per-position PRNG lanes
+    as the continuous engine, making this the sampled parity oracle.
 
     Returns dict with ``tokens`` (list of per-request arrays, sliced to
     each request's gen_len), ``steps`` (model invocations: P-1 teacher
@@ -52,6 +65,20 @@ def generate_lockstep(
         "pos": jnp.int32(0),
         "cache": cache,
     }
+    if sampling is not None:
+        sampling = list(sampling)
+        if len(sampling) != b:
+            raise ValueError(
+                f"sampling has {len(sampling)} entries for batch {b}"
+            )
+        state["temps"] = jnp.asarray(
+            [s.temperature for s in sampling], jnp.float32
+        )
+        state["top_ks"] = jnp.asarray([s.top_k for s in sampling], jnp.int32)
+        state["top_ps"] = jnp.asarray([s.top_p for s in sampling], jnp.float32)
+        state["rng"] = jnp.asarray(
+            np.stack([s.key_data() for s in sampling]), jnp.uint32
+        )
     if cfg.family == "encdec":
         if frames is None:
             raise ValueError("encdec lock-step needs frames")
@@ -93,9 +120,11 @@ def generate_reference(
     max_seq: int,
     frames: Optional[np.ndarray] = None,  # [enc_seq, d_model]
     cache_dtype=jnp.float32,
+    sampling: Optional[SamplingParams] = None,
 ) -> np.ndarray:
-    """Single-request lock-step greedy decode — the per-request oracle
-    the continuous engine must reproduce token-for-token."""
+    """Single-request lock-step decode (greedy, or sampled via
+    ``sampling``) — the per-request oracle the continuous engine must
+    reproduce token-for-token."""
     out = generate_lockstep(
         cfg,
         params,
@@ -104,6 +133,7 @@ def generate_reference(
         max_seq=max_seq,
         frames=None if frames is None else np.asarray(frames)[None],
         cache_dtype=cache_dtype,
+        sampling=None if sampling is None else [sampling],
     )
     return out["tokens"][0]
 

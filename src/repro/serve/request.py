@@ -9,17 +9,33 @@ A request moves through::
 
 The engine owns the transitions; this module just holds the record and
 its bookkeeping (slot assignment, prefill progress, generated tokens,
-and per-token step/latency traces for the latency benchmark).
+sampling parameters, and per-token step/latency traces for the latency
+benchmark).
+
+**Sampling** is data carried on the request (:class:`SamplingParams`):
+temperature 0 is greedy decode, temperature > 0 samples with per-request
+top-k / top-p truncation from a per-request PRNG lane derived from
+``seed``. The lane is *stateless*: the subkey for the token emitted at
+absolute cache position ``p`` is ``fold_in(key_data(seed), p)``, so the
+sampled stream is a pure function of (seed, position) — invariant to
+chunking, slot assignment, batch composition and preemption.
 
 **Preemption** (paged engine only): when the block pool is exhausted the
 engine evicts a running request back to WAITING and frees its pages.
-Because decode is greedy (deterministic), the evicted request's cache
-contents can be *recomputed* instead of swapped out: on re-admission it
-re-prefills :attr:`Request.context` — the prompt plus every generated
-token except the newest — after which the newest generated token is fed
-as the next decode input, restoring exactly the state it was evicted
-from. The transition is :meth:`Request.preempt`; ``context`` and
-``remaining_prompt`` make the resume transparent to the scheduler.
+Two strategies exist:
+
+* **recompute** (:meth:`Request.preempt`) — drop the cache and
+  re-prefill :attr:`Request.context` (prompt plus every generated token
+  except the newest) on re-admission. Bit-exact **only for greedy
+  requests**: re-prefill replays argmax decisions exactly, but a sampled
+  request's cache would be rebuilt from tokens whose logits are then
+  *re-sampled* on the resumed decode path, so :meth:`Request.preempt`
+  raises on a sampled request rather than silently corrupting output.
+* **swap** (:meth:`Request.preempt_swap`) — the engine swaps the slot's
+  KV pages and SSM/conv rows to host memory
+  (:meth:`repro.serve.cache.PagedCacheManager.swap_out`) and restores
+  them on re-admission; positions are preserved so the stateless RNG
+  lane emits the identical token stream. Safe for any request.
 """
 from __future__ import annotations
 
@@ -34,18 +50,66 @@ DECODE = "decode"
 FINISHED = "finished"
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode controls, carried on :class:`Request` as data.
+
+    Attributes:
+      temperature: 0 (default) is greedy argmax decode; > 0 divides the
+        logits before sampling.
+      top_k: keep only the k highest logits before sampling (0 = off).
+      top_p: keep the smallest prefix of the sorted distribution with
+        cumulative probability >= top_p (1.0 = off). Applied after
+        top-k, matching the usual serving convention.
+      seed: PRNG lane seed. Two concurrent requests with the same seed
+        share a lane (their draws at equal positions coincide) — give
+        each request its own seed unless that is what you want.
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0 (0 = off), got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        """Greedy decode — deterministic without a PRNG lane."""
+        return self.temperature == 0.0
+
+    def key_data(self) -> np.ndarray:
+        """The request's base PRNG lane as raw ``uint32[2]`` key data.
+
+        Matches the threefry ``PRNGKey`` layout (hi word, lo word) so it
+        can ride in the jitted step state as a plain ``[B, 2]`` array
+        and be ``fold_in``-ed per emitted token on device.
+        """
+        return np.array(
+            [(self.seed >> 32) & 0xFFFFFFFF, self.seed & 0xFFFFFFFF],
+            np.uint32,
+        )
+
+
 @dataclasses.dataclass
 class Request:
     """One serving request.
 
     Args:
-      rid: unique id.
+      rid: unique id (the engine rejects duplicates at submit time).
       prompt: ``[P]`` int32 token ids (P >= 1).
-      max_new_tokens: generation budget (>= 1); greedy decode stops there.
+      max_new_tokens: generation budget (>= 1); decode stops there.
       arrival: engine tick at which the request becomes visible to
         admission (staggered/Poisson workloads).
       frames: optional ``[enc_seq, d_model]`` encoder input (encdec
         families); encoded once at admission.
+      sampling: per-request :class:`SamplingParams` (greedy default).
     """
 
     rid: int
@@ -53,6 +117,7 @@ class Request:
     max_new_tokens: int
     arrival: int = 0
     frames: Optional[np.ndarray] = None
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
 
     # --- engine-owned lifecycle state ---
     state: str = WAITING
@@ -62,6 +127,8 @@ class Request:
     preemptions: int = 0  # times evicted back to WAITING (paged engine)
     # recompute context after a preemption (None = plain prompt)
     _resume: Optional[np.ndarray] = None
+    # host-swapped cache state (SwappedSlot) awaiting re-admission
+    swap: Optional[object] = None
     # traces (engine ticks / seconds) for latency accounting
     first_token_step: int = -1
     finish_step: int = -1
@@ -81,9 +148,10 @@ class Request:
 
     @property
     def context(self) -> np.ndarray:
-        """Tokens to prefill: the prompt, or — after a preemption — the
-        prompt plus all generated tokens but the newest (the newest is
-        the next decode input, so it is never cached ahead of time)."""
+        """Tokens to prefill: the prompt, or — after a recompute
+        preemption — the prompt plus all generated tokens but the newest
+        (the newest is the next decode input, so it is never cached
+        ahead of time)."""
         return self.prompt if self._resume is None else self._resume
 
     @property
@@ -99,11 +167,22 @@ class Request:
         return len(self.generated) >= self.max_new_tokens
 
     def preempt(self) -> None:
-        """Evict back to WAITING (paged engine, block-pool exhaustion).
+        """Evict back to WAITING with **recompute** on re-admission.
 
         Drops all cache progress; records the recompute context so
         re-admission restores the cache bit-exactly under greedy decode.
+        Raises for a sampled request — re-sampling the resumed decode
+        stream would silently diverge from the unpreempted run; the
+        engine must swap sampled requests instead
+        (:meth:`preempt_swap`).
         """
+        if not self.sampling.greedy:
+            raise RuntimeError(
+                f"request {self.rid}: recompute preemption requested for a "
+                f"sampled request (temperature={self.sampling.temperature}); "
+                "recompute is only bit-exact under greedy decode — use swap "
+                "preemption (ServeConfig.preempt='swap' or 'auto')"
+            )
         if self.generated:
             self._resume = np.concatenate(
                 [self.prompt, np.asarray(self.generated[:-1], np.int32)]
@@ -114,6 +193,26 @@ class Request:
         self.slot = -1
         self.prefilled = 0
         self.preemptions += 1
+
+    def preempt_swap(self, swapped) -> None:
+        """Evict back to WAITING with the cache **swapped** to host.
+
+        ``swapped`` is the :class:`repro.serve.cache.SwappedSlot` bundle
+        the engine got from ``swap_out``; prefill progress and positions
+        are preserved, so re-admission restores the exact device state
+        (and the stateless RNG lane re-emits the identical sampled
+        stream). Safe for greedy and sampled requests alike.
+        """
+        self.swap = swapped
+        self.state = WAITING
+        self.slot = -1
+        self.preemptions += 1
+
+    def resume_from_swap(self) -> None:
+        """Called by the engine after ``swap_in``: drop the host bundle
+        and restore the state the request was evicted in."""
+        self.swap = None
+        self.state = DECODE if self.remaining_prompt == 0 else PREFILL
 
     def tokens(self) -> np.ndarray:
         return np.asarray(self.generated, np.int32)

@@ -56,7 +56,16 @@ class ServeConfig:
         biggest chunk is 3 runs at width 4 instead of padding every
         row to ``prefill_chunk``. Default ``(1, 4)`` gives the ladder
         {1, 4, prefill_chunk}; ``(1,)`` reproduces the old two-width
-        behaviour.
+        behaviour. Entries above ``prefill_chunk`` or duplicated are
+        rejected at construction (a width above the chunk would never
+        be picked; silently dropping it hid config typos).
+      preempt: pool-exhaustion eviction strategy (paged engine).
+        ``"recompute"`` drops the victim's cache and re-prefills its
+        token history on re-admission — cheapest, but bit-exact only
+        for greedy requests (``Request.preempt`` enforces this);
+        ``"swap"`` stages the victim's KV pages + SSM/conv rows on the
+        host and restores them — correct for any request; ``"auto"``
+        (default) swaps sampled requests and recomputes greedy ones.
     """
 
     max_slots: int
@@ -66,6 +75,7 @@ class ServeConfig:
     block_size: int = 0
     n_blocks: int = 0
     decode_widths: Tuple[int, ...] = (1, 4)
+    preempt: str = "auto"
 
     def __post_init__(self):
         if self.max_slots < 1:
@@ -82,6 +92,24 @@ class ServeConfig:
             raise ValueError("n_blocks requires block_size > 0")
         if any(w < 1 for w in self.decode_widths):
             raise ValueError("decode_widths must be >= 1")
+        if len(set(self.decode_widths)) != len(self.decode_widths):
+            raise ValueError(
+                f"decode_widths {self.decode_widths} contains duplicates — "
+                "each compiled width should appear once"
+            )
+        too_wide = [w for w in self.decode_widths if w > self.prefill_chunk]
+        if too_wide:
+            raise ValueError(
+                f"decode_widths {too_wide} exceed prefill_chunk "
+                f"{self.prefill_chunk}: no step is ever planned wider than "
+                "the chunk, so these widths would never be picked — drop "
+                "them or raise prefill_chunk"
+            )
+        if self.preempt not in ("auto", "swap", "recompute"):
+            raise ValueError(
+                f"unknown preemption policy {self.preempt!r}: expected "
+                "'auto', 'swap' or 'recompute'"
+            )
 
     @property
     def budget(self) -> int:
@@ -133,9 +161,11 @@ class Scheduler:
         ``waiting`` must be sorted by (arrival, rid); returns the prefix
         to admit (the caller assigns slots and removes them from the
         queue). With the paged cache, ``n_free_blocks`` additionally
-        gates each candidate on the pages its prefill context needs —
-        the free count is debited as candidates are accepted, and the
-        first shortfall stops admission (FIFO head-of-line).
+        gates each candidate on the pages it needs up front — its
+        prefill context, or for a swapped-out request the exact page
+        count of its staged cache — the free count is debited as
+        candidates are accepted, and the first shortfall stops admission
+        (FIFO head-of-line).
         """
         out = []
         blocks = n_free_blocks
@@ -143,7 +173,10 @@ class Scheduler:
             if len(out) >= n_free or req.arrival > clock:
                 break
             if self.cfg.paged and blocks is not None:
-                need = -(-req.context_len // self.cfg.block_size)
+                if req.swap is not None:
+                    need = req.swap.n_pages
+                else:
+                    need = -(-req.context_len // self.cfg.block_size)
                 if need > blocks:
                     break
                 blocks -= need

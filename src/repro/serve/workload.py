@@ -13,7 +13,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.serve.request import Request
+from repro.serve.request import Request, SamplingParams
 
 
 def poisson_workload(
@@ -25,6 +25,9 @@ def poisson_workload(
     gen_len=(4, 24),  # int or (lo, hi) inclusive
     seed: int = 0,
     uniform_prompts: bool = False,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    top_p: float = 1.0,
 ) -> List[Request]:
     """Build a staggered request list for ``cfg``.
 
@@ -34,6 +37,11 @@ def poisson_workload(
     ``uniform_prompts=True`` fixes every prompt at ``prompt_len``'s max
     so the lock-step baseline (which needs a rectangular prompt batch)
     can run the identical workload.
+
+    ``temperature`` > 0 makes every request sampled (with the given
+    ``top_k``/``top_p``) under a per-request seed drawn from the
+    workload generator — so the whole workload, including each
+    request's sampled stream, is reproducible from ``seed``.
     """
     rng = np.random.default_rng(seed)
 
@@ -57,6 +65,14 @@ def poisson_workload(
             frames = rng.standard_normal((cfg.enc_seq, cfg.d_model)).astype(
                 np.float32
             )
+        sp = SamplingParams()
+        if temperature > 0:
+            sp = SamplingParams(
+                temperature=temperature,
+                top_k=top_k,
+                top_p=top_p,
+                seed=int(rng.integers(2**31)),
+            )
         reqs.append(
             Request(
                 rid=i,
@@ -64,6 +80,7 @@ def poisson_workload(
                 max_new_tokens=g,
                 arrival=int(arrivals[i]),
                 frames=frames,
+                sampling=sp,
             )
         )
     return reqs

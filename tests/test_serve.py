@@ -2,11 +2,13 @@
 
 The load-bearing properties:
 
-* **parity** — greedy output is identical per request to lock-step
-  decode of the same prompt, across all four model families (decoder,
-  ssm, moe, encdec) and BOTH cache layouts (contiguous slots and the
-  paged/block pool), under staggered arrivals, ragged prompt/generation
-  lengths, chunked prefill, slot reuse and — paged — preemption;
+* **parity** — greedy AND sampled output is identical per request to
+  lock-step decode of the same prompt, across all four model families
+  (decoder, ssm, moe, encdec) and BOTH cache layouts (contiguous slots
+  and the paged/block pool), under staggered arrivals, ragged
+  prompt/generation lengths, chunked prefill, slot reuse and — paged —
+  preemption (recompute for greedy, host swap for sampled, including
+  victims evicted mid-PREFILL);
 * **isolation** — a reused slot carries nothing over from its previous
   occupant (KV rows are fenced by causal masking, SSM/conv state is
   zeroed on admission), and a reused *page* reads back zero before its
@@ -27,14 +29,18 @@ import pytest
 from repro.configs.registry import get_config
 from repro.models import model as lm
 from repro.serve import (
+    PREFILL,
+    WAITING,
     BlockAllocator,
     ContinuousBatchingEngine,
     NoFreeBlocks,
     PagedCacheManager,
     Request,
+    SamplingParams,
     Scheduler,
     ServeConfig,
     SlotCacheManager,
+    TokenEvent,
     generate_lockstep,
     generate_reference,
     lockstep_waves,
@@ -411,3 +417,367 @@ def test_submit_rejects_oversized_request():
     )
     with pytest.raises(ValueError):
         eng.submit(Request(rid=0, prompt=np.zeros(6, np.int32), max_new_tokens=4))
+
+
+# ----------------------------------------------------------------------
+# sampling
+# ----------------------------------------------------------------------
+
+
+def test_sampling_params_validation():
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=1.5)
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy
+
+
+def test_sampling_key_data_matches_prngkey():
+    """The raw uint32[2] lane the engine ships in step state must be the
+    same key PRNGKey(seed) would build — that identity is what lets the
+    host-side numpy path and jax.random.fold_in agree on every draw."""
+    for seed in (0, 1, 42, 123456789):
+        np.testing.assert_array_equal(
+            SamplingParams(temperature=1.0, seed=seed).key_data(),
+            jax.random.key_data(jax.random.PRNGKey(seed)),
+        )
+
+
+def test_request_preempt_raises_for_sampled():
+    """The latent recompute-assumes-greedy bug, now a checked invariant:
+    recompute preemption of a sampled request must refuse loudly."""
+    req = Request(
+        rid=0, prompt=np.zeros(3, np.int32), max_new_tokens=2,
+        sampling=SamplingParams(temperature=1.0, seed=7),
+    )
+    with pytest.raises(RuntimeError, match="swap"):
+        req.preempt()
+    assert req.preemptions == 0  # refused, not half-applied
+    req.preempt_swap(object())  # the swap path accepts any request
+    assert req.preemptions == 1 and req.state == WAITING
+
+
+@pytest.mark.parametrize("engine", ["contiguous", "paged"])
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_engine_matches_lockstep_sampled(family, engine):
+    """Sampled parity grid: per-request temperature/top-k/top-p with
+    per-request seeds through the continuous engine == the sampled
+    lock-step oracle, token-for-token. The streaming callback events
+    are checked against the same outputs for free."""
+    cfg, params = _setup(FAMILY_ARCHS[family])
+    reqs = poisson_workload(
+        cfg, n_requests=5, arrival_rate=0.8, prompt_len=(3, 7),
+        gen_len=(3, 8), seed=13, temperature=0.8, top_k=12, top_p=0.9,
+    )
+    assert all(not r.sampling.greedy for r in reqs)
+    assert len({r.sampling.seed for r in reqs}) == len(reqs)
+    kw = PAGED_KW if engine == "paged" else {}
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ServeConfig(max_slots=2, max_seq=MAX_SEQ, prefill_chunk=4, **kw),
+    )
+    for r in reqs:
+        eng.submit(r)
+    events = []
+    out = eng.run(on_token=events.append)
+    for r in reqs:
+        ref = generate_reference(
+            cfg, params, r.prompt, r.max_new_tokens, max_seq=MAX_SEQ,
+            frames=r.frames, sampling=r.sampling,
+        )
+        np.testing.assert_array_equal(
+            out[r.rid], ref, err_msg=f"{family}/{engine} rid={r.rid}"
+        )
+    # the event stream IS the outputs, with is_last exactly once per rid
+    per = {}
+    for ev in events:
+        per.setdefault(ev.rid, []).append(ev.token)
+    for r in reqs:
+        np.testing.assert_array_equal(
+            np.asarray(per[r.rid], np.int32), out[r.rid]
+        )
+    assert sum(1 for ev in events if ev.is_last) == len(reqs)
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_sampled_determinism_under_forced_preemption(family):
+    """The headline bugfix claim: a seeded sampled workload through a
+    pool too small for the working set (forced swap evictions) is
+    bit-identical to the same workload through a pressure-free pool."""
+    cfg, params = _setup(FAMILY_ARCHS[family])
+
+    def wl():
+        return poisson_workload(
+            cfg, n_requests=6, arrival_rate=2.0, prompt_len=(3, 7),
+            gen_len=(6, 12), seed=5, temperature=0.7, top_k=12,
+        )
+
+    forced_eng, forced_out = _run_engine(
+        cfg, params, wl(), slots=3, block_size=4, n_blocks=7,
+    )
+    assert forced_eng.swap_preemptions > 0, "pool never pressured — vacuous"
+    assert forced_eng.recompute_preemptions == 0  # auto never recomputes sampled
+    free_eng, free_out = _run_engine(
+        cfg, params, wl(), slots=3, block_size=4, n_blocks=18,
+    )
+    assert free_eng.preemptions == 0, "reference run was pressured — vacuous"
+    for rid in free_out:
+        np.testing.assert_array_equal(
+            forced_out[rid], free_out[rid], err_msg=f"{family} rid={rid}"
+        )
+
+
+def test_greedy_swap_and_recompute_agree():
+    """Same greedy workload under forced preemption, both policies:
+    identical outputs, and swap finishes in no more engine steps (it
+    re-prefills nothing)."""
+    cfg, params = _setup(FAMILY_ARCHS["decoder"])
+
+    def wl():
+        return poisson_workload(
+            cfg, n_requests=6, arrival_rate=2.0, prompt_len=(3, 7),
+            gen_len=(6, 12), seed=5,
+        )
+
+    swap_eng, swap_out = _run_engine(
+        cfg, params, wl(), slots=3, block_size=4, n_blocks=7, preempt="swap",
+    )
+    rec_eng, rec_out = _run_engine(
+        cfg, params, wl(), slots=3, block_size=4, n_blocks=7,
+        preempt="recompute",
+    )
+    assert swap_eng.swap_preemptions > 0
+    assert rec_eng.recompute_preemptions > 0
+    for rid in rec_out:
+        np.testing.assert_array_equal(
+            swap_out[rid], rec_out[rid], err_msg=f"rid={rid}"
+        )
+    assert (
+        swap_eng.stats()["compute_steps"] <= rec_eng.stats()["compute_steps"]
+    )
+
+
+@pytest.mark.parametrize("mode", ["swap", "recompute"])
+def test_mid_prefill_preemption_keeps_parity(mode):
+    """A victim evicted while STILL PREFILLING its original prompt: the
+    swap path must resume the chunked prefill where it stopped, the
+    recompute path must restart the context from zero (empty-generated
+    branch) — both ending bit-exact vs the lock-step oracle."""
+    cfg, params = _setup(FAMILY_ARCHS["decoder"])
+    sp = (
+        SamplingParams(temperature=0.7, top_k=8, seed=123)
+        if mode == "swap"
+        else SamplingParams()
+    )
+    req = Request(
+        rid=0, prompt=(np.arange(12, dtype=np.int32) % cfg.vocab),
+        max_new_tokens=8, sampling=sp,
+    )
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ServeConfig(max_slots=2, max_seq=MAX_SEQ, prefill_chunk=4,
+                    block_size=4, preempt=mode),
+    )
+    eng.submit(req)
+    eng.step()  # admit + first prefill chunk
+    assert req.state == PREFILL and 0 < req.prefilled < req.prompt_len
+    eng._preempt(req.slot)
+    assert req.preemptions == 1 and req.state == WAITING
+    if mode == "swap":
+        assert req.swap is not None and req.prefilled == 4  # resumes mid-way
+    else:
+        assert req.swap is None and req.prefilled == 0  # restarts
+        assert req.context_len == req.prompt_len  # nothing generated yet
+    out = eng.run()
+    ref = generate_reference(
+        cfg, params, req.prompt, req.max_new_tokens, max_seq=MAX_SEQ,
+        sampling=sp if mode == "swap" else None,
+    )
+    np.testing.assert_array_equal(out[0], ref)
+
+
+def test_second_preemption_during_reprefill_keeps_parity():
+    """A recompute victim evicted AGAIN while re-prefilling its resumed
+    context (prompt + generated tokens): prefill progress through the
+    recompute context must restart cleanly a second time."""
+    cfg, params = _setup(FAMILY_ARCHS["decoder"])
+    req = Request(
+        rid=0, prompt=(np.arange(6, dtype=np.int32) % cfg.vocab),
+        max_new_tokens=8,
+    )
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ServeConfig(max_slots=2, max_seq=MAX_SEQ, prefill_chunk=4,
+                    block_size=4, preempt="recompute"),
+    )
+    eng.submit(req)
+    guard = 0
+    while len(req.generated) < 3:
+        eng.step()
+        guard += 1
+        assert guard < 50
+    eng._preempt(req.slot)
+    # resumed context = prompt + generated[:-1] (newest re-fed, not cached)
+    assert req.preemptions == 1
+    assert req.context_len == req.prompt_len + len(req.generated) - 1
+    while not (req.state == PREFILL and 0 < req.prefilled < req.context_len):
+        eng.step()
+        guard += 1
+        assert guard < 50
+    eng._preempt(req.slot)  # mid-RE-prefill this time
+    assert req.preemptions == 2 and req.prefilled == 0
+    out = eng.run()
+    ref = generate_reference(
+        cfg, params, req.prompt, req.max_new_tokens, max_seq=MAX_SEQ,
+    )
+    np.testing.assert_array_equal(out[0], ref)
+
+
+def test_swap_roundtrip_restores_device_state():
+    """Unit swap cycle: dirty a slot via real model writes, swap out
+    (slot + pages freed, pages zeroed), swap back into a fresh slot —
+    the staged bundle must land bit-identical at the new pages."""
+    cfg, params = _setup(FAMILY_ARCHS["decoder"])
+    mgr = PagedCacheManager(cfg, 2, 16, block_size=4, n_blocks=6)
+    slot = mgr.alloc()
+    assert mgr.ensure(slot, 7)  # 2 pages
+    pages = mgr.block_tables[slot, :2].tolist()
+    toks = jnp.asarray(np.arange(7, dtype=np.int32)[None].repeat(2, 0))
+    _, mgr.cache = lm.decode_slots(
+        cfg, params, toks, mgr.cache,
+        jnp.zeros((2,), jnp.int32),
+        jnp.asarray(np.array([7, 0], np.int32)),
+        block_tables=jnp.asarray(mgr.block_tables),
+    )
+    mgr.pos[slot] = 7
+    swapped = mgr.swap_out(slot)
+    assert swapped.pos == 7 and swapped.n_pages == 2
+    assert swapped.nbytes > 0
+    assert mgr.n_free == 2  # slot freed by the swap-out
+    for p in pages:  # zero-on-free still holds for swapped-out pages
+        for leaf in mgr.page_view(p):
+            assert float(np.abs(leaf).max()) == 0.0
+    with pytest.raises(ValueError):
+        mgr.swap_out(slot)  # free slot has nothing to stage
+
+    slot2 = mgr.alloc()
+    assert mgr.swap_in(slot2, swapped)
+    assert int(mgr.pos[slot2]) == 7
+    new_pages = mgr.block_tables[slot2, :2].tolist()
+    restored = lm.swap_out_slot(mgr.cache, slot2, new_pages)
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(swapped.data)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_swap_in_fails_cleanly_when_pool_full():
+    cfg, params = _setup(FAMILY_ARCHS["decoder"])
+    mgr = PagedCacheManager(cfg, 3, 16, block_size=4, n_blocks=4)
+    slot = mgr.alloc()
+    assert mgr.ensure(slot, 8)  # 2 pages
+    mgr.pos[slot] = 8
+    swapped = mgr.swap_out(slot)
+    hog = mgr.alloc()
+    assert mgr.ensure(hog, 13)  # 4 pages — whole pool
+    back = mgr.alloc()
+    assert not mgr.swap_in(back, swapped)  # no pages: report, don't raise
+    assert int(mgr.pos[back]) == 0  # nothing half-restored
+
+
+def test_streaming_iterator_matches_finished_outputs():
+    cfg, params = _setup(FAMILY_ARCHS["decoder"])
+    reqs = poisson_workload(
+        cfg, n_requests=4, arrival_rate=1.0, prompt_len=(3, 6),
+        gen_len=(3, 7), seed=21, temperature=0.9, top_p=0.9,
+    )
+    eng = ContinuousBatchingEngine(
+        cfg, params, ServeConfig(max_slots=2, max_seq=MAX_SEQ, prefill_chunk=4)
+    )
+    for r in reqs:
+        eng.submit(r)
+    events = list(eng.stream())
+    assert all(isinstance(ev, TokenEvent) for ev in events)
+    out = {rid: r.tokens() for rid, r in eng.finished.items()}
+    per, last = {}, {}
+    for ev in events:
+        per.setdefault(ev.rid, []).append(ev.token)
+        last[ev.rid] = ev.is_last
+    for r in reqs:
+        np.testing.assert_array_equal(
+            np.asarray(per[r.rid], np.int32), out[r.rid]
+        )
+        assert last[r.rid]  # final event per rid carries is_last
+    assert sum(1 for ev in events if ev.is_last) == len(reqs)
+
+
+# ----------------------------------------------------------------------
+# satellite fixes: percentile, config validation, duplicate rids
+# ----------------------------------------------------------------------
+
+
+def test_stats_percentile_nearest_rank():
+    """Golden nearest-rank values: p50 of 2 samples is the SMALLER one
+    (the old int(p/100*n) index returned the max), p50 of 10 is the
+    5th smallest, p99 of 10 is the max, and 1 sample is its own p50."""
+    cfg, params = _setup(FAMILY_ARCHS["decoder"])
+    eng = ContinuousBatchingEngine(
+        cfg, params, ServeConfig(max_slots=1, max_seq=MAX_SEQ)
+    )
+
+    def fake(rid, lats):
+        r = Request(rid=rid, prompt=np.zeros(1, np.int32),
+                    max_new_tokens=len(lats))
+        r.token_latencies = list(lats)
+        r.generated = [0] * len(lats)
+        return r
+
+    eng.finished = {0: fake(0, [0.002, 0.001])}
+    assert eng.stats()["p50_token_latency_s"] == 0.001
+    eng.finished = {0: fake(0, [i / 1000.0 for i in range(1, 11)])}
+    assert eng.stats()["p50_token_latency_s"] == 0.005
+    assert eng.stats()["p99_token_latency_s"] == 0.010
+    eng.finished = {0: fake(0, [0.004])}
+    assert eng.stats()["p50_token_latency_s"] == 0.004
+    eng.finished = {}
+    assert eng.stats()["p50_token_latency_s"] == 0.0
+
+
+def test_serve_config_rejects_bad_decode_widths():
+    with pytest.raises(ValueError, match="duplicates"):
+        ServeConfig(max_slots=2, max_seq=32, prefill_chunk=8,
+                    decode_widths=(1, 4, 4))
+    with pytest.raises(ValueError, match="exceed prefill_chunk"):
+        ServeConfig(max_slots=2, max_seq=32, prefill_chunk=4,
+                    decode_widths=(1, 8))
+
+
+def test_serve_config_rejects_bad_preempt():
+    with pytest.raises(ValueError, match="preemption policy"):
+        ServeConfig(max_slots=2, max_seq=32, preempt="drop")
+    for mode in ("auto", "swap", "recompute"):
+        assert ServeConfig(max_slots=2, max_seq=32, preempt=mode).preempt == mode
+
+
+def test_submit_rejects_duplicate_rid():
+    """A duplicate rid would silently overwrite the first request's
+    output in ``finished`` — reject across waiting/running/finished."""
+    cfg, params = _setup(FAMILY_ARCHS["decoder"])
+    eng = ContinuousBatchingEngine(
+        cfg, params, ServeConfig(max_slots=2, max_seq=MAX_SEQ)
+    )
+
+    def mk(rid):
+        return Request(rid=rid, prompt=np.zeros(3, np.int32), max_new_tokens=2)
+
+    eng.submit(mk(7))
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit(mk(7))  # still waiting
+    eng.run()
+    with pytest.raises(ValueError, match="duplicate"):
+        eng.submit(mk(7))  # finished rids stay reserved
+    eng.submit(mk(8))  # fresh rid is fine
+    assert len(eng.run()) == 2
