@@ -1,0 +1,172 @@
+"""Kernel-level before/after table for the Pallas fusion pass.
+
+One row per fusion, each an A/B against the path it replaces:
+
+* **fused im2col** — whole-model backward HBM traffic with the
+  materializing canonical path (real ``X2``/``dX2`` patch buffers)
+  vs the engine's fused routing, from the analytic bytes model
+  (``repro.core.flops.conv_backward_bytes_policy``). Asserted: fused
+  never moves more bytes (the traffic model is also the routing gate).
+* **paged attention** — the serving engine with the per-layer
+  ``pool[block_tables]`` gather vs the in-place Pallas kernel.
+  Asserted: token-for-token parity and the 3x->1x pool-bytes model.
+* **micro parity cells** — the fused kernels against their materialized
+  oracles on one concrete small geometry, numerically (asserted) and
+  wall-clock (informational: interpret-mode timings don't predict TPU).
+
+Emits ``name,us_per_call,derived`` CSV like every table and writes
+``BENCH_kernels.json`` next to this file.
+
+Run:  PYTHONPATH=src python benchmarks/kernels_table.py [--smoke]
+"""
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+ATTN_ARCH = "qwen2.5-3b"
+
+
+def conv_micro_rows() -> list:
+    """Fused vs materializing backward on one concrete layer, asserted
+    numerically equal (to fp32 tolerance) and timed informational."""
+    from repro.core.conv import sparse_conv2d
+    from repro.core.policy import tpu_default
+
+    pol = dataclasses.replace(tpu_default(0.5), block_size=4, use_pallas=True)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 8, 16, 16), jnp.float32)
+    w = jax.random.normal(key, (16, 8, 3, 3), jnp.float32) * 0.1
+    grads, times = {}, {}
+    for label, fuse in (("fused", True), ("materializing", False)):
+        p = dataclasses.replace(pol, fuse_im2col=fuse)
+
+        def f(x, w):
+            return sparse_conv2d(x, w, padding=1, policy=p).sum()
+
+        g = jax.jit(jax.grad(f, argnums=(0, 1)))
+        grads[label] = jax.block_until_ready(g(x, w))
+        times[label] = time_fn(g, x, w, iters=3, warmup=1)
+    dx_err = float(jnp.max(jnp.abs(grads["fused"][0] - grads["materializing"][0])))
+    dw_err = float(jnp.max(jnp.abs(grads["fused"][1] - grads["materializing"][1])))
+    assert dx_err < 1e-4 and dw_err < 1e-4, (
+        f"fused im2col diverged from materialized oracle: "
+        f"dx_err={dx_err} dw_err={dw_err}"
+    )
+    return [{
+        "kernel": "conv_backward_fused_im2col",
+        "shape": "b2c8x16k3/bs4/drop0.5",
+        "dx_err": dx_err,
+        "dw_err": dw_err,
+        "fused_us": times["fused"],
+        "materializing_us": times["materializing"],
+    }]
+
+
+def attn_micro_row() -> dict:
+    """Paged-attention kernel vs the gather+masked-attention reference
+    on one small paged cache — max abs error asserted."""
+    from repro.kernels import ops as kops
+
+    key = jax.random.PRNGKey(1)
+    b, s, h, kv, d = 3, 2, 4, 2, 8
+    n_pages, bs_pg, nb = 10, 4, 3
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, s, h, d), jnp.float32)
+    k_pool = jax.random.normal(ks[1], (n_pages, bs_pg, kv, d), jnp.float32)
+    v_pool = jax.random.normal(ks[2], (n_pages, bs_pg, kv, d), jnp.float32)
+    tables = jax.random.randint(ks[3], (b, nb), 0, n_pages)
+    qpos = jnp.array([[3, 4], [0, 1], [7, 8]], jnp.int32)
+
+    out = kops.paged_attention(q, k_pool, v_pool, tables, qpos)
+
+    # reference: materialize the gather, run masked attention per slot
+    kg = k_pool[tables].reshape(b, nb * bs_pg, kv, d)
+    vg = v_pool[tables].reshape(b, nb * bs_pg, kv, d)
+    g = h // kv
+    kk = jnp.repeat(kg, g, axis=2)
+    vv = jnp.repeat(vg, g, axis=2)
+    t = jnp.arange(nb * bs_pg)
+    mask = t[None, None, :] <= qpos[:, :, None]
+    scores = jnp.einsum("bshd,bthd->bhst", q, kk) / np.sqrt(d)
+    scores = jnp.where(mask[:, None], scores, -1e30)
+    ref = jnp.einsum("bhst,bthd->bshd", jax.nn.softmax(scores, axis=-1), vv)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    assert err < 1e-4, f"paged attention diverged from gather oracle: {err}"
+    us = time_fn(
+        lambda: kops.paged_attention(q, k_pool, v_pool, tables, qpos),
+        iters=3, warmup=1,
+    )
+    return {
+        "kernel": "paged_attention",
+        "shape": f"b{b}s{s}h{h}kv{kv}d{d}/pages{n_pages}x{bs_pg}",
+        "max_err": err,
+        "kernel_us": us,
+    }
+
+
+def run(json_path=None, smoke=False):
+    from benchmarks import roofline, serve_latency
+
+    rows = []
+    for row in roofline.iter_fusion_rows():
+        rows.append({"kernel": "fused_im2col", **row})
+        emit(
+            f"kernels/fused_im2col/{row['arch']}",
+            row["fused_s"] * 1e6,
+            f"mat_bytes={row['materializing_bytes']};"
+            f"fused_bytes={row['fused_bytes']};"
+            f"bytes_saved={row['bytes_saved']:.3f}",
+        )
+    for row in conv_micro_rows():
+        rows.append(row)
+        emit(
+            f"kernels/{row['kernel']}",
+            row["fused_us"],
+            f"mat_us={row['materializing_us']:.1f};"
+            f"dx_err={row['dx_err']:.2e};dw_err={row['dw_err']:.2e}",
+        )
+    arow = attn_micro_row()
+    rows.append(arow)
+    emit(
+        f"kernels/{arow['kernel']}",
+        arow["kernel_us"],
+        f"max_err={arow['max_err']:.2e};gather parity OK",
+    )
+    if not smoke:
+        srow = serve_latency.bench_attn_kernel(ATTN_ARCH)
+        rows.append({"kernel": "paged_attention_engine", **srow})
+        emit(
+            f"kernels/paged_attention_engine/{srow['arch']}",
+            srow["kernel_wall_s"] / max(srow["kernel_steps"], 1) * 1e6,
+            f"kv_bytes/step {srow['kernel_kv_bytes_per_step']} vs gather"
+            f" {srow['gather_kv_bytes_per_step']};token parity OK",
+        )
+    path = json_path or os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="skip the engine-level paged-attention A/B (CI)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(json_path=args.json, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -257,6 +257,31 @@ def _conv_flops(model: str, batch: int, image, policy):
     return resnet.flops_per_iter(model, batch, image, policy=policy)
 
 
+def _conv_sites(model: str, image):
+    from repro.models import ddpm, resnet
+
+    if model == "ddpm":
+        return ddpm.iter_conv_shapes(image)
+    return resnet.iter_conv_shapes(model, image)
+
+
+def _conv_bytes(model: str, batch: int, image, policy, fused=None) -> int:
+    """Whole-model backward HBM traffic (conv_backward_bytes_policy).
+
+    ``fused=None`` counts what the engine actually routes (the traffic
+    model picks fused vs materializing per site); False/True force one
+    regime for the A/B rows.
+    """
+    from repro.core import flops as F
+
+    return sum(
+        F.conv_backward_bytes_site(
+            batch, h, w, ci, co, k, policy, site, fused=fused
+        )
+        for site, ci, co, k, h, w in _conv_sites(model, image)
+    )
+
+
 @functools.lru_cache(maxsize=None)
 def _conv_param_bytes(model: str, image) -> float:
     from repro.models import ddpm, resnet
@@ -283,13 +308,18 @@ def conv_roofline_row(model: str, batch: int, image, policy_name: str):
     kept blocks and the Pallas path counts its 128-aligned tile padding,
     so the block/Pallas rows genuinely reflect what the unified backward
     engine executes, not the nominal channel top-k rate. The memory term
-    is a weights-only lower bound (grad write + read + param read).
+    is the policy-aware bytes-moved model
+    (``conv_backward_bytes_policy`` summed over the model's conv sites)
+    plus the weights traffic (grad write + read + param read) — the
+    bytes column rides next to the FLOPs columns so compute- vs
+    memory-bound is read off the same row.
     """
     policy = _conv_policy(model, policy_name)
     dense_f, policy_f = _conv_flops(model, batch, image, policy)
     p_bytes = _conv_param_bytes(model, image)
+    bytes_moved = _conv_bytes(model, batch, image, policy)
     compute_t = policy_f / PEAK_FLOPS
-    memory_t = 3 * p_bytes / HBM_BW
+    memory_t = (bytes_moved + 3 * p_bytes) / HBM_BW
     return {
         "arch": model,
         "shape": f"b{batch}x{image[1]}",
@@ -300,6 +330,7 @@ def conv_roofline_row(model: str, batch: int, image, policy_name: str):
         "dominant": "compute" if compute_t >= memory_t else "memory",
         "dense_flops": dense_f,
         "policy_flops": policy_f,
+        "bytes_moved": bytes_moved,
         "saved": 1.0 - policy_f / dense_f,
     }
 
@@ -309,6 +340,78 @@ def iter_conv_rows():
     for model, batch, image in _CONV_CELLS:
         for pname in _CONV_POLICY_NAMES:
             yield conv_roofline_row(model, batch, image, pname)
+
+
+def conv_fusion_row(model: str, batch: int, image, policy_name: str):
+    """Before/after HBM traffic of the fused-im2col backward.
+
+    'Before' forces the materializing canonical path (real ``X2``/``dX2``
+    patch buffers at every site); 'after' is the engine's actual routing
+    (the traffic model picks fused or materializing per site). The
+    assertion is the fusion's contract: the routed path never moves more
+    bytes than materializing, because routing falls back wherever fusing
+    would lose (1x1 convs, tiny-``C_in`` stems, degenerate outputs).
+    """
+    policy = _conv_policy(model, policy_name)
+    mat = _conv_bytes(model, batch, image, policy, fused=False)
+    fus = _conv_bytes(model, batch, image, policy, fused=None)
+    assert fus <= mat, (
+        f"fused im2col moves more bytes than materializing for {model}/"
+        f"{policy_name}: {fus} > {mat} — the routing gate is broken"
+    )
+    return {
+        "arch": model,
+        "shape": f"b{batch}x{image[1]}",
+        "policy": policy_name,
+        "status": "ok",
+        "materializing_bytes": mat,
+        "fused_bytes": fus,
+        "materializing_s": mat / HBM_BW,
+        "fused_s": fus / HBM_BW,
+        "bytes_saved": 1.0 - fus / mat,
+    }
+
+
+# fusion A/B only makes sense where the engine has a fused path to take
+_FUSION_POLICY_NAMES = ("ssprop_block_pallas",)
+
+
+def _measured_fusion_cell():
+    """One measured wall-clock A/B of fuse_im2col on a small layer.
+
+    Interpret-mode Pallas timings do not predict TPU wall-clock — the
+    asserted quantity is the analytic bytes model above; this row exists
+    so the harness records that both variants actually execute, and the
+    timing is informational.
+    """
+    import time
+
+    from repro.core.conv import sparse_conv2d
+
+    pol = dataclasses.replace(tpu_default(0.5), block_size=4, use_pallas=True)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 8, 16, 16), jnp.float32)
+    w = jax.random.normal(key, (16, 8, 3, 3), jnp.float32) * 0.1
+    out = {}
+    for label, fuse in (("fused", True), ("materializing", False)):
+        p = dataclasses.replace(pol, fuse_im2col=fuse)
+
+        def f(x, w):
+            return sparse_conv2d(x, w, padding=1, policy=p).sum()
+
+        g = jax.jit(jax.grad(f, argnums=(0, 1)))
+        jax.block_until_ready(g(x, w))  # compile
+        t0 = time.perf_counter()
+        jax.block_until_ready(g(x, w))
+        out[label] = time.perf_counter() - t0
+    return out
+
+
+def iter_fusion_rows():
+    """All fused-vs-materializing A/B rows — shared by run()/main()."""
+    for model, batch, image in _CONV_CELLS:
+        for pname in _FUSION_POLICY_NAMES:
+            yield conv_fusion_row(model, batch, image, pname)
 
 
 def _load_dryrun(arch, shape_name, mesh, policy):
@@ -380,7 +483,18 @@ def run():
             f"roofline/conv/{row['arch']}/{row['policy']}",
             row["compute_s"] * 1e6,
             f"dom={row['dominant']};saved={row['saved']:.3f};"
-            f"mem_s={row['memory_s']:.4f}",
+            f"mem_s={row['memory_s']:.4f};bytes={row['bytes_moved']}",
+        )
+    # fused-im2col before/after: HBM traffic with vs without the patch
+    # buffers, the quantity the fusion pass exists to cut.
+    for row in iter_fusion_rows():
+        emit(
+            f"roofline/conv_fusion/{row['arch']}/{row['policy']}",
+            row["fused_s"] * 1e6,
+            f"mat_s={row['materializing_s']:.4f};"
+            f"bytes_saved={row['bytes_saved']:.3f};"
+            f"mat_bytes={row['materializing_bytes']};"
+            f"fused_bytes={row['fused_bytes']}",
         )
 
 
@@ -392,16 +506,38 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--conv", action="store_true",
                     help="emit the conv-model rows (policy-aware FLOPs)")
+    ap.add_argument("--fused", action="store_true",
+                    help="emit fused-vs-materializing im2col A/B rows "
+                    "(asserts fused bytes <= materializing) plus one "
+                    "measured wall-clock cell")
     ap.add_argument("--json", default="")
     args = ap.parse_args()
     rows = []
-    if args.conv:
-        for row in iter_conv_rows():
-            rows.append(row)
+    if args.conv or args.fused:
+        if args.conv:
+            for row in iter_conv_rows():
+                rows.append(row)
+                print(
+                    f"{row['arch']:10s} {row['shape']:8s} {row['policy']:20s} "
+                    f"comp={row['compute_s']:.4f}s mem={row['memory_s']:.4f}s "
+                    f"bytes={row['bytes_moved']/1e9:.2f}GB "
+                    f"saved={row['saved']:.3f} dom={row['dominant']}"
+                )
+        if args.fused:
+            for row in iter_fusion_rows():
+                rows.append(row)
+                print(
+                    f"{row['arch']:10s} {row['shape']:8s} {row['policy']:20s} "
+                    f"mat={row['materializing_bytes']/1e9:.2f}GB "
+                    f"fused={row['fused_bytes']/1e9:.2f}GB "
+                    f"({row['materializing_s']:.4f}s -> {row['fused_s']:.4f}s, "
+                    f"bytes_saved={row['bytes_saved']:.3f})"
+                )
+            t = _measured_fusion_cell()
+            rows.append({"arch": "micro", "policy": "measured", **t})
             print(
-                f"{row['arch']:10s} {row['shape']:8s} {row['policy']:20s} "
-                f"comp={row['compute_s']:.4f}s mem={row['memory_s']:.4f}s "
-                f"saved={row['saved']:.3f} dom={row['dominant']}"
+                f"measured (interpret, informational): "
+                f"fused={t['fused']:.3f}s materializing={t['materializing']:.3f}s"
             )
         if args.json:
             with open(args.json, "w") as f:

@@ -8,6 +8,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def main() -> None:
     from benchmarks import (
         fig2_sensitivity,
+        kernels_table,
         roofline,
         serve_latency,
         table4_classification,
@@ -24,6 +25,7 @@ def main() -> None:
     fig2_sensitivity.run()
     roofline.run()
     serve_latency.run()  # writes BENCH_serve.json next to this file
+    kernels_table.run()  # writes BENCH_kernels.json next to this file
 
 
 if __name__ == "__main__":

@@ -1,6 +1,6 @@
 """Continuous batching vs. static lock-step, and paged vs. contiguous.
 
-Four serving-side headlines:
+Five serving-side headlines:
 
 1. A staggered-arrival (Poisson) workload with heterogeneous generation
    lengths through the continuous-batching engine completes in
@@ -18,7 +18,13 @@ Four serving-side headlines:
 3. A **sampled** workload (per-request temperature/top-k/top-p + seeded
    PRNG lanes) pays no extra steps over greedy, and its outputs match
    the sampled lock-step oracle token-for-token.
-4. **Swap** preemption costs no recompute steps: a pool too small for
+4. The Pallas **paged-attention kernel** (``attn_kernel=True``) is a
+   pure re-addressing of the paged decode: token-for-token identical to
+   the pool-gather path while reading each K/V page in place through
+   the block table — 1x the pool bytes per step against the gather's 3x
+   (pages read + contiguous copy written + copy read). Parity and the
+   bytes model are both asserted.
+5. **Swap** preemption costs no recompute steps: a pool too small for
    the working set forces evictions, and restoring the victim's staged
    cache finishes the workload in no more engine steps than replaying
    its token history (the swap-vs-recompute cost row); a seeded sampled
@@ -46,6 +52,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
@@ -226,6 +233,97 @@ def bench_paged_longtail(arch: str) -> dict:
         "two_width_padded_tokens": ls["padded_tokens"],
         "ladder_padding_saved": 1.0 - ps["padded_tokens"] / max(ls["padded_tokens"], 1),
     }
+
+
+# --- paged-attention kernel vs pool gather (equal engines) -----------
+AK_BLOCK = 4
+
+
+def _attn_kv_bytes_per_step(cfg, serve_cfg) -> int:
+    """HBM bytes one decode step moves through the K/V page pool.
+
+    The gather path materializes ``pool[block_tables]`` per attention
+    layer: pool pages read once, the gathered contiguous copy written
+    and then read by attention — 3x the pool bytes. The Pallas kernel
+    reads each page in place via the block table: 1x. This model is the
+    asserted quantity; interpret-mode wall clock is not predictive.
+    """
+    if cfg.family == "ssm" and not getattr(cfg, "attn_every", 0):
+        return 0
+    n_attn = (
+        cfg.n_layers // cfg.attn_every if getattr(cfg, "attn_every", 0)
+        else cfg.n_layers
+    )
+    itemsize = jnp.dtype(cfg.dtype).itemsize
+    return (
+        serve_cfg.max_slots * serve_cfg.blocks_per_slot * serve_cfg.block_size
+        * cfg.n_kv_heads * cfg.head_dim * 2 * itemsize * n_attn
+    )
+
+
+def bench_attn_kernel(arch: str) -> dict:
+    """Paged engine with the pool gather vs the in-place Pallas kernel.
+
+    Identical ServeConfig except ``attn_kernel``; every request's tokens
+    must match exactly (the kernel is a pure re-addressing of the same
+    attention) and the kernel's modeled per-step pool traffic must not
+    exceed the gather's — both asserted before the row is reported.
+    """
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    base = dict(max_slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=PROMPT_LEN,
+                block_size=AK_BLOCK)
+
+    def workload():
+        return poisson_workload(
+            cfg, n_requests=N_REQUESTS, arrival_rate=ARRIVAL_RATE,
+            prompt_len=PROMPT_LEN, gen_len=GEN_RANGE, seed=11,
+            uniform_prompts=True,
+        )
+
+    gather_cfg = ServeConfig(**base)
+    kernel_cfg = ServeConfig(**base, attn_kernel=True)
+    g_eng, g_out = _run_paged_engine(cfg, params, workload(), gather_cfg)
+    k_eng, k_out = _run_paged_engine(cfg, params, workload(), kernel_cfg)
+    for rid in g_out:
+        if not np.array_equal(g_out[rid], k_out[rid]):
+            raise RuntimeError(
+                f"{arch} rid={rid}: paged-attention kernel != pool gather"
+            )
+    kv = _attn_kv_bytes_per_step(cfg, gather_cfg)
+    gather_bytes, kernel_bytes = 3 * kv, kv
+    assert kernel_bytes <= gather_bytes, (
+        f"{arch}: kernel models {kernel_bytes} B/step > gather {gather_bytes}"
+    )
+    gs, ks = g_eng.stats(), k_eng.stats()
+    return {
+        "arch": arch,
+        "family": cfg.family,
+        "workload": "attn_kernel",
+        "requests": N_REQUESTS,
+        "slots": SLOTS,
+        "block_size": AK_BLOCK,
+        "gather_steps": gs["compute_steps"],
+        "kernel_steps": ks["compute_steps"],
+        "gather_kv_bytes_per_step": gather_bytes,
+        "kernel_kv_bytes_per_step": kernel_bytes,
+        "kv_bytes_saved": 1.0 - kernel_bytes / gather_bytes if kv else 0.0,
+        "gather_wall_s": gs["wall_s"],
+        "kernel_wall_s": ks["wall_s"],
+        "token_parity": True,
+    }
+
+
+def _emit_attn_kernel(row):
+    emit(
+        f"serve_attn_kernel_{row['arch']}",
+        row["kernel_wall_s"] / max(row["kernel_steps"], 1) * 1e6,
+        f"in-place pages {row['kernel_kv_bytes_per_step']} B/step vs gather"
+        f" {row['gather_kv_bytes_per_step']}"
+        f" (-{row['kv_bytes_saved']*100:.0f}%);"
+        f" steps {row['kernel_steps']} vs {row['gather_steps']};"
+        f" token parity OK",
+    )
 
 
 # --- sampled workload: parity vs the sampled lock-step oracle --------
@@ -438,6 +536,10 @@ def run(archs=ARCHS, json_path=None):
             f" (-{row['ladder_padding_saved']*100:.0f}%)",
         )
     for arch in archs:
+        row = bench_attn_kernel(arch)
+        rows.append(row)
+        _emit_attn_kernel(row)
+    for arch in archs:
         row = bench_sampled(arch)
         rows.append(row)
         _emit_sampled(row)
@@ -452,12 +554,14 @@ def run(archs=ARCHS, json_path=None):
 
 
 def run_smoke(arch=ARCHS[0], json_path=None):
-    """CI-sized run: one arch, the sampled workload + the forced swap
-    preemption A/B only (each internally asserts parity/determinism).
+    """CI-sized run: one arch — the sampled workload, the forced swap
+    preemption A/B and the paged-attention kernel A/B (each internally
+    asserts parity/determinism).
     Does NOT overwrite BENCH_serve.json unless --json is given."""
-    rows = [bench_sampled(arch), bench_preemption(arch)]
+    rows = [bench_sampled(arch), bench_preemption(arch), bench_attn_kernel(arch)]
     _emit_sampled(rows[0])
     _emit_preemption(rows[1])
+    _emit_attn_kernel(rows[2])
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rows, f, indent=2)

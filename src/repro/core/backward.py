@@ -125,6 +125,16 @@ class ChannelSparseOp:
         the op cannot (or should not) lower itself."""
         return None
 
+    def fused_backward(
+        self, dy_eff: jax.Array, sel: sparsity.Selection, sdx: bool, sdw: bool
+    ) -> Optional[Tuple[jax.Array, jax.Array]]:
+        """Optional fully-fused Pallas path: (dX, dW) in native shapes and
+        accumulation dtype, or None to fall through to the canonical-form
+        kernels. Checked first in the Pallas branch — ops that can fuse
+        their data-layout transform into the kernels' index maps (conv
+        im2col) skip the materialized canonical buffers entirely."""
+        return None
+
     def tp_contract(
         self, dy_eff: jax.Array, sel: sparsity.Selection
     ) -> Optional[Tuple[jax.Array, jax.Array]]:
@@ -226,6 +236,10 @@ def channel_sparse_backward(
         and policy.granularity == "block"
         and sel.block_idx is not None
     ):
+        fused = op.fused_backward(dy_eff, sel, sdx, sdw)
+        if fused is not None:
+            dx, dw = fused
+            return dx, dw, db
         can = op.canonical(dy_eff)
         if can is not None:
             from repro.kernels import ops as kops

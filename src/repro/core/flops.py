@@ -15,6 +15,11 @@ site's name, so a per-site policy program's total FLOPs are summed over
 the resolved site table — each layer at its *own* keep count — rather
 than one global rate.
 
+Alongside FLOPs, :func:`conv_backward_bytes_policy` models the HBM
+*traffic* of one conv backward — materializing-im2col vs the fused
+Pallas kernels — and is both the roofline bytes-moved column and the
+gate the engine uses to decide when fusing actually wins.
+
 These formulas drive the benchmark tables (paper Tables 4-7), the conv
 roofline rows, and the property test on the drop-rate lower bound
 (Eq. 10-11).
@@ -182,6 +187,133 @@ def dense_backward_flops_policy(
     if bias:
         f += m * (kept if sdw else d_out)
     return int(f + m * d_out)
+
+
+def conv_backward_bytes_policy(
+    bt: int,
+    h_out: int,
+    w_out: int,
+    c_in: int,
+    c_out: int,
+    k: int,
+    policy: "SsPropPolicy",
+    fused: bool = None,
+    itemsize: int = 4,
+    groups: int = 1,
+) -> int:
+    """HBM bytes one conv backward moves under ``policy``.
+
+    The FLOPs model (Eq. 6/9) says what the backward *computes*; this
+    says what it *transfers* — the roofline memory term and the quantity
+    the Pallas im2col fusion actually attacks. Two regimes:
+
+    * **Materializing** (``fused=False``): the canonical im2col path
+      builds real patch buffers — ``X2 [M, N]`` written then read by the
+      dW kernel, ``dX2 [M, N]`` written by the dX kernel then read back
+      by col2im (``M = Bt*H_out*W_out``, ``N = C_in*K²``). Those four
+      ``M*N`` transfers dominate and do **not** shrink with sparsity.
+    * **Fused** (``fused=True``): mirrors the fused kernel grids in
+      :mod:`repro.kernels.gathered_matmul` — padded-image rows and
+      cotangent panels are re-fetched once per (tap × kept-block) grid
+      step, the compact filter is fetched into VMEM once, and no
+      ``[M, N]`` buffer exists anywhere. Traffic scales with the kept
+      block count, so sparsity cuts bytes as well as FLOPs.
+
+    ``fused=None`` routes exactly like the engine: the fused model when
+    the policy's Pallas/fuse_im2col path applies to this conv and it
+    moves fewer bytes, the materializing model otherwise (this min is
+    the gate :meth:`repro.core.conv._ConvOp.fused_backward` applies).
+    Geometry is counted at stride 1 / 'SAME'-ish padding
+    (``H_pad = H_out + K - 1``) — walkers don't carry strides, and both
+    regimes use the same approximation.
+    """
+    if fused is None:
+        mat = conv_backward_bytes_policy(
+            bt, h_out, w_out, c_in, c_out, k, policy,
+            fused=False, itemsize=itemsize, groups=groups,
+        )
+        if not (
+            policy.active
+            and policy.use_pallas
+            and policy.granularity == "block"
+            and policy.fuse_im2col
+            and k > 1
+        ):
+            return mat
+        fus = conv_backward_bytes_policy(
+            bt, h_out, w_out, c_in, c_out, k, policy,
+            fused=True, itemsize=itemsize, groups=groups,
+        )
+        return min(mat, fus)
+
+    m = bt * h_out * w_out
+    cg = c_in // groups
+    n = cg * k * k
+    kept = kept_channels(c_out, policy)
+    sdx = policy.active and policy.sparsify_dx
+    sdw = policy.active and policy.sparsify_dw
+    h_pad, w_pad = h_out + k - 1, w_out + k - 1
+    x_elems = bt * c_in * h_pad * w_pad
+
+    if not fused or k == 1:
+        kept_dx = kept if sdx else c_out
+        kept_dw = kept if sdw else c_out
+        elems = (
+            x_elems                      # read X to extract patches
+            + 4 * m * n * groups         # X2 write+read, dX2 write+read
+            + m * (kept_dx + kept_dw)    # dY2 panels read by each matmul
+            + m * c_out                  # dY read for importance
+            + n * kept_dx                # W2 panels read (dX side)
+            + n * c_out                  # dW written
+            + x_elems                    # dX written
+        )
+        return int(elems) * itemsize
+
+    bs = policy.block_size
+    nb = -(-c_out // bs)
+    kb = policy.keep_count(c_out) if policy.active else nb
+    kb_dx = kb if sdx else nb
+    kb_dw = kb if sdw else nb
+    m2 = bt * h_out      # dY row count (dW grid's sequential axis)
+    s_ax = bt * h_pad    # padded-image row count (dX grid's outer axis)
+    dw_elems = (
+        k * kb_dw * m2 * (w_pad * cg)    # padded-image row per (tap, block)
+        + k * kb_dw * m2 * (w_out * bs)  # cotangent panel per grid step
+        + k * kb_dw * (k * cg * bs)      # output tap blocks flushed
+    )
+    dx_elems = (
+        s_ax * kb_dx * k * (w_out * bs)  # cotangent row per (row, block, tap)
+        + 2 * (k * k * cg * kb_dx * bs)  # compact filter: gather + one fetch
+        + s_ax * (w_pad * cg) * groups   # padded-image blocks written once
+    )
+    common = (
+        2 * x_elems      # build the padded row-major image view
+        + m * c_out      # dY read for importance
+        + n * c_out      # dW written
+        + x_elems        # dX written (padding border sliced off)
+    )
+    return int(dw_elems + dx_elems + common) * itemsize
+
+
+def conv_backward_bytes_site(
+    bt: int,
+    h_out: int,
+    w_out: int,
+    c_in: int,
+    c_out: int,
+    k: int,
+    policy: "PolicyLike",
+    site: str = "",
+    fused: bool = None,
+    itemsize: int = 4,
+) -> int:
+    """:func:`conv_backward_bytes_policy` for one named call site."""
+    from repro.core.policy import policy_for
+
+    return conv_backward_bytes_policy(
+        bt, h_out, w_out, c_in, c_out, k, policy_for(policy, site),
+        fused=fused, itemsize=itemsize,
+    )
 
 
 def conv_backward_flops_site(

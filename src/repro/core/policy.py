@@ -78,6 +78,12 @@ class SsPropPolicy:
       use_pallas: route the shrunk backward matmuls through the Pallas
         gathered-matmul kernels (TPU target; interpret-mode on CPU)
         rather than plain jnp gather+dot.
+      fuse_im2col: with ``use_pallas`` on a conv site, extract im2col
+        patches inside the kernels' HBM→VMEM index maps (the fused
+        ``conv_dx_fused`` / ``conv_dw_fused`` kernels) instead of
+        materializing the ``[M, C_in*Kh*Kw]`` patch buffer in HBM
+        first. Default on; turn off to A/B against the materializing
+        canonical-form path (``kernels/im2col.py``).
       seed: RNG seed for ``selection="random"``.
     """
 
@@ -92,6 +98,7 @@ class SsPropPolicy:
     sparsify_dx: bool = True
     sparsify_dw: bool = True
     use_pallas: bool = False
+    fuse_im2col: bool = True  # conv sites: patch extraction in-kernel
     tp_shards: int = 0  # >0: TP-local per-shard top-k (comm-free gather;
     #   equal k per shard -> load-balanced shrunk matmuls). §Perf iter 1.
     bwd_dtype: str = ""  # "bfloat16": backward matmuls/psums in bf16

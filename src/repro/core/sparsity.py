@@ -36,10 +36,14 @@ class Selection(NamedTuple):
     ``.add`` so the duplicates cannot overwrite the last real channel.
     ``valid is None`` means every slot is real.
 
-    ``block_idx`` carries the kept *block* indices when the selection was
-    block-granular and unsharded (the form the Pallas gathered kernels
-    consume). ``shard_idx``/``k_loc``/``n_shards`` carry the per-shard
-    form for TP-local or per-group balanced selection.
+    ``block_idx`` carries the kept *block* indices (global, sorted
+    ascending — the form the Pallas gathered kernels consume) when the
+    selection was block-granular. Sharded selections populate it too,
+    whenever each shard's channel count is a multiple of the policy
+    block size (the shard-local block size then equals the global one,
+    so per-shard blocks tile exactly into global blocks).
+    ``shard_idx``/``k_loc``/``n_shards`` carry the per-shard form for
+    TP-local or per-group balanced selection.
     """
 
     idx: jax.Array
@@ -147,9 +151,25 @@ def select(
         shard_idx, k_loc = select_indices_per_shard(dy2, policy, n_shards, key=key)
         offs = jnp.arange(n_shards)[:, None] * (c // n_shards)
         flat = jnp.sort((shard_idx + offs).reshape(-1))
+        block_idx = None
+        c_loc = c // n_shards
+        if (
+            policy.granularity == "block"
+            and c_loc % policy.block_size == 0
+            and k_loc % policy.block_size == 0
+        ):
+            # Shard-local blocks tile exactly into global blocks (the
+            # per-shard block size was not shrunk), so the flat sorted
+            # channel indices regroup into whole kept blocks — the form
+            # the Pallas gathered kernels consume. This is what routes
+            # grouped convs / TP-local selection onto the fused kernels.
+            block_idx = (
+                flat.reshape(-1, policy.block_size)[:, 0] // policy.block_size
+            )
         return Selection(
             idx=flat,
             k=n_shards * k_loc,
+            block_idx=block_idx,
             shard_idx=shard_idx,
             k_loc=k_loc,
             n_shards=n_shards,

@@ -1,12 +1,16 @@
 """Pallas TPU kernels for ssProp's backward hot-spots.
 
 * ``gathered_matmul`` — kernel bodies (pl.pallas_call + BlockSpec):
-  block-gathered dX/dW matmuls (scalar-prefetch fused gather) and the
-  channel-importance reduction.
+  block-gathered dX/dW matmuls (scalar-prefetch fused gather), the
+  fused-im2col conv backward kernels, and the channel-importance
+  reduction.
+* ``paged_attention`` — decode attention straight off the paged KV
+  pool: the block table rides in SMEM and the BlockSpec index maps read
+  physical pages in place (no per-layer gather).
 * ``ops`` — jit'd public wrappers (padding, backend dispatch, scatter).
 * ``ref`` — pure-jnp oracles; tests assert_allclose against these.
 """
 from repro.kernels import ops, ref
-from repro.kernels import gathered_matmul
+from repro.kernels import gathered_matmul, paged_attention
 
-__all__ = ["ops", "ref", "gathered_matmul"]
+__all__ = ["ops", "ref", "gathered_matmul", "paged_attention"]

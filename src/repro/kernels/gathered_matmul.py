@@ -9,6 +9,16 @@ thus free — the MXU only ever sees dense, 128-aligned tiles.
 Kernels:
   * ``dx_gathered``  : dX[M, D_in]  = Σ_kb dY[:, blk] @ W[:, blk]^T
   * ``dw_gathered``  : dWk[D_in, K] = X^T @ dY[:, kept]   (compact out)
+  * ``conv_dx_fused`` / ``conv_dw_fused``: the conv backward with the
+    im2col patch extraction *fused into the index maps* — the kernels
+    read padded image rows / cotangent rows straight from HBM and never
+    materialize the ``[M, C_in*Kh*Kw]`` patch buffer. The dynamic
+    spatial offset (``oh*sh + kh*dh``) lands on a leading block-size-1
+    axis whose index map computes the row arithmetically from the grid
+    coordinates; ``kw``/stride are static strided slices of the loaded
+    VMEM row. Grouped convs ride the same kernels in block-diagonal
+    form: operands carry an explicit group axis and the kept output
+    block's group indexes it (``block_idx[j] // blocks_per_group``).
   * ``importance``   : imp[N]       = mean_M |dY|
 
 Grid iteration on TPU is sequential over the last axis, so accumulation
@@ -140,6 +150,218 @@ def dw_gathered(
         out_shape=jax.ShapeDtypeStruct((d_in, kb * block_size), jnp.float32),
         interpret=interpret,
     )(block_idx, x, dy)
+
+
+# ----------------------------------------------------------------------
+# fused-im2col conv backward: patch extraction in the index maps.
+#
+# Layouts (prepared by ops.py):
+#   xg   [B*H_pad, G, W_pad, Cg]   zero-padded input, group-blocked
+#   dy2r [B*H_out, W_out, C_pad]   cotangent rows, channels padded to
+#                                  a block_size multiple
+#   w2k  [Kh, Kw, Cg, C_pad]       filters, OIHW -> (kh, kw, c_in, c_out)
+#
+# The im2col row for output position (b, oh, ow) and tap (kh, kw) lives
+# at padded-image row ``b*H_pad + oh*sh + kh*dh``, column ``ow*sw +
+# kw*dw`` — the row part is pure index-map arithmetic on a block-size-1
+# leading axis, the column part a static strided slice of the loaded
+# row. Nothing [M, C_in*Kh*Kw]-shaped ever exists in HBM.
+# ----------------------------------------------------------------------
+def _conv_dw_kernel(idx_ref, x_ref, dy_ref, out_ref, *, kw_dim, sw, dw_, w_out):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    row = x_ref[0, 0]  # [W_pad, Cg] — padded image row oh*sh + kh*dh
+    dyb = dy_ref[0]    # [W_out, bs] — cotangent row oh, kept block j
+    for kw in range(kw_dim):
+        lo = kw * dw_
+        xs = jax.lax.slice(
+            row, (lo, 0), (lo + sw * (w_out - 1) + 1, row.shape[1]), (sw, 1)
+        )  # [W_out, Cg] — the (kh, kw) tap of every patch in this row
+        out_ref[0, kw] += jax.lax.dot_general(
+            xs, dyb, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [Cg, bs]
+
+
+def conv_dw_fused(
+    xg: jax.Array,
+    dy2r: jax.Array,
+    block_idx: jax.Array,
+    *,
+    kh_dim: int,
+    kw_dim: int,
+    stride,
+    dilation,
+    h_out: int,
+    block_size: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Compact conv dW with fused patch gather.
+
+    Returns ``[Kh, Kw, Cg, KB*block_size]`` fp32 — tap-major compact
+    weight gradient; column block j is output-channel block
+    ``block_idx[j]``. Callers transpose to the canonical ``(c, kh, kw)``
+    row order and scatter.
+    """
+    s_total, g, w_pad, cg = xg.shape
+    m2, w_out, c_pad = dy2r.shape
+    assert m2 % h_out == 0 and c_pad % block_size == 0
+    b = m2 // h_out
+    h_pad = s_total // b
+    assert b * h_pad == s_total, (s_total, b, h_pad)
+    kb = block_idx.shape[0]
+    nb = c_pad // block_size
+    bpg = nb // g
+    sh, sw = stride
+    dh, dw_ = dilation
+
+    grid = (kh_dim, kb, m2)
+    return pl.pallas_call(
+        functools.partial(
+            _conv_dw_kernel, kw_dim=kw_dim, sw=sw, dw_=dw_, w_out=w_out
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, 1, w_pad, cg),
+                    lambda kh, j, s, idx: (
+                        (s // h_out) * h_pad + (s % h_out) * sh + kh * dh,
+                        idx[j] // bpg,
+                        0,
+                        0,
+                    ),
+                ),
+                pl.BlockSpec(
+                    (1, w_out, block_size), lambda kh, j, s, idx: (s, 0, idx[j])
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, kw_dim, cg, block_size), lambda kh, j, s, idx: (kh, 0, 0, j)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (kh_dim, kw_dim, cg, kb * block_size), jnp.float32
+        ),
+        interpret=interpret,
+    )(block_idx, xg, dy2r)
+
+
+def _conv_dx_kernel(
+    idx_ref, dy_ref, w_ref, out_ref, *, kw_dim, sh, sw, dh, dw_, h_out, h_pad,
+    kbg, bs
+):
+    s = pl.program_id(0)
+    j = pl.program_id(1)
+    kh = pl.program_id(2)
+
+    @pl.when((kh == 0) & (j % kbg == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # Padded-image row s%h_pad receives tap kh from cotangent row oh
+    # only when oh = (s%h_pad - kh*dh)/sh is a whole in-range number.
+    oh_num = s % h_pad - kh * dh
+    valid = (oh_num >= 0) & (oh_num < sh * h_out) & (oh_num % sh == 0)
+
+    @pl.when(valid)
+    def _acc():
+        dyrow = dy_ref[0]  # [W_out, bs]
+        for kw in range(kw_dim):
+            wk = w_ref[kh, kw, :, pl.dslice(j * bs, bs)]  # [Cg, bs]
+            part = jax.lax.dot_general(
+                dyrow, wk, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # [W_out, Cg]
+            w_out, cg = part.shape
+            if sw == 1:
+                out_ref[0, 0, dw_ * kw : dw_ * kw + w_out, :] += part
+            else:
+                # strided scatter: interleave sw-1 zero rows, then a
+                # contiguous add at the kw tap's column offset
+                spread = jnp.pad(part[:, None, :], ((0, 0), (0, sw - 1), (0, 0)))
+                spread = spread.reshape(w_out * sw, cg)
+                n = sw * (w_out - 1) + 1
+                out_ref[0, 0, dw_ * kw : dw_ * kw + n, :] += spread[:n]
+
+
+def conv_dx_fused(
+    dy2r: jax.Array,
+    w2k: jax.Array,
+    block_idx: jax.Array,
+    *,
+    b: int,
+    h_pad: int,
+    w_pad: int,
+    groups: int,
+    stride,
+    dilation,
+    block_size: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Padded-image conv dX with fused col2im scatter.
+
+    ``w2k [Kh, Kw, Cg, KB*block_size]`` is the *compact* filter — kept
+    output-channel blocks only, gathered by the caller (a tiny jnp take:
+    filters are orders of magnitude smaller than activations). Its
+    BlockSpec index map is constant, so the whole compact filter is
+    fetched into VMEM exactly once and reused across every image row —
+    re-fetching it per row would swamp the traffic the fusion saves.
+
+    Returns ``dxp [B*H_pad, G, W_pad, Cg]`` fp32 — the input gradient on
+    the zero-padded image; callers slice the padding off and restore
+    NCHW. ``block_idx`` still rides in SMEM for the cotangent gather and
+    the output group routing (pass ``arange(NB)`` with the full filter
+    for the dense side of a mixed policy).
+    """
+    m2, w_out, c_pad = dy2r.shape
+    kh_dim, kw_dim, cg, kbbs = w2k.shape
+    assert m2 % b == 0
+    h_out = m2 // b
+    kb = block_idx.shape[0]
+    assert kbbs == kb * block_size, (w2k.shape, kb, block_size)
+    nb = c_pad // block_size
+    bpg = nb // groups
+    assert kb % groups == 0, (kb, groups)
+    kbg = kb // groups
+    sh, sw = stride
+    dh, dw_ = dilation
+
+    grid = (b * h_pad, kb, kh_dim)
+    return pl.pallas_call(
+        functools.partial(
+            _conv_dx_kernel, kw_dim=kw_dim, sh=sh, sw=sw, dh=dh, dw_=dw_,
+            h_out=h_out, h_pad=h_pad, kbg=kbg, bs=block_size,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, w_out, block_size),
+                    lambda s, j, kh, idx: (
+                        (s // h_pad) * h_out
+                        + jnp.clip((s % h_pad - kh * dh) // sh, 0, h_out - 1),
+                        0,
+                        idx[j],
+                    ),
+                ),
+                pl.BlockSpec(
+                    (kh_dim, kw_dim, cg, kb * block_size),
+                    lambda s, j, kh, idx: (0, 0, 0, 0),
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, w_pad, cg), lambda s, j, kh, idx: (s, idx[j] // bpg, 0, 0)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b * h_pad, groups, w_pad, cg), jnp.float32),
+        interpret=interpret,
+    )(block_idx, dy2r, w2k)
 
 
 # ----------------------------------------------------------------------

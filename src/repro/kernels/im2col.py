@@ -15,7 +15,15 @@ one language — ``X2 [M, D_flat]``, ``W2 [D_flat, C_out]``, ``dY2
     ``col2im`` — the exact VJP of the patch extraction, so stride,
     padding and dilation all transpose correctly for free.
 
-Only ``groups == 1`` lowers here; grouped convs keep the
+This module is the *materializing* baseline: ``X2`` and ``dX2`` are
+real ``[M, C_in*Kh*Kw]`` HBM buffers. The default Pallas route
+(``SsPropPolicy.fuse_im2col``) skips it entirely — the fused kernels in
+:mod:`repro.kernels.gathered_matmul` do the patch extraction and col2im
+scatter inside their BlockSpec index maps, and their block-diagonal
+canonical form covers grouped convs too. What still lowers here: the
+``fuse_im2col=False`` A/B oracle, and 1x1 convs (where im2col is a
+reshape and there is no patch buffer to fuse away). Grouped convs that
+reach this path (only ``groups == 1`` lowers here) keep the
 framework-native shrunk-VJP path in :mod:`repro.core.conv`.
 """
 from __future__ import annotations

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import gathered_matmul as gm
+from repro.kernels import paged_attention as pa
 
 
 def _interpret() -> bool:
@@ -56,6 +57,110 @@ def dw_gathered_scatter(x, dy, block_idx, n_out: int, block_size: int = 128):
     dw = jnp.zeros((d_in, -(-n_out // block_size), block_size), jnp.float32)
     dw = dw.at[:, block_idx, :].set(compact.reshape(d_in, kb, block_size))
     return dw.reshape(d_in, -1)[:, :n_out]
+
+
+def _dy_rows(dy, block_size):
+    """NCHW cotangent -> ``[B*H_out, W_out, C_pad]`` row layout."""
+    b, c_out, h_out, w_out = dy.shape
+    dy2r = dy.transpose(0, 2, 3, 1).reshape(b * h_out, w_out, c_out)
+    return _pad_to(dy2r, 2, block_size)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kh", "kw", "stride", "padding", "dilation", "groups", "block_size"),
+)
+def conv_dw_fused_scatter(
+    x, dy, block_idx, *, kh, kw, stride, padding, dilation, groups, block_size=128
+):
+    """Canonical conv dW2 ``[Cg*Kh*Kw, C_out]`` with fused patch gather.
+
+    The ``[M, C_in*Kh*Kw]`` im2col buffer is never built: the kernel's
+    index maps read padded image rows in place (``gathered_matmul.
+    conv_dw_fused``). Compact kernel output is scattered into full-size
+    zeros over the kept output-channel blocks.
+    """
+    b, c_in, h, w_dim = x.shape
+    c_out, h_out = dy.shape[1], dy.shape[2]
+    cg = c_in // groups
+    (ph0, ph1), (pw0, pw1) = padding
+    h_pad, w_pad = h + ph0 + ph1, w_dim + pw0 + pw1
+    c_pad = c_out + (-c_out) % block_size
+    dy2r = _dy_rows(dy, block_size)
+    # NCHW -> group-blocked padded rows [B*H_pad, G, W_pad, Cg]
+    xp = jnp.pad(x, ((0, 0), (0, 0), padding[0], padding[1]))
+    xg = (
+        xp.transpose(0, 2, 3, 1)
+        .reshape(b, h_pad, w_pad, groups, cg)
+        .transpose(0, 1, 3, 2, 4)
+        .reshape(b * h_pad, groups, w_pad, cg)
+    )
+    compact = gm.conv_dw_fused(
+        xg, dy2r, block_idx, kh_dim=kh, kw_dim=kw, stride=stride,
+        dilation=dilation, h_out=h_out, block_size=block_size,
+        interpret=_interpret(),
+    )  # [Kh, Kw, Cg, KB*bs]
+    kb = block_idx.shape[0]
+    d_flat = cg * kh * kw
+    compact = compact.transpose(2, 0, 1, 3).reshape(d_flat, kb * block_size)
+    dw = jnp.zeros((d_flat, c_pad // block_size, block_size), jnp.float32)
+    dw = dw.at[:, block_idx, :].set(compact.reshape(d_flat, kb, block_size))
+    return dw.reshape(d_flat, c_pad)[:, :c_out]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("hw", "stride", "padding", "dilation", "groups", "block_size"),
+)
+def conv_dx_fused(
+    dy, w, block_idx, *, hw, stride, padding, dilation, groups, block_size=128
+):
+    """Conv dX ``[B, C_in, H, W]`` with fused col2im scatter.
+
+    ``hw`` is the static (H, W) of the input. The kernel accumulates on
+    the zero-padded image (``gathered_matmul.conv_dx_fused``); the
+    padding border is sliced off here. The kept filter blocks are
+    gathered *here* (filters are tiny next to activations) so the kernel
+    can hold the whole compact filter in VMEM across the row sweep.
+    """
+    b = dy.shape[0]
+    h, w_dim = hw
+    cg = w.shape[1]
+    (ph0, ph1), (pw0, pw1) = padding
+    h_pad, w_pad = h + ph0 + ph1, w_dim + pw0 + pw1
+    dy2r = _dy_rows(dy, block_size)
+    wfull = _pad_to(w.transpose(2, 3, 1, 0), 3, block_size)  # [Kh,Kw,Cg,C_pad]
+    kh, kw = wfull.shape[:2]
+    nb = wfull.shape[3] // block_size
+    w2k = jnp.take(
+        wfull.reshape(kh, kw, cg, nb, block_size), block_idx, axis=3
+    ).reshape(kh, kw, cg, -1)  # compact [Kh,Kw,Cg,KB*bs]
+    dxp = gm.conv_dx_fused(
+        dy2r, w2k, block_idx, b=b, h_pad=h_pad, w_pad=w_pad, groups=groups,
+        stride=stride, dilation=dilation, block_size=block_size,
+        interpret=_interpret(),
+    )  # [B*H_pad, G, W_pad, Cg]
+    dx = (
+        dxp.reshape(b, h_pad, groups, w_pad, cg)
+        .transpose(0, 2, 4, 1, 3)
+        .reshape(b, groups * cg, h_pad, w_pad)
+    )
+    return dx[:, :, ph0 : ph0 + h, pw0 : pw0 + w_dim]
+
+
+@jax.jit
+def paged_attention(q, k_pool, v_pool, block_tables, qpos):
+    """Per-slot causal attention reading K/V pages in place.
+
+    q ``[B,S,H,D]``, pools ``[n_pages, bs, KV, D]``, block_tables
+    ``[B, NB]``, qpos ``[B, S]`` -> ``[B, S, H, D]`` in q.dtype. The
+    kernel-side contract (grid, addressing, online softmax) lives in
+    :mod:`repro.kernels.paged_attention`.
+    """
+    out = pa.paged_attention(
+        q, k_pool, v_pool, block_tables, qpos, interpret=_interpret()
+    )
+    return out.astype(q.dtype)
 
 
 @jax.jit

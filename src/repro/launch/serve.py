@@ -68,6 +68,9 @@ def build_parser():
     ap.add_argument("--preempt", choices=("auto", "swap", "recompute"),
                     default="auto",
                     help="pool-exhaustion policy (paged engine)")
+    ap.add_argument("--attn-kernel", action="store_true",
+                    help="Pallas paged-attention kernel: read K/V pages "
+                    "in place via the block table (paged engine only)")
     ap.add_argument("--stream", action="store_true",
                     help="print token events as they are emitted")
     ap.add_argument("--seed", type=int, default=0)
@@ -145,6 +148,7 @@ def run(args) -> dict:
                 token_budget=args.token_budget,
                 block_size=args.block_size if paged else 0,
                 n_blocks=args.n_blocks if paged else 0,
+                attn_kernel=args.attn_kernel,
                 preempt=args.preempt,
             ),
             mesh=mesh,

@@ -181,8 +181,12 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
     return serve_step
 
 
-def make_slot_step(cfg: ModelConfig) -> Callable:
+def make_slot_step(cfg: ModelConfig, *, paged_kernel: bool = False) -> Callable:
     """Mixed prefill/decode step over per-slot state (continuous batching).
+
+    ``paged_kernel=True`` (paged cache only) routes decode attention
+    through the Pallas paged-attention kernel — pages read in place via
+    the block table instead of the per-layer pool gather.
 
     state = {"tokens": [B,C] int32, "count": [B] int32 (real tokens per
     slot; 0 = idle), "pos": [B] int32 (per-slot cache offsets),
@@ -211,6 +215,7 @@ def make_slot_step(cfg: ModelConfig) -> Callable:
             cfg, params, state["tokens"], state["cache"],
             state["pos"], state["count"], enc_out=state.get("enc_out"),
             block_tables=state.get("block_tables"),
+            paged_kernel=paged_kernel,
         )
         nxt = _emit_tokens(logits, state, state["pos"] + state["count"] - 1)
         new_state = dict(

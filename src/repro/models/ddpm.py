@@ -209,6 +209,36 @@ def sample(params, sched, rng, shape, policy: PolicyLike = DENSE):
     return x
 
 
+def iter_conv_shapes(image, base: int = 64):
+    """Yield ``(site, c_in, c_out, k, h_out, w_out)`` for every conv.
+
+    Single source of the UNet's conv geometry on ``image`` (C, H, W) —
+    shared by :func:`flops_per_iter` and the benchmark bytes-moved walks.
+    """
+    c, hh, ww = image
+    c1, c2, c3 = base, base * 2, base * 2
+    yield ("stem", c, c1, 3, hh, ww)
+    for blk, (ci, co, h) in zip(
+        ("down1", "down2", "down3"),
+        [(c1, c1, hh), (c1, c2, hh // 2), (c2, c3, hh // 4)],
+    ):
+        yield (f"{blk}/conv1", ci, co, 3, h, h)
+        yield (f"{blk}/conv2", co, co, 3, h, h)
+        if ci != co:
+            yield (f"{blk}/skip", ci, co, 1, h, h)
+    for blk in ("mid1", "mid2"):
+        yield (f"{blk}/conv1", c3, c3, 3, hh // 4, hh // 4)
+        yield (f"{blk}/conv2", c3, c3, 3, hh // 4, hh // 4)
+    for blk, (ci, co, h) in zip(
+        ("up3", "up2", "up1"),
+        [(c3 + c3, c2, hh // 4), (c2 + c2, c1, hh // 2), (c1 + c1, c1, hh)],
+    ):
+        yield (f"{blk}/conv1", ci, co, 3, h, h)
+        yield (f"{blk}/conv2", co, co, 3, h, h)
+        yield (f"{blk}/skip", ci, co, 1, h, h)
+    yield ("out", c1, c, 3, hh, ww)
+
+
 def flops_per_iter(batch: int, image, base: int = 64, drop_rate: float = 0.0, policy=None):
     """Backward-FLOPs (Eq. 6) walk over the UNet's conv layers.
 
@@ -219,38 +249,15 @@ def flops_per_iter(batch: int, image, base: int = 64, drop_rate: float = 0.0, po
     """
     from repro.core import flops as F
 
-    c, hh, ww = image
-    c1, c2, c3 = base, base * 2, base * 2
     dense = sparse = 0
-
-    def add(site, c_in, c_out, k, h, w):
-        nonlocal dense, sparse
+    for site, c_in, c_out, k, h, w in iter_conv_shapes(image, base):
         dense += F.conv_backward_flops(batch, h, w, c_in, c_out, k)
         if policy is not None:
             sparse += F.conv_backward_flops_site(
                 batch, h, w, c_in, c_out, k, policy, site
             )
         else:
-            sparse += F.conv_backward_flops_ssprop(batch, h, w, c_in, c_out, k, drop_rate)
-
-    add("stem", c, c1, 3, hh, ww)
-    for blk, (ci, co, h) in zip(
-        ("down1", "down2", "down3"),
-        [(c1, c1, hh), (c1, c2, hh // 2), (c2, c3, hh // 4)],
-    ):
-        add(f"{blk}/conv1", ci, co, 3, h, h)
-        add(f"{blk}/conv2", co, co, 3, h, h)
-        if ci != co:
-            add(f"{blk}/skip", ci, co, 1, h, h)
-    for blk in ("mid1", "mid2"):
-        add(f"{blk}/conv1", c3, c3, 3, hh // 4, hh // 4)
-        add(f"{blk}/conv2", c3, c3, 3, hh // 4, hh // 4)
-    for blk, (ci, co, h) in zip(
-        ("up3", "up2", "up1"),
-        [(c3 + c3, c2, hh // 4), (c2 + c2, c1, hh // 2), (c1 + c1, c1, hh)],
-    ):
-        add(f"{blk}/conv1", ci, co, 3, h, h)
-        add(f"{blk}/conv2", co, co, 3, h, h)
-        add(f"{blk}/skip", ci, co, 1, h, h)
-    add("out", c1, c, 3, hh, ww)
+            sparse += F.conv_backward_flops_ssprop(
+                batch, h, w, c_in, c_out, k, drop_rate
+            )
     return dense, sparse

@@ -248,6 +248,7 @@ def attn_apply(
     cache_pos=None,
     token_valid=None,
     block_tables=None,
+    paged_kernel=False,
     x_kv=None,
     use_rope=True,
     site: str = "attn",
@@ -275,6 +276,12 @@ def attn_apply(
     uses. Unassigned table entries are 0 — a valid page whose contents
     sit at masked (future) positions, so per-slot causality fences them
     exactly like stale rows in the contiguous layout.
+
+    ``paged_kernel=True`` (paged layout only) replaces that per-layer
+    gather with the Pallas paged-attention kernel
+    (:mod:`repro.kernels.paged_attention`): K/V pages are read *in
+    place* from the pool during the kernel's HBM→VMEM copies, so the
+    contiguous ``[B, NB*bs, KV, D]`` view is never materialized.
     Returns (out [B,S,d], new_cache or None).
     """
     b, s, _ = x.shape
@@ -314,6 +321,12 @@ def attn_apply(
         cv = kv_cache["v"].at[page, off].set(v, mode="drop")
         new_cache = {"k": ck, "v": cv}
         qpos = positions if positions.ndim == 2 else logical
+        if paged_kernel:
+            from repro.kernels import ops as kops
+
+            out = kops.paged_attention(q, ck, cv, block_tables, qpos)
+            out = out.reshape(b, s, cfg.n_heads * hd)
+            return dense_apply(p["o"], out, policy, site=f"{site}/o"), new_cache
         # Gather each slot's pages into the [B, NB*bs, KV, D] view the
         # masked attention consumes (T = NB*bs = max_seq rounded up).
         k = ck[block_tables].reshape(b, nb * bs_pg, *ck.shape[2:])

@@ -162,6 +162,7 @@ def decode_slots(
     *,
     enc_out: Optional[jax.Array] = None,
     block_tables: Optional[jax.Array] = None,  # [B, NB] int32 (paged cache)
+    paged_kernel: bool = False,
     policy: PolicyLike = DENSE,
 ):
     """Mixed prefill/decode step over independently positioned slots.
@@ -179,7 +180,9 @@ def decode_slots(
     ``p`` lives in page ``block_tables[b, p // block_size]`` at offset
     ``p % block_size``; KV scatters become page-indexed and attention
     gathers K/V through the table. Block tables are data, not shape —
-    the same compiled step serves any page assignment.
+    the same compiled step serves any page assignment. ``paged_kernel``
+    replaces that per-layer gather with the Pallas paged-attention
+    kernel, which reads the pages in place (same mask semantics).
 
     Returns ``(logits [B, V] at each slot's last real token, new_cache)``.
     Rows with ``token_count == 0`` carry garbage logits the caller must
@@ -194,12 +197,14 @@ def decode_slots(
             params["decoder"], x, enc_out, cfg, policy,
             positions=positions, caches=cache, cache_pos=slot_pos,
             token_valid=valid, block_tables=block_tables,
+            paged_kernel=paged_kernel,
         )
     else:
         x, new_cache, _ = transformer.stack_apply(
             params["stack"], x, cfg, policy,
             positions=positions, caches=cache, cache_pos=slot_pos,
             token_valid=valid, block_tables=block_tables,
+            paged_kernel=paged_kernel,
         )
     x = layers.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
     last = jnp.clip(token_count - 1, 0, c - 1)

@@ -223,6 +223,47 @@ def forward(
     return h @ params["head"]["w"] + params["head"]["b"]
 
 
+def iter_conv_shapes(name: str, image: Tuple[int, int, int]):
+    """Yield ``(site, c_in, c_out, k, h_out, w_out)`` for every conv.
+
+    The single source of the ResNet's layer geometry on ``image``
+    (C, H, W) — :func:`flops_per_iter` and the benchmark bytes-moved
+    walks both consume it, so the two accountings can never drift.
+    """
+    kind, stages = LAYOUTS[name]
+    c, hh, ww = image
+    small = hh <= 64
+    if small:
+        yield ("stem", c, 64, 3, hh, ww)
+        h_cur, w_cur = hh, ww
+    else:
+        yield ("stem", c, 64, 7, hh // 2, ww // 2)
+        h_cur, w_cur = hh // 4, ww // 4  # stem stride + maxpool
+    c_in = 64
+    widths = (64, 128, 256, 512)
+    bi = 0
+    for si, (n, w) in enumerate(zip(stages, widths)):
+        for b in range(n):
+            stride = 2 if (b == 0 and si > 0) else 1
+            h_cur2, w_cur2 = h_cur // stride, w_cur // stride
+            if kind == "basic":
+                yield (f"block_{bi}/conv1", c_in, w, 3, h_cur2, w_cur2)
+                yield (f"block_{bi}/conv2", w, w, 3, h_cur2, w_cur2)
+                if stride != 1 or c_in != w:
+                    yield (f"block_{bi}/down", c_in, w, 1, h_cur2, w_cur2)
+                c_out = w
+            else:
+                yield (f"block_{bi}/conv1", c_in, w, 1, h_cur, w_cur)
+                yield (f"block_{bi}/conv2", w, w, 3, h_cur2, w_cur2)
+                yield (f"block_{bi}/conv3", w, w * 4, 1, h_cur2, w_cur2)
+                if stride != 1 or c_in != w * 4:
+                    yield (f"block_{bi}/down", c_in, w * 4, 1, h_cur2, w_cur2)
+                c_out = w * 4
+            c_in = c_out
+            h_cur, w_cur = h_cur2, w_cur2
+            bi += 1
+
+
 def flops_per_iter(
     name: str,
     batch: int,
@@ -232,11 +273,11 @@ def flops_per_iter(
 ):
     """Backward FLOPs per iteration from the paper's Eq. 6/7 model.
 
-    Walks the actual layer shapes of this ResNet on ``image`` (C, H, W).
-    Returns (dense_flops, ssprop_flops). The ssProp count uses the
-    nominal Eq. 9 at ``drop_rate``; pass ``policy`` instead to count the
-    engine's real keep counts (block rounding, Pallas tile padding).
-    ``policy`` may be a resolved
+    Walks the actual layer shapes of this ResNet on ``image`` (C, H, W)
+    via :func:`iter_conv_shapes`. Returns (dense_flops, ssprop_flops).
+    The ssProp count uses the nominal Eq. 9 at ``drop_rate``; pass
+    ``policy`` instead to count the engine's real keep counts (block
+    rounding, Pallas tile padding). ``policy`` may be a resolved
     :class:`~repro.core.policy.SitePolicies` table over
     :func:`site_names` — each conv then counts at its *own* site's keep
     count, so per-site programs get honest per-layer accounting instead
@@ -244,13 +285,8 @@ def flops_per_iter(
     """
     from repro.core import flops as F
 
-    kind, stages = LAYOUTS[name]
-    c, hh, ww = image
-    small = hh <= 64
     dense = sparse = 0
-
-    def add_conv(site, c_in, c_out, k, h_out, w_out):
-        nonlocal dense, sparse
+    for site, c_in, c_out, k, h_out, w_out in iter_conv_shapes(name, image):
         dense += F.conv_backward_flops(batch, h_out, w_out, c_in, c_out, k)
         if policy is not None:
             sparse += F.conv_backward_flops_site(
@@ -263,34 +299,4 @@ def flops_per_iter(
         bn = F.batchnorm_backward_flops(batch, h_out, w_out, c_out)
         dense += bn
         sparse += bn
-
-    if small:
-        add_conv("stem", c, 64, 3, hh, ww)
-        h_cur, w_cur = hh, ww
-    else:
-        add_conv("stem", c, 64, 7, hh // 2, ww // 2)
-        h_cur, w_cur = hh // 4, ww // 4  # stem stride + maxpool
-    c_in = 64
-    widths = (64, 128, 256, 512)
-    bi = 0
-    for si, (n, w) in enumerate(zip(stages, widths)):
-        for b in range(n):
-            stride = 2 if (b == 0 and si > 0) else 1
-            h_cur2, w_cur2 = h_cur // stride, w_cur // stride
-            if kind == "basic":
-                add_conv(f"block_{bi}/conv1", c_in, w, 3, h_cur2, w_cur2)
-                add_conv(f"block_{bi}/conv2", w, w, 3, h_cur2, w_cur2)
-                if stride != 1 or c_in != w:
-                    add_conv(f"block_{bi}/down", c_in, w, 1, h_cur2, w_cur2)
-                c_out = w
-            else:
-                add_conv(f"block_{bi}/conv1", c_in, w, 1, h_cur, w_cur)
-                add_conv(f"block_{bi}/conv2", w, w, 3, h_cur2, w_cur2)
-                add_conv(f"block_{bi}/conv3", w, w * 4, 1, h_cur2, w_cur2)
-                if stride != 1 or c_in != w * 4:
-                    add_conv(f"block_{bi}/down", c_in, w * 4, 1, h_cur2, w_cur2)
-                c_out = w * 4
-            c_in = c_out
-            h_cur, w_cur = h_cur2, w_cur2
-            bi += 1
     return dense, sparse

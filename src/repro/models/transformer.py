@@ -180,6 +180,7 @@ def _slot_apply(
     cache_pos=None,
     token_valid=None,
     block_tables=None,
+    paged_kernel=False,
 ):
     h = layers.rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
     new_cache = None
@@ -195,6 +196,7 @@ def _slot_apply(
             cache_pos=cache_pos,
             token_valid=token_valid,
             block_tables=block_tables,
+            paged_kernel=paged_kernel,
         )
     else:
         out, new_cache = ssm.ssm_apply(
@@ -269,6 +271,7 @@ def stack_apply(
     cache_pos=None,
     token_valid=None,
     block_tables=None,
+    paged_kernel=False,
 ):
     """Run the full stack. Returns (x, new_caches, total_aux).
 
@@ -299,6 +302,7 @@ def stack_apply(
                 cache_pos=cache_pos,
                 token_valid=token_valid,
                 block_tables=block_tables,
+                paged_kernel=paged_kernel,
             )
             aux = aux + a
             new_slot_caches.append(nc if decode else None)
@@ -402,7 +406,7 @@ def cross_decoder_init(key, cfg: ModelConfig):
 
 def cross_decoder_apply(
     params, x, enc_out, cfg, policy: PolicyLike, *, positions=None, caches=None,
-    cache_pos=None, token_valid=None, block_tables=None,
+    cache_pos=None, token_valid=None, block_tables=None, paged_kernel=False,
 ):
     decode = caches is not None
     per_layer = _layer_scopes(policy, cfg.n_layers)
@@ -415,7 +419,7 @@ def cross_decoder_apply(
             causal=True, positions=positions,
             kv_cache=cache if decode else None, cache_pos=cache_pos,
             token_valid=token_valid, block_tables=block_tables,
-            site="self",
+            paged_kernel=paged_kernel, site="self",
         )
         h = h + a
         c, _ = layers.attn_apply(

@@ -115,7 +115,9 @@ class ContinuousBatchingEngine:
                 dtype=cache_dtype, mesh=mesh, seq_shard=seq_shard,
             )
         self.scheduler = Scheduler(serve_cfg)
-        self._step_fn = jax.jit(steps_lib.make_slot_step(cfg))
+        self._step_fn = jax.jit(
+            steps_lib.make_slot_step(cfg, paged_kernel=serve_cfg.attn_kernel)
+        )
         self.waiting: List[rq.Request] = []
         self.by_slot: Dict[int, rq.Request] = {}
         self.finished: Dict[int, rq.Request] = {}

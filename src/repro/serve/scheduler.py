@@ -59,6 +59,12 @@ class ServeConfig:
         behaviour. Entries above ``prefill_chunk`` or duplicated are
         rejected at construction (a width above the chunk would never
         be picked; silently dropping it hid config typos).
+      attn_kernel: route decode attention through the Pallas
+        paged-attention kernel — K/V pages read in place from the pool
+        via the block table instead of the per-layer
+        ``pool[block_tables]`` gather. Requires the paged cache
+        (``block_size > 0``); token-parity with the gather path is the
+        invariant the serve tests pin.
       preempt: pool-exhaustion eviction strategy (paged engine).
         ``"recompute"`` drops the victim's cache and re-prefills its
         token history on re-admission — cheapest, but bit-exact only
@@ -75,6 +81,7 @@ class ServeConfig:
     block_size: int = 0
     n_blocks: int = 0
     decode_widths: Tuple[int, ...] = (1, 4)
+    attn_kernel: bool = False
     preempt: str = "auto"
 
     def __post_init__(self):
@@ -90,6 +97,11 @@ class ServeConfig:
             raise ValueError("n_blocks must be >= 0 (0 = default pool)")
         if self.n_blocks and not self.block_size:
             raise ValueError("n_blocks requires block_size > 0")
+        if self.attn_kernel and not self.block_size:
+            raise ValueError(
+                "attn_kernel requires the paged cache (block_size > 0): "
+                "the kernel addresses K/V through the block table"
+            )
         if any(w < 1 for w in self.decode_widths):
             raise ValueError("decode_widths must be >= 1")
         if len(set(self.decode_widths)) != len(self.decode_widths):

@@ -160,31 +160,85 @@ class TestPallasParity:
                 np.asarray(a), np.asarray(r), err_msg=name, **_tols("bfloat16")
             )
 
-    def test_conv_pallas_path_actually_routes_through_kernels(self, monkeypatch):
+    def _spy(self, monkeypatch, names):
         from repro.kernels import ops as kops
 
-        calls = {"dx": 0, "dw": 0}
-        real_dx, real_dw = kops.dx_gathered, kops.dw_gathered_scatter
+        calls = dict.fromkeys(names, 0)
+        for name in names:
+            real = getattr(kops, name)
 
-        def spy_dx(*a, **kw):
-            calls["dx"] += 1
-            return real_dx(*a, **kw)
+            def spy(*a, _name=name, _real=real, **kw):
+                calls[_name] += 1
+                return _real(*a, **kw)
 
-        def spy_dw(*a, **kw):
-            calls["dw"] += 1
-            return real_dw(*a, **kw)
+            monkeypatch.setattr(kops, name, spy)
+        return calls
 
-        monkeypatch.setattr(kops, "dx_gathered", spy_dx)
-        monkeypatch.setattr(kops, "dw_gathered_scatter", spy_dw)
+    def test_conv_pallas_path_actually_routes_through_kernels(self, monkeypatch):
+        # fuse_im2col is on by default: the fused kernels take the call,
+        # the materializing canonical kernels are never touched.
+        calls = self._spy(
+            monkeypatch,
+            ("conv_dx_fused", "conv_dw_fused_scatter",
+             "dx_gathered", "dw_gathered_scatter"),
+        )
         _conv_grads(_pol("block", "", block_size=8, use_pallas=True), 1, 1, 1, 1)
-        assert calls["dx"] == 1 and calls["dw"] == 1
+        assert calls["conv_dx_fused"] == 1 and calls["conv_dw_fused_scatter"] == 1
+        assert calls["dx_gathered"] == 0 and calls["dw_gathered_scatter"] == 0
 
-    def test_conv_pallas_grouped_falls_back_correctly(self):
-        # groups>1 cannot lower to im2col; engine must still be exact
+    def test_conv_pallas_fuse_off_routes_materializing(self, monkeypatch):
+        calls = self._spy(
+            monkeypatch,
+            ("conv_dx_fused", "conv_dw_fused_scatter",
+             "dx_gathered", "dw_gathered_scatter"),
+        )
+        _conv_grads(
+            _pol("block", "", block_size=8, use_pallas=True, fuse_im2col=False),
+            1, 1, 1, 1,
+        )
+        assert calls["dx_gathered"] == 1 and calls["dw_gathered_scatter"] == 1
+        assert calls["conv_dx_fused"] == 0 and calls["conv_dw_fused_scatter"] == 0
+
+    @pytest.mark.parametrize("stride,padding,dilation,groups", GEOMS)
+    def test_conv_fused_equals_materialized(
+        self, stride, padding, dilation, groups
+    ):
+        # the tentpole contract: the fused index-map kernels compute the
+        # same backward as the materializing canonical path, across the
+        # full geometry grid (selection is identical — only the lowering
+        # differs).
+        pol = _pol("block", "", block_size=4, use_pallas=True)
+        ref = dataclasses.replace(pol, fuse_im2col=False)
+        g1 = _conv_grads(pol, stride, padding, dilation, groups)
+        g2 = _conv_grads(ref, stride, padding, dilation, groups)
+        for name, a, r in zip(("dx", "dw", "db"), g1, g2):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(r), rtol=1e-3, atol=1e-4, err_msg=name
+            )
+
+    def test_conv_pallas_grouped_routes_fused_block_diagonal(self, monkeypatch):
+        # grouped convs route onto the SAME fused kernels via the
+        # block-diagonal canonical form (whole blocks per group) — the
+        # old framework-VJP fallback is only for indivisible shapes.
+        calls = self._spy(monkeypatch, ("conv_dx_fused", "conv_dw_fused_scatter"))
         pol = _pol("block", "", block_size=4, use_pallas=True)
         ref = _pol("block", "", block_size=4, mask=True)
         g1 = _conv_grads(pol, 1, 1, 1, 2)
         g2 = _conv_grads(ref, 1, 1, 1, 2)
+        assert calls["conv_dx_fused"] == 1 and calls["conv_dw_fused_scatter"] == 1
+        for a, r in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(r), rtol=1e-3, atol=1e-4)
+
+    def test_conv_pallas_grouped_indivisible_falls_back(self, monkeypatch):
+        # c_out=16 with groups=2 needs whole 8-channel blocks per group;
+        # block_size=16 can't split block-diagonally -> framework VJP,
+        # still exact.
+        calls = self._spy(monkeypatch, ("conv_dx_fused", "conv_dw_fused_scatter"))
+        pol = _pol("block", "", block_size=16, use_pallas=True)
+        ref = _pol("block", "", block_size=16, mask=True)
+        g1 = _conv_grads(pol, 1, 1, 1, 2)
+        g2 = _conv_grads(ref, 1, 1, 1, 2)
+        assert calls["conv_dx_fused"] == 0 and calls["conv_dw_fused_scatter"] == 0
         for a, r in zip(g1, g2):
             np.testing.assert_allclose(np.asarray(a), np.asarray(r), rtol=2e-4, atol=1e-5)
 

@@ -80,3 +80,145 @@ def test_kernel_blockspec_grid_shapes():
         np.testing.assert_allclose(
             out, ref.dx_gathered_ref(dy, w, bidx, 128), rtol=1e-5, atol=1e-3
         )
+
+
+# --- fused-im2col conv kernels vs the framework conv VJP -------------
+
+_DN = ("NCHW", "OIHW", "NCHW")
+_FUSED_GEOMS = [
+    # (stride, padding, dilation, groups)
+    (1, 1, 1, 1),
+    (2, 1, 1, 1),
+    (1, 0, 2, 1),
+    (1, 1, 1, 2),
+    (2, 1, 2, 2),
+]
+
+
+def _conv_fused_case(stride, padding, dilation, groups, c_out=16, bs=4):
+    c_in, k = 6, 3
+    x = jax.random.normal(jax.random.PRNGKey(10), (2, c_in, 8, 8))
+    w = jax.random.normal(
+        jax.random.PRNGKey(11), (c_out, c_in // groups, k, k)
+    ) * 0.2
+
+    def fwd(x, w):
+        return jax.lax.conv_general_dilated(
+            x, w, (stride, stride), ((padding, padding), (padding, padding)),
+            rhs_dilation=(dilation, dilation), feature_group_count=groups,
+            dimension_numbers=_DN,
+        )
+
+    y, vjp = jax.vjp(fwd, x, w)
+    dy = jax.random.normal(jax.random.PRNGKey(12), y.shape)
+    # one kept block per group where grouped (idx must be sorted and
+    # spread block-diagonally); a ragged pair otherwise
+    nb = c_out // bs
+    blocks = (
+        jnp.asarray([g * (nb // groups) for g in range(groups)], jnp.int32)
+        if groups > 1
+        else jnp.asarray([0, 2], jnp.int32)
+    )
+    chan = jnp.zeros((c_out,), bool)
+    for b in np.asarray(blocks):
+        chan = chan.at[b * bs : (b + 1) * bs].set(True)
+    dy_masked = jnp.where(chan[None, :, None, None], dy, 0.0)
+    dx_ref, dw_ref = vjp(dy_masked)
+    common = dict(
+        stride=(stride, stride), padding=((padding, padding), (padding, padding)),
+        dilation=(dilation, dilation), groups=groups, block_size=bs,
+    )
+    return x, w, dy, blocks, dx_ref, dw_ref, common
+
+
+@pytest.mark.parametrize("stride,padding,dilation,groups", _FUSED_GEOMS)
+def test_conv_dx_fused_vs_vjp(stride, padding, dilation, groups):
+    x, w, dy, blocks, dx_ref, _, common = _conv_fused_case(
+        stride, padding, dilation, groups
+    )
+    dx = ops.conv_dx_fused(dy, w, blocks, hw=x.shape[2:], **common)
+    np.testing.assert_allclose(dx, dx_ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("stride,padding,dilation,groups", _FUSED_GEOMS)
+def test_conv_dw_fused_vs_vjp(stride, padding, dilation, groups):
+    x, w, dy, blocks, _, dw_ref, common = _conv_fused_case(
+        stride, padding, dilation, groups
+    )
+    kh, kw = w.shape[2:]
+    dw2 = ops.conv_dw_fused_scatter(x, dy, blocks, kh=kh, kw=kw, **common)
+    # [Cg*Kh*Kw, C_out] rows in (c, kh, kw) order -> OIHW
+    expect = dw_ref.transpose(1, 2, 3, 0).reshape(-1, w.shape[0])
+    np.testing.assert_allclose(dw2, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_conv_dw_fused_ragged_c_out():
+    # c_out=10 with block_size=4: the phantom tail channels must stay
+    # out of the scattered result
+    x, w, dy, blocks, _, dw_ref, common = _conv_fused_case(
+        1, 1, 1, 1, c_out=10, bs=4
+    )
+    dw2 = ops.conv_dw_fused_scatter(x, dy, blocks, kh=3, kw=3, **common)
+    expect = dw_ref.transpose(1, 2, 3, 0).reshape(-1, 10)
+    np.testing.assert_allclose(dw2, expect, rtol=1e-4, atol=1e-4)
+
+
+# --- paged attention vs the gather + masked-attention oracle ---------
+
+
+def _paged_attn_ref(q, k_pool, v_pool, tables, qpos):
+    b, s, h, d = q.shape
+    n_pages, bs_pg, kv, _ = k_pool.shape
+    nb = tables.shape[1]
+    tables = jnp.clip(tables, 0, n_pages - 1)
+    g = h // kv
+    kk = jnp.repeat(k_pool[tables].reshape(b, nb * bs_pg, kv, d), g, axis=2)
+    vv = jnp.repeat(v_pool[tables].reshape(b, nb * bs_pg, kv, d), g, axis=2)
+    t = jnp.arange(nb * bs_pg)
+    mask = t[None, None, :] <= qpos[:, :, None]
+    scores = jnp.einsum("bshd,bthd->bhst", q, kk).astype(jnp.float32)
+    scores = scores / np.sqrt(d)
+    scores = jnp.where(mask[:, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum(
+        "bhst,bthd->bshd", p, vv.astype(jnp.float32)
+    ).astype(q.dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("h,kv,s", [(4, 2, 2), (4, 4, 1)])
+def test_paged_attention_vs_gather(dtype, h, kv, s):
+    b, d, n_pages, bs_pg, nb = 3, 8, 10, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(20), 4)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k_pool = jax.random.normal(ks[1], (n_pages, bs_pg, kv, d), dtype)
+    v_pool = jax.random.normal(ks[2], (n_pages, bs_pg, kv, d), dtype)
+    tables = jax.random.randint(ks[3], (b, nb), 0, n_pages)
+    # heterogeneous positions: slots mid-page, page-boundary, deep
+    qpos = jnp.stack([jnp.arange(s) + off for off in (1, 4, 7)]).astype(jnp.int32)
+    out = ops.paged_attention(q, k_pool, v_pool, tables, qpos)
+    expect = _paged_attn_ref(q, k_pool, v_pool, tables, qpos)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, jnp.float32), np.asarray(expect, jnp.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_paged_attention_ignores_unassigned_pages():
+    """Table entries past the causal horizon may be stale or garbage —
+    the per-token fence (t_pos <= qpos) must keep them out, and
+    out-of-range page ids must not fault (they are clipped, then
+    masked)."""
+    b, s, h, kv, d = 2, 1, 4, 2, 8
+    n_pages, bs_pg, nb = 6, 4, 3
+    ks = jax.random.split(jax.random.PRNGKey(21), 4)
+    q = jax.random.normal(ks[0], (b, s, h, d))
+    k_pool = jax.random.normal(ks[1], (n_pages, bs_pg, kv, d))
+    v_pool = jax.random.normal(ks[2], (n_pages, bs_pg, kv, d))
+    qpos = jnp.asarray([[2], [5]], jnp.int32)  # pages 2+ never reached
+    good = jnp.asarray([[0, 1, 2], [3, 4, 2]], jnp.int32)
+    bad = good.at[:, 2].set(jnp.asarray([999, -7]))
+    out_good = ops.paged_attention(q, k_pool, v_pool, good, qpos)
+    out_bad = ops.paged_attention(q, k_pool, v_pool, bad, qpos)
+    np.testing.assert_allclose(out_good, out_bad, rtol=1e-6, atol=1e-6)

@@ -60,6 +60,16 @@ MAX_SEQ = 24
 # dynamics (lazy growth, reuse) actually exercise under MAX_SEQ=24
 PAGED_KW = dict(block_size=4, n_blocks=8)
 
+# engine variants for the parity grids: the contiguous cache, the paged
+# cache with the gather path, and the paged cache attending in place
+# via the Pallas kernel (attn_kernel is a no-op for pure-SSM families,
+# which still must pass through the same config unharmed)
+ENGINE_KW = {
+    "contiguous": {},
+    "paged": PAGED_KW,
+    "paged_kernel": dict(PAGED_KW, attn_kernel=True),
+}
+
 
 def _setup(arch, seed=0):
     cfg = get_config(arch).reduced()
@@ -82,18 +92,19 @@ def _run_engine(cfg, params, reqs, *, slots=2, chunk=4, budget=0, **kw):
     return eng, out
 
 
-@pytest.mark.parametrize("engine", ["contiguous", "paged"])
+@pytest.mark.parametrize("engine", sorted(ENGINE_KW))
 @pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
 def test_engine_matches_lockstep_per_request(family, engine):
     """The parity grid: 6 staggered ragged requests through 2 slots
     (forces slot reuse and prefill/decode interleaving) == per-request
-    lock-step decode — for the contiguous AND the paged cache."""
+    lock-step decode — for the contiguous cache, the paged gather,
+    and the in-place paged-attention kernel."""
     cfg, params = _setup(FAMILY_ARCHS[family])
     reqs = poisson_workload(
         cfg, n_requests=6, arrival_rate=0.7, prompt_len=(3, 7),
         gen_len=(3, 9), seed=42,
     )
-    kw = PAGED_KW if engine == "paged" else {}
+    kw = ENGINE_KW[engine]
     eng, out = _run_engine(cfg, params, reqs, **kw)
     assert len(out) == len(reqs)
     for r in reqs:
@@ -462,7 +473,7 @@ def test_request_preempt_raises_for_sampled():
     assert req.preemptions == 1 and req.state == WAITING
 
 
-@pytest.mark.parametrize("engine", ["contiguous", "paged"])
+@pytest.mark.parametrize("engine", sorted(ENGINE_KW))
 @pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
 def test_engine_matches_lockstep_sampled(family, engine):
     """Sampled parity grid: per-request temperature/top-k/top-p with
@@ -476,7 +487,7 @@ def test_engine_matches_lockstep_sampled(family, engine):
     )
     assert all(not r.sampling.greedy for r in reqs)
     assert len({r.sampling.seed for r in reqs}) == len(reqs)
-    kw = PAGED_KW if engine == "paged" else {}
+    kw = ENGINE_KW[engine]
     eng = ContinuousBatchingEngine(
         cfg, params,
         ServeConfig(max_slots=2, max_seq=MAX_SEQ, prefill_chunk=4, **kw),
