@@ -30,6 +30,12 @@ Five serving-side headlines:
    its token history (the swap-vs-recompute cost row); a seeded sampled
    run under forced swap preemption is bit-identical to the same
    workload with a pressure-free pool.
+6. **Speculative decoding** (``spec_k > 0``) buys strictly fewer verify
+   steps for the same token stream: a self-draft run (drafter == target,
+   acceptance exactly 1.0) must finish the identical workload in fewer
+   compute steps than ``spec_k=0`` with token-for-token identical
+   output — both asserted. The row reports acceptance rate, generated
+   tokens per verify step and the drafter invocations the savings cost.
 
 Per-request outputs are verified identical between every engine pair
 before any number is reported; the paged/sampled/swap claims are hard
@@ -41,7 +47,8 @@ slot utilization and the engine comparisons per arch.
 
 Run:  PYTHONPATH=src python benchmarks/serve_latency.py [--arch qwen2.5-3b]
       PYTHONPATH=src python benchmarks/serve_latency.py --smoke
-        (CI: one arch, the sampled + forced-preemption workloads only)
+        (CI: one arch — sampled, forced-preemption, attn-kernel and
+        speculative cells only)
 """
 import argparse
 import json
@@ -480,6 +487,87 @@ def bench_preemption(arch: str) -> dict:
     }
 
 
+# --- speculative decoding: fewer steps, identical stream -------------
+SPEC_K = 3
+SPEC_CHUNK = 4  # verify width k+1; also the decode ladder width
+
+
+def bench_speculative(arch: str) -> dict:
+    """Speculative decoding A/B on a predictable (greedy, self-draft)
+    workload.
+
+    The drafter IS the target model, so every proposal is accepted
+    (acceptance rate exactly 1.0) and the verify-step saving is the
+    upper bound spec_k admits. Token parity with the ``spec_k=0`` engine
+    and a strict step reduction are both asserted before the row is
+    reported.
+    """
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    base = dict(max_slots=SLOTS, max_seq=MAX_SEQ, prefill_chunk=SPEC_CHUNK)
+
+    def workload():
+        return poisson_workload(
+            cfg, n_requests=N_REQUESTS, arrival_rate=ARRIVAL_RATE,
+            prompt_len=PROMPT_LEN, gen_len=GEN_RANGE, seed=11,
+            uniform_prompts=True,
+        )
+
+    base_eng, base_out = _run_paged_engine(
+        cfg, params, workload(), ServeConfig(**base))
+    spec_eng, spec_out = _run_paged_engine(
+        cfg, params, workload(), ServeConfig(**base, spec_k=SPEC_K))
+    for rid in base_out:
+        if not np.array_equal(base_out[rid], spec_out[rid]):
+            raise RuntimeError(
+                f"{arch} rid={rid}: speculative != non-speculative output"
+            )
+    bs, ss = base_eng.stats(), spec_eng.stats()
+    assert ss["acceptance_rate"] == 1.0, (
+        f"{arch}: self-draft acceptance {ss['acceptance_rate']} != 1.0"
+    )
+    assert ss["compute_steps"] < bs["compute_steps"], (
+        f"{arch}: speculative took {ss['compute_steps']} verify steps >= "
+        f"baseline {bs['compute_steps']}"
+    )
+    gen_total = sum(len(v) for v in spec_out.values())
+    return {
+        "arch": arch,
+        "family": cfg.family,
+        "workload": "speculative",
+        "spec_k": SPEC_K,
+        "requests": N_REQUESTS,
+        "slots": SLOTS,
+        "generated_tokens": gen_total,
+        "baseline_steps": bs["compute_steps"],
+        "speculative_steps": ss["compute_steps"],
+        "step_ratio": bs["compute_steps"] / max(ss["compute_steps"], 1),
+        "spec_proposed": ss["spec_proposed"],
+        "spec_accepted": ss["spec_accepted"],
+        "acceptance_rate": ss["acceptance_rate"],
+        "draft_steps": ss["draft_steps"],
+        "baseline_tokens_per_step": gen_total / max(bs["compute_steps"], 1),
+        "speculative_tokens_per_step": gen_total / max(ss["compute_steps"], 1),
+        "baseline_wall_s": bs["wall_s"],
+        "speculative_wall_s": ss["wall_s"],
+        "token_parity": True,
+    }
+
+
+def _emit_speculative(row):
+    emit(
+        f"serve_speculative_{row['arch']}",
+        row["speculative_wall_s"] / max(row["speculative_steps"], 1) * 1e6,
+        f"spec_k {row['spec_k']}: {row['speculative_steps']} verify steps vs"
+        f" {row['baseline_steps']} (x{row['step_ratio']:.2f});"
+        f" acceptance {row['acceptance_rate']:.2f}"
+        f" ({row['spec_accepted']}/{row['spec_proposed']});"
+        f" {row['speculative_tokens_per_step']:.2f} gen tok/step vs"
+        f" {row['baseline_tokens_per_step']:.2f};"
+        f" {row['draft_steps']} draft steps; token parity OK",
+    )
+
+
 def _emit_sampled(row):
     emit(
         f"serve_sampled_{row['arch']}",
@@ -547,6 +635,10 @@ def run(archs=ARCHS, json_path=None):
         row = bench_preemption(arch)
         rows.append(row)
         _emit_preemption(row)
+    for arch in archs:
+        row = bench_speculative(arch)
+        rows.append(row)
+        _emit_speculative(row)
     path = json_path or os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
     with open(path, "w") as f:
         json.dump(rows, f, indent=2)
@@ -555,13 +647,15 @@ def run(archs=ARCHS, json_path=None):
 
 def run_smoke(arch=ARCHS[0], json_path=None):
     """CI-sized run: one arch — the sampled workload, the forced swap
-    preemption A/B and the paged-attention kernel A/B (each internally
-    asserts parity/determinism).
+    preemption A/B, the paged-attention kernel A/B and the speculative
+    decoding A/B (each internally asserts parity/determinism).
     Does NOT overwrite BENCH_serve.json unless --json is given."""
-    rows = [bench_sampled(arch), bench_preemption(arch), bench_attn_kernel(arch)]
+    rows = [bench_sampled(arch), bench_preemption(arch),
+            bench_attn_kernel(arch), bench_speculative(arch)]
     _emit_sampled(rows[0])
     _emit_preemption(rows[1])
     _emit_attn_kernel(rows[2])
+    _emit_speculative(rows[3])
     if json_path:
         with open(json_path, "w") as f:
             json.dump(rows, f, indent=2)
@@ -573,7 +667,8 @@ def main():
     ap.add_argument("--arch", choices=ARCHS, default=None)
     ap.add_argument("--json", default=None)
     ap.add_argument("--smoke", action="store_true",
-                    help="one arch, sampled + forced-preemption only (CI)")
+                    help="one arch: sampled, forced-preemption, attn-kernel "
+                    "and speculative cells only (CI)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.smoke:

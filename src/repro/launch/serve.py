@@ -17,6 +17,14 @@ sampled requests require swap (auto does the right thing). ``--stream``
 prints each token event as it is emitted instead of only the final
 summary.
 
+Speculative decoding: ``--spec-k k`` has a drafter propose k tokens per
+decode slot which the target verifies in one chunk — the token stream
+is bit-identical, only the step count drops. ``--draft-layers n`` builds
+a depth-reduced drafter from the same architecture (0, the default,
+self-drafts with the target — every proposal accepted; useful as a
+sanity check, not a speedup, since the drafter is as expensive as the
+target).
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
       --reduced --batch 4 --prompt-len 16 --gen 32 --arrival-rate 0.5 \
       --temperature 0.8 --top-p 0.95 --stream
@@ -71,6 +79,12 @@ def build_parser():
     ap.add_argument("--attn-kernel", action="store_true",
                     help="Pallas paged-attention kernel: read K/V pages "
                     "in place via the block table (paged engine only)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: draft tokens proposed per "
+                    "decode slot per step (0 = off)")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="drafter depth for speculative decoding (0 = "
+                    "self-draft with the target model)")
     ap.add_argument("--stream", action="store_true",
                     help="print token events as they are emitted")
     ap.add_argument("--seed", type=int, default=0)
@@ -138,6 +152,10 @@ def run(args) -> dict:
             }
 
         paged = args.engine == "paged"
+        draft_cfg = draft_params = None
+        if args.spec_k and args.draft_layers:
+            draft_cfg = cfg.reduced(n_layers=args.draft_layers)
+            draft_params = lm.init_params(draft_cfg, jax.random.PRNGKey(args.seed + 1))
         engine = ContinuousBatchingEngine(
             cfg,
             params,
@@ -150,8 +168,11 @@ def run(args) -> dict:
                 n_blocks=args.n_blocks if paged else 0,
                 attn_kernel=args.attn_kernel,
                 preempt=args.preempt,
+                spec_k=args.spec_k,
             ),
             mesh=mesh,
+            draft_cfg=draft_cfg,
+            draft_params=draft_params,
         )
         for r in reqs:
             engine.submit(r)
@@ -177,6 +198,10 @@ def run(args) -> dict:
         "preemptions": stats["preemptions"],
         "swap_preemptions": stats["swap_preemptions"],
         "recompute_preemptions": stats["recompute_preemptions"],
+        "spec_proposed": stats["spec_proposed"],
+        "spec_accepted": stats["spec_accepted"],
+        "acceptance_rate": stats["acceptance_rate"],
+        "draft_steps": stats["draft_steps"],
     }
 
 
@@ -193,6 +218,11 @@ def main():
               f"preemptions {out['preemptions']} "
               f"(swap {out['swap_preemptions']}, "
               f"recompute {out['recompute_preemptions']})")
+    if args.spec_k and "spec_proposed" in out:
+        print(f"[serve] speculative: accepted {out['spec_accepted']}"
+              f"/{out['spec_proposed']} draft tokens "
+              f"({out['acceptance_rate']*100:.0f}%), "
+              f"{out['draft_steps']} draft steps")
     print("[serve] first request tokens:", out["generated"][0][:16].tolist())
 
 

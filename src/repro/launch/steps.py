@@ -111,6 +111,13 @@ def make_prefill_step(cfg: ModelConfig) -> Callable:
     return prefill
 
 
+# Static bound on per-request top_k: `top_ks` is per-slot *data* (traced),
+# but `jax.lax.top_k` needs a static k — so the step computes the top
+# TOP_K_CAP values once (O(V·log cap), vs the old full-vocab sort) and
+# indexes the k-th per slot. SamplingParams validates top_k <= TOP_K_CAP.
+TOP_K_CAP = 128
+
+
 def sample_tokens(logits, *, rng, temps, top_ks, top_ps, fold):
     """Per-slot temperature / top-k / top-p sampling over ``[B, V]`` logits.
 
@@ -127,9 +134,10 @@ def sample_tokens(logits, *, rng, temps, top_ks, top_ps, fold):
     v = logits.shape[-1]
     scaled = logits / jnp.where(temps > 0, temps, 1.0)[:, None]
     # top-k: mask everything below the k-th largest logit (k = 0 -> off)
-    sorted_desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+    cap = min(v, TOP_K_CAP)
+    top_vals, _ = jax.lax.top_k(scaled, cap)  # [B, cap], sorted desc
     kth = jnp.take_along_axis(
-        sorted_desc, (jnp.clip(top_ks, 1, v) - 1)[:, None], axis=-1
+        top_vals, (jnp.clip(top_ks, 1, cap) - 1)[:, None], axis=-1
     )
     scaled = jnp.where(
         (top_ks[:, None] > 0) & (scaled < kth), -jnp.inf, scaled
@@ -152,6 +160,39 @@ def _emit_tokens(logits, state, fold):
     if rng is None:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return sample_tokens(
+        logits, rng=rng, temps=state["temps"], top_ks=state["top_ks"],
+        top_ps=state["top_ps"], fold=fold,
+    )
+
+
+def sample_tokens_chunk(logits, *, rng, temps, top_ks, top_ps, fold):
+    """Per-position sampling over a ``[B, C, V]`` chunk of logits.
+
+    ``fold [B, C]`` carries each position's absolute cache position.
+    Flattens to ``[B*C, V]`` rows and reuses :func:`sample_tokens` with
+    each slot's controls repeated across its chunk — every row's
+    computation is identical to the width-1 call, so per-position
+    emission is bit-exact with single-token decode at the same fold.
+    Returns ``[B, C]`` int32 tokens.
+    """
+    b, c, v = logits.shape
+
+    def rep(a):
+        return jnp.repeat(a, c, axis=0)
+
+    toks = sample_tokens(
+        logits.reshape(b * c, v), rng=rep(rng), temps=rep(temps),
+        top_ks=rep(top_ks), top_ps=rep(top_ps), fold=fold.reshape(b * c),
+    )
+    return toks.reshape(b, c)
+
+
+def _emit_chunk_tokens(logits, state, fold):
+    """Greedy-or-sampled tokens for every chunk position. [B,C,V] -> [B,C]."""
+    rng = state.get("rng")
+    if rng is None:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return sample_tokens_chunk(
         logits, rng=rng, temps=state["temps"], top_ks=state["top_ks"],
         top_ps=state["top_ps"], fold=fold,
     )
@@ -181,7 +222,9 @@ def make_serve_step(cfg: ModelConfig) -> Callable:
     return serve_step
 
 
-def make_slot_step(cfg: ModelConfig, *, paged_kernel: bool = False) -> Callable:
+def make_slot_step(
+    cfg: ModelConfig, *, paged_kernel: bool = False, spec: bool = False
+) -> Callable:
     """Mixed prefill/decode step over per-slot state (continuous batching).
 
     ``paged_kernel=True`` (paged cache only) routes decode attention
@@ -208,20 +251,67 @@ def make_slot_step(cfg: ModelConfig, *, paged_kernel: bool = False) -> Callable:
     ``(next_tokens [B] int32, new_state)`` with the cache written and
     ``pos`` advanced by ``count``; rows with count==0 return garbage
     tokens the scheduler ignores.
+
+    ``spec=True`` builds the speculative verify step instead. The state
+    gains ``"is_spec" [B]`` bool; a speculative slot's ``tokens`` row is
+    ``[t0, d1, .., d_{n-1}]`` — the last committed token followed by
+    ``n-1`` draft proposals — with ``count = n``. The step emits the
+    target's token at *every* chunk position with that position's fold
+    (``fold[b, j] = pos[b] + j``), accepts the longest prefix where
+    draft ``d_{j+1}`` equals the target's token at position ``j``
+    (exact-match acceptance), and commits only the accepted prefix:
+    ``keep = accepted + 1`` tokens are consumed, ``pos`` advances by
+    ``keep``, and the SSM state is selected at the accepted position
+    inside the step (:func:`repro.models.model.commit_spec_cache`), so
+    the cache pytree out matches the non-speculative layout exactly.
+    Rejected KV writes land beyond the committed ``pos``, where the
+    per-slot causal mask fences them until they are overwritten.
+    Non-speculative rows (``is_spec`` False — prefill chunks, plain
+    decode, idle) take ``keep = count``, making this a strict superset
+    of the plain step: one executable per width serves any mix. Returns
+    ``((tokens [B, C] int32, keep [B] int32), new_state)`` — the caller
+    emits ``tokens[b, :keep[b]]`` for a speculative slot and
+    ``tokens[b, count[b]-1]`` otherwise.
     """
 
     def slot_step(params, state):
+        if not spec:
+            logits, new_cache = lm.decode_slots(
+                cfg, params, state["tokens"], state["cache"],
+                state["pos"], state["count"], enc_out=state.get("enc_out"),
+                block_tables=state.get("block_tables"),
+                paged_kernel=paged_kernel,
+            )
+            nxt = _emit_tokens(logits, state, state["pos"] + state["count"] - 1)
+            new_state = dict(
+                state, cache=new_cache, pos=state["pos"] + state["count"]
+            )
+            return nxt, new_state
+
+        tokens, count = state["tokens"], state["count"]
+        b, c = tokens.shape
         logits, new_cache = lm.decode_slots(
-            cfg, params, state["tokens"], state["cache"],
-            state["pos"], state["count"], enc_out=state.get("enc_out"),
+            cfg, params, tokens, state["cache"],
+            state["pos"], count, enc_out=state.get("enc_out"),
             block_tables=state.get("block_tables"),
             paged_kernel=paged_kernel,
+            all_logits=True, spec_states=True,
         )
-        nxt = _emit_tokens(logits, state, state["pos"] + state["count"] - 1)
-        new_state = dict(
-            state, cache=new_cache, pos=state["pos"] + state["count"]
-        )
-        return nxt, new_state
+        fold = state["pos"][:, None] + jnp.arange(c)[None, :]  # [B, C]
+        tok = _emit_chunk_tokens(logits, state, fold)  # [B, C]
+        if c > 1:
+            # draft token d_{j+1} rides in the *input* row: accept while
+            # the target's token at position j reproduces it.
+            matches = (tok[:, :-1] == tokens[:, 1:]) & (
+                jnp.arange(c - 1)[None, :] < (count - 1)[:, None]
+            )
+            acc = jnp.cumprod(matches.astype(jnp.int32), axis=1).sum(axis=1)
+            keep = jnp.where(state["is_spec"] & (count > 1), acc + 1, count)
+        else:
+            keep = count
+        new_cache = lm.commit_spec_cache(new_cache, keep)
+        new_state = dict(state, cache=new_cache, pos=state["pos"] + keep)
+        return (tok, keep), new_state
 
     return slot_step
 

@@ -164,6 +164,8 @@ def decode_slots(
     block_tables: Optional[jax.Array] = None,  # [B, NB] int32 (paged cache)
     paged_kernel: bool = False,
     policy: PolicyLike = DENSE,
+    all_logits: bool = False,
+    spec_states: bool = False,
 ):
     """Mixed prefill/decode step over independently positioned slots.
 
@@ -187,6 +189,14 @@ def decode_slots(
     Returns ``(logits [B, V] at each slot's last real token, new_cache)``.
     Rows with ``token_count == 0`` carry garbage logits the caller must
     ignore.
+
+    ``all_logits=True`` returns the full chunk's logits ``[B, C, V]``
+    instead of the last real token's row — the speculative verifier
+    needs every position to compare draft tokens against.
+    ``spec_states=True`` additionally makes SSM cache leaves come back
+    with a per-position axis (``[np, B, C, ...]``) so
+    :func:`commit_spec_cache` can select the state as of an accepted
+    prefix; KV leaves are position-addressed and unchanged.
     """
     b, c = tokens.shape
     positions = slot_pos[:, None] + jnp.arange(c)[None, :]  # [B, C]
@@ -204,13 +214,42 @@ def decode_slots(
             params["stack"], x, cfg, policy,
             positions=positions, caches=cache, cache_pos=slot_pos,
             token_valid=valid, block_tables=block_tables,
-            paged_kernel=paged_kernel,
+            paged_kernel=paged_kernel, spec_states=spec_states,
         )
     x = layers.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+    if all_logits:
+        logits = layers.unembed_apply(params["embed"], x, valid=cfg.vocab)
+        return logits, new_cache
     last = jnp.clip(token_count - 1, 0, c - 1)
     x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)  # [B, 1, d]
     logits = layers.unembed_apply(params["embed"], x_last, valid=cfg.vocab)[:, 0]
     return logits, new_cache
+
+
+def commit_spec_cache(cache, keep: jax.Array):
+    """Collapse a ``spec_states=True`` cache to the accepted prefix.
+
+    ``keep [B]`` is how many of the chunk's tokens each slot actually
+    consumed (``accepted + 1`` for a speculative slot, ``token_count``
+    otherwise). SSM leaves carry a per-position axis
+    (``conv [np, B, C, ...]`` / ``state [np, B, C, ...]``) — select
+    position ``clip(keep - 1, 0)``; a slot with ``keep == 0`` read index
+    0, whose state equals the pre-step state because invalid positions
+    are frozen in the decode scan. KV leaves are position-addressed
+    (rejected writes sit beyond the committed ``pos`` and are fenced by
+    the per-slot causal mask, then overwritten) and pass through, so the
+    result matches the non-speculative cache pytree exactly.
+    """
+    idx = jnp.clip(keep - 1, 0)
+
+    def one(path, a):
+        keys = [str(k.key) for k in path if hasattr(k, "key")]
+        if keys and keys[-1] in ("conv", "state"):
+            ix = idx.reshape((1, -1, 1) + (1,) * (a.ndim - 3))
+            return jnp.take_along_axis(a, ix, axis=2)[:, :, 0]
+        return a
+
+    return jax.tree_util.tree_map_with_path(one, cache)
 
 
 def reset_slots(cache, free_mask: jax.Array):

@@ -117,7 +117,9 @@ def ssd_chunked(x, dt, a_log, b_mat, c_mat, chunk):
     return y
 
 
-def ssm_apply(p, x, cfg, policy: PolicyLike, cache=None, token_valid=None):
+def ssm_apply(
+    p, x, cfg, policy: PolicyLike, cache=None, token_valid=None, spec_states=False
+):
     """Mamba-2 block. x [B, S, d].
 
     cache (decode): {"conv": [B, K-1, conv_ch], "state": [B, H, N, P]}.
@@ -125,6 +127,14 @@ def ssm_apply(p, x, cfg, policy: PolicyLike, cache=None, token_valid=None):
     (chunked prefill); ``token_valid [B,S]`` freezes the conv/SSM state
     on rows whose token is padding (continuous batching: slots advance
     independently). Returns (out [B, S, d], new_cache or None).
+
+    ``spec_states=True`` (decode only) returns the *per-position* state
+    stack instead of the final state: cache leaves gain a position axis
+    ``{"conv": [B, S, K-1, C], "state": [B, S, H, N, P]}`` so a
+    speculative verifier can commit the state as of any accepted prefix
+    (the recurrence is not position-addressed like KV, so rollback must
+    select, not mask). Frozen (invalid) positions carry the previous
+    state forward, making prefix selection safe for idle rows.
     """
     bsz, s, _ = x.shape
     di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
@@ -178,7 +188,8 @@ def ssm_apply(p, x, cfg, policy: PolicyLike, cache=None, token_valid=None):
                 valid_t[:, None, None], conv_cat[:, 1:], conv_state
             )
             state_next = jnp.where(valid_t[:, None, None, None], s_new, state)
-            return (conv_next, state_next), y_t
+            ys_t = (y_t, conv_next, state_next) if spec_states else y_t
+            return (conv_next, state_next), ys_t
 
         (conv_f, state_f), ys = jax.lax.scan(
             step,
@@ -189,8 +200,15 @@ def ssm_apply(p, x, cfg, policy: PolicyLike, cache=None, token_valid=None):
                 token_valid.transpose(1, 0),
             ),
         )
+        if spec_states:
+            ys, convs, states = ys
+            new_cache = {
+                "conv": convs.transpose(1, 0, 2, 3),  # [B,S,K-1,C]
+                "state": states.transpose(1, 0, 2, 3, 4),  # [B,S,H,N,P]
+            }
+        else:
+            new_cache = {"conv": conv_f, "state": state_f}
         y = ys.transpose(1, 0, 2, 3)  # [B,S,H,P]
-        new_cache = {"conv": conv_f, "state": state_f}
 
     y = y.reshape(bsz, s, di).astype(x.dtype)
     y = y * jax.nn.silu(z)

@@ -181,6 +181,7 @@ def _slot_apply(
     token_valid=None,
     block_tables=None,
     paged_kernel=False,
+    spec_states=False,
 ):
     h = layers.rmsnorm_apply(p["norm1"], x, cfg.norm_eps)
     new_cache = None
@@ -200,7 +201,8 @@ def _slot_apply(
         )
     else:
         out, new_cache = ssm.ssm_apply(
-            p["ssm"], h, cfg, policy, cache=cache, token_valid=token_valid
+            p["ssm"], h, cfg, policy, cache=cache, token_valid=token_valid,
+            spec_states=spec_states,
         )
     x = x + out
     aux = jnp.zeros((), jnp.float32)
@@ -272,6 +274,7 @@ def stack_apply(
     token_valid=None,
     block_tables=None,
     paged_kernel=False,
+    spec_states=False,
 ):
     """Run the full stack. Returns (x, new_caches, total_aux).
 
@@ -279,6 +282,11 @@ def stack_apply(
     resolved :class:`SitePolicies` table over :func:`stack_sites` names;
     the table is scoped per layer here. Depth-varying tables require
     ``scan_layers=False`` (see :func:`_check_scan_uniform`).
+
+    ``spec_states=True`` (decode only) makes SSM cache leaves come back
+    with a per-position axis (see :func:`repro.models.ssm.ssm_apply`) so
+    a speculative verifier can commit any accepted prefix; KV leaves are
+    position-addressed already and return unchanged.
     """
     slots = period_pattern(cfg)
     plen = len(slots)
@@ -303,6 +311,7 @@ def stack_apply(
                 token_valid=token_valid,
                 block_tables=block_tables,
                 paged_kernel=paged_kernel,
+                spec_states=spec_states,
             )
             aux = aux + a
             new_slot_caches.append(nc if decode else None)

@@ -16,13 +16,30 @@ Layout::
 Request lifecycle (the engine owns every transition)::
 
   WAITING --admit--> PREFILL --last context token--> DECODE --max_new--> FINISHED
-  (arrival queue,    (chunked, up to               (1 tok/step)        (slot and
-   slot + pages       prefill_chunk/step)             |                 pages freed,
-   available)                ^                        |                 zeroed)
+  (arrival queue,    (chunked, up to               (1 tok/step, or a    (slot and
+   slot + pages       prefill_chunk/step)           1+k verify chunk     pages freed,
+   available)                ^                      when spec_k > 0)     zeroed)
+                             |                        |
                              +------- preempt --------+
                               (paged engine, pool exhausted: pages freed
                                + zeroed; cache recomputed on re-admission,
-                               or swap-staged on the host and restored)
+                               or swap-staged on the host and restored;
+                               drafter state is dropped either way and
+                               rebuilt by catch-up on resume)
+
+Speculative decoding (``ServeConfig.spec_k > 0``): a drafter — its own
+per-slot cache rows; ``draft_cfg``/``draft_params`` on the engine, the
+target itself by default — proposes up to k tokens per decode slot, and
+the target verifies the ``1 + k`` chunk in one pass exactly as chunked
+prefill (per-position logits). Acceptance is exact-match at each
+position's fold, so the emitted stream is bit-identical to ``spec_k=0``
+for greedy and sampled requests alike — same tokens, fewer steps.
+Rejected positions cost nothing to undo: KV writes beyond the committed
+position are causally fenced, SSM state is rolled back by per-position
+selection, and (paged) pages holding only rejected tokens are trimmed
+back to the pool. Per-request opt-out via ``Request.no_spec``;
+acceptance telemetry in ``engine.stats()``. See
+``docs/serving.md`` for the full design note.
 
 Sampling (per-request ``SamplingParams`` on ``Request.sampling``)::
 

@@ -331,6 +331,27 @@ class PagedCacheManager:
         self.n_table_blocks[slot] = need
         return True
 
+    def trim(self, slot: int, n_tokens: int) -> None:
+        """Shrink ``slot``'s block table to cover only ``n_tokens`` tokens.
+
+        The speculative-rollback path: a verify step allocates pages for
+        the full ``k+1``-wide chunk up front (:meth:`ensure`), but only
+        the accepted prefix is committed — pages past
+        ``blocks_for(n_tokens)`` hold nothing but rejected draft writes,
+        so they are released back to the pool and zeroed eagerly (same
+        invariant as :meth:`free`: a released page can be re-allocated
+        within the same tick, and it currently holds garbage KV rows).
+        A no-op when the committed length still needs every page."""
+        keep = self.blocks_for(n_tokens)
+        have = int(self.n_table_blocks[slot])
+        if keep >= have:
+            return
+        pages = self.block_tables[slot, keep:have].tolist()
+        self.allocator.free(pages)
+        self.block_tables[slot, keep:have] = 0
+        self.n_table_blocks[slot] = keep
+        self._zero(slots=[], pages=pages)
+
     def free(self, slot: int) -> None:
         """Release ``slot`` and its pages; zero both eagerly.
 

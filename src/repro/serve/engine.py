@@ -35,6 +35,16 @@ One engine iteration (:meth:`ContinuousBatchingEngine.step`):
    :class:`TokenEvent` ``(rid, token, is_last)``; :meth:`run` forwards
    them to an ``on_token`` callback and :meth:`stream` yields them.
 
+With ``ServeConfig.spec_k > 0`` the engine adds **speculative
+decoding**: before the target step, a small drafter (own per-slot
+cache rows, state advisory — dropped on preemption, re-prefilled on
+resume) proposes up to ``k`` tokens per decoding slot; the target
+verifies the chunk in one ``k+1``-wide step (the spec variant of
+``make_slot_step``) with per-position folds, emits the exactly-matching
+draft prefix plus its own next token, and rolls ``pos`` (and, paged,
+the tail pages) back past the first mismatch. Output is bit-identical
+to ``spec_k=0`` — same tokens at the same folds, fewer target steps.
+
 Requests therefore join and leave the batch mid-flight: throughput is
 bounded by slot capacity — and with the paged cache by *actual* cache
 use rather than worst-case sequence length. Greedy outputs are
@@ -87,6 +97,14 @@ class ContinuousBatchingEngine:
       mesh: optional data×model mesh; the cache is placed with the
         production ``cache_shardings`` rules. Callers run the engine
         inside ``jax.set_mesh(mesh)``.
+      draft_cfg / draft_params: the drafter for speculative decoding
+        (``ServeConfig.spec_k > 0``) — a same-family model, typically a
+        reduced-depth config. Both default to the target model
+        (self-drafting: every proposal is accepted, the degenerate
+        sanity case). The drafter keeps its own contiguous per-slot
+        cache rows; its state is **advisory** — dropped on preemption
+        and re-prefilled from the request's token history on resume —
+        so it never affects correctness, only the acceptance rate.
     """
 
     def __init__(
@@ -98,6 +116,8 @@ class ContinuousBatchingEngine:
         cache_dtype=jnp.float32,
         mesh=None,
         seq_shard: bool = False,
+        draft_cfg: Optional[ModelConfig] = None,
+        draft_params=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -115,10 +135,35 @@ class ContinuousBatchingEngine:
                 dtype=cache_dtype, mesh=mesh, seq_shard=seq_shard,
             )
         self.scheduler = Scheduler(serve_cfg)
+        self._spec = serve_cfg.spec_k > 0
         self._step_fn = jax.jit(
-            steps_lib.make_slot_step(cfg, paged_kernel=serve_cfg.attn_kernel)
+            steps_lib.make_slot_step(
+                cfg, paged_kernel=serve_cfg.attn_kernel, spec=self._spec
+            )
         )
+        # --- speculative drafter plane (spec_k > 0) ---
+        # Its own per-slot cache rows, always contiguous (the drafter is
+        # cheap and advisory — paging it would buy nothing); slot ids
+        # mirror the target's. The rows are sized past max_seq because
+        # proposal steps write up to spec_k draft tokens beyond the
+        # committed history before the snapshot is rolled back.
+        self._draft = None
+        if self._spec:
+            self.draft_cfg = draft_cfg or cfg
+            self.draft_params = draft_params if draft_params is not None else params
+            self._draft = SlotCacheManager(
+                self.draft_cfg, serve_cfg.max_slots,
+                serve_cfg.max_seq + serve_cfg.spec_k,
+                dtype=cache_dtype, mesh=mesh,
+            )
+            self._draft_step_fn = jax.jit(
+                steps_lib.make_slot_step(self.draft_cfg)
+            )
+            # committed tokens (prompt + generated prefix) the drafter
+            # has consumed per slot; 0 forces a full catch-up re-prefill
+            self._draft_sync = np.zeros((serve_cfg.max_slots,), np.int64)
         self.waiting: List[rq.Request] = []
+        self._known_rids = set()
         self.by_slot: Dict[int, rq.Request] = {}
         self.finished: Dict[int, rq.Request] = {}
         self.clock = 0
@@ -134,11 +179,16 @@ class ContinuousBatchingEngine:
         self.recompute_preemptions = 0
         self.swapped_bytes = 0
         self.peak_concurrency = 0
+        self.spec_proposed = 0  # draft tokens offered for verification
+        self.spec_accepted = 0  # draft tokens the target confirmed
+        self.draft_steps = 0  # drafter model invocations
         self.padded_tokens = 0  # B × width summed over compute steps
         self.step_times: List[float] = []
         self._occupancy_sum = 0
         self.enc_out = None
         self._encode = None
+        self._draft_enc_out = None
+        self._draft_encode = None
         if cfg.family == "encdec":
             self.enc_out = jnp.zeros(
                 (serve_cfg.max_slots, cfg.enc_seq, cfg.d_model),
@@ -147,6 +197,17 @@ class ContinuousBatchingEngine:
             self._encode = jax.jit(
                 lambda p, f: lm.encode(cfg, p, f.astype(jnp.dtype(cfg.dtype)))
             )
+            if self._spec:
+                dcfg = self.draft_cfg
+                self._draft_enc_out = jnp.zeros(
+                    (serve_cfg.max_slots, dcfg.enc_seq, dcfg.d_model),
+                    jnp.dtype(dcfg.dtype),
+                )
+                self._draft_encode = jax.jit(
+                    lambda p, f: lm.encode(
+                        dcfg, p, f.astype(jnp.dtype(dcfg.dtype))
+                    )
+                )
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -156,12 +217,9 @@ class ContinuousBatchingEngine:
         """Queue a request. Raises if it can never fit the cache, or if
         its rid is already known (waiting, running or finished) — a
         duplicate would silently overwrite the first request's output in
-        :attr:`finished`."""
-        if (
-            req.rid in self.finished
-            or any(r.rid == req.rid for r in self.waiting)
-            or any(r.rid == req.rid for r in self.by_slot.values())
-        ):
+        :attr:`finished`. Known rids live in a set, so bulk submission
+        stays O(n) instead of re-scanning every queue per call."""
+        if req.rid in self._known_rids:
             raise ValueError(
                 f"request {req.rid}: duplicate rid — already "
                 "waiting, running or finished in this engine"
@@ -181,6 +239,7 @@ class ContinuousBatchingEngine:
                 )
         if self.cfg.family == "encdec" and req.frames is None:
             raise ValueError(f"request {req.rid}: encdec family needs frames")
+        self._known_rids.add(req.rid)
         req.state = rq.WAITING
         self.waiting.append(req)
         self.waiting.sort(key=lambda r: (r.arrival, r.rid))
@@ -208,7 +267,20 @@ class ContinuousBatchingEngine:
             if self._encode is not None:
                 enc = self._encode(self.params, jnp.asarray(req.frames)[None])
                 self.enc_out = self.enc_out.at[slot].set(enc[0])
+            if self._draft_encode is not None:
+                denc = self._draft_encode(
+                    self.draft_params, jnp.asarray(req.frames)[None]
+                )
+                self._draft_enc_out = self._draft_enc_out.at[slot].set(denc[0])
         self.slots.reset(new_slots)  # clear the previous occupants' state
+        if self._draft is not None:
+            # drafter state is advisory: a new occupant (fresh request,
+            # or one returning from swap/recompute preemption) starts
+            # from a zeroed drafter row and a full catch-up re-prefill
+            self._draft.reset(new_slots)
+            for slot in new_slots:
+                self._draft.pos[slot] = 0
+                self._draft_sync[slot] = 0
         for req in swapped_in:
             # restore the staged cache state (after the reset above);
             # admission already reserved the page count, so a failed
@@ -284,6 +356,131 @@ class ContinuousBatchingEngine:
         return plan
 
     # ------------------------------------------------------------------
+    # speculative drafting
+    # ------------------------------------------------------------------
+
+    def _run_draft(self, tokens: np.ndarray, count: np.ndarray) -> np.ndarray:
+        """One drafter step over per-slot chunks; returns emitted tokens.
+
+        The drafter samples with each request's own controls and PRNG
+        lane at the same folds the target would use — a draft is a bet
+        on the *exact* token the target will emit at that position, so
+        for self-drafting (draft = target) every bet wins.
+        """
+        b = self.serve_cfg.max_slots
+        temps = np.zeros((b,), np.float32)
+        top_ks = np.zeros((b,), np.int32)
+        top_ps = np.ones((b,), np.float32)
+        rng = np.zeros((b, 2), np.uint32)
+        for slot, req in self.by_slot.items():
+            sp = req.sampling
+            temps[slot] = sp.temperature
+            top_ks[slot] = sp.top_k
+            top_ps[slot] = sp.top_p
+            rng[slot] = sp.key_data()
+        state = {
+            "tokens": jnp.asarray(tokens),
+            "count": jnp.asarray(count),
+            "pos": jnp.asarray(self._draft.pos),
+            "cache": self._draft.cache,
+            "temps": jnp.asarray(temps),
+            "top_ks": jnp.asarray(top_ks),
+            "top_ps": jnp.asarray(top_ps),
+            "rng": jnp.asarray(rng),
+        }
+        if self._draft_enc_out is not None:
+            state["enc_out"] = self._draft_enc_out
+        nxt, new_state = self._draft_step_fn(self.draft_params, state)
+        self._draft.cache = new_state["cache"]
+        self._draft.pos = self._draft.pos + count
+        self.draft_steps += 1
+        return np.asarray(nxt)
+
+    def _draft_propose(self, plan: Dict[int, int]) -> Dict[int, List[int]]:
+        """Draft ``n-1`` proposal tokens for each speculative decode slot.
+
+        The drafter-never-commits-speculative-state protocol, per tick:
+
+        1. **catch-up** — feed each slot the committed tokens (prompt +
+           generated) the drafter hasn't consumed yet, in prefill-width
+           chunks. In steady state that is the previous tick's accepted
+           tokens (≤ spec_k + 1); after admission or any preemption it
+           is the full history (``_draft_sync`` was reset — drafter
+           state is advisory and is simply re-prefilled). The step that
+           consumes a slot's last committed token emits its first
+           proposal ``d1``. These cache writes are committed state and
+           are kept.
+        2. **snapshot** — the drafter cache/pos are captured (free:
+           JAX arrays are immutable, a snapshot is a reference).
+        3. **propose** — ``k-1`` width-1 steps, each feeding the
+           previous proposal, yield ``d2..dk``; slots wanting fewer
+           proposals freeze (count 0).
+        4. **restore** — the snapshot is put back: proposal writes are
+           speculative and must not contaminate the committed drafter
+           state (next tick's catch-up re-feeds whatever the target
+           actually accepted).
+        """
+        spec_slots = [
+            s for s, n in plan.items()
+            if n > 1 and self.by_slot[s].remaining_prompt == 0
+        ]
+        if not spec_slots:
+            return {}
+        b = self.serve_cfg.max_slots
+        chunk = self.serve_cfg.prefill_chunk
+        hist = {
+            s: np.concatenate(
+                [
+                    self.by_slot[s].prompt,
+                    np.asarray(self.by_slot[s].generated, np.int32),
+                ]
+            )
+            for s in spec_slots
+        }
+        pending = {s: hist[s][int(self._draft_sync[s]):] for s in spec_slots}
+        # A slot with nothing pending has no fresh logits to draft from.
+        # The engine loop never produces one (every verified tick leaves
+        # >= 1 newly committed token unseen by the drafter), but demote
+        # it to plain decode rather than propose from stale state.
+        for s in [s for s in spec_slots if len(pending[s]) == 0]:
+            plan[s] = 1
+            spec_slots.remove(s)
+            pending.pop(s)
+        if not spec_slots:
+            return {}
+        proposals: Dict[int, List[int]] = {s: [] for s in spec_slots}
+        while any(len(p) for p in pending.values()):
+            tokens = np.zeros((b, chunk), np.int32)
+            count = np.zeros((b,), np.int32)
+            for s in spec_slots:
+                seg = pending[s][:chunk]
+                tokens[s, : len(seg)] = seg
+                count[s] = len(seg)
+            nxt = self._run_draft(tokens, count)
+            for s in spec_slots:
+                pending[s] = pending[s][int(count[s]):]
+                if count[s] and not len(pending[s]) and not proposals[s]:
+                    proposals[s].append(int(nxt[s]))
+        for s in spec_slots:
+            self._draft_sync[s] = len(hist[s])
+        snap_cache, snap_pos = self._draft.cache, self._draft.pos.copy()
+        for _ in range(max(plan[s] - 1 for s in spec_slots) - 1):
+            live = [s for s in spec_slots if len(proposals[s]) < plan[s] - 1]
+            if not live:
+                break
+            tokens = np.zeros((b, 1), np.int32)
+            count = np.zeros((b,), np.int32)
+            for s in live:
+                tokens[s, 0] = proposals[s][-1]
+                count[s] = 1
+            nxt = self._run_draft(tokens, count)
+            for s in live:
+                proposals[s].append(int(nxt[s]))
+        self._draft.cache = snap_cache
+        self._draft.pos = snap_pos
+        return proposals
+
+    # ------------------------------------------------------------------
     # one engine iteration
     # ------------------------------------------------------------------
 
@@ -308,11 +505,13 @@ class ContinuousBatchingEngine:
             self.clock += 1
             self.idle_steps += 1
             return []
+        proposals = self._draft_propose(plan) if self._spec else {}
 
         b = self.serve_cfg.max_slots
         width = self._pick_width(plan)
         tokens = np.zeros((b, width), np.int32)
         count = np.zeros((b,), np.int32)
+        is_spec = np.zeros((b,), bool)
         temps = np.zeros((b,), np.float32)
         top_ks = np.zeros((b,), np.int32)
         top_ps = np.ones((b,), np.float32)
@@ -326,8 +525,14 @@ class ContinuousBatchingEngine:
                 count[slot] = len(seg)
                 n_prefill += len(seg)
             else:
+                # decode: the last committed token, plus — speculating —
+                # the drafter's proposals, verified as one chunk
+                prop = proposals.get(slot, [])
                 tokens[slot, 0] = req.generated[-1]
-                count[slot] = 1
+                if prop:
+                    tokens[slot, 1 : 1 + len(prop)] = prop
+                    is_spec[slot] = True
+                count[slot] = 1 + len(prop)
             sp = req.sampling
             temps[slot] = sp.temperature
             top_ks[slot] = sp.top_k
@@ -346,6 +551,8 @@ class ContinuousBatchingEngine:
             "top_ps": jnp.asarray(top_ps),
             "rng": jnp.asarray(rng),
         }
+        if self._spec:
+            state["is_spec"] = jnp.asarray(is_spec)
         if self.serve_cfg.paged:
             # host table -> device, replicated under a mesh (every pool
             # shard needs the full logical->physical map)
@@ -357,17 +564,30 @@ class ContinuousBatchingEngine:
         if self.enc_out is not None:
             state["enc_out"] = self.enc_out
         t0 = time.perf_counter()
-        nxt, new_state = self._step_fn(self.params, state)
-        nxt = np.asarray(nxt)
+        if self._spec:
+            (tok, keep), new_state = self._step_fn(self.params, state)
+            tok, keep = np.asarray(tok), np.asarray(keep)
+            consumed = keep
+        else:
+            nxt, new_state = self._step_fn(self.params, state)
+            nxt = np.asarray(nxt)
+            consumed = count
         dt = time.perf_counter() - t0
         self.slots.cache = new_state["cache"]
-        self.slots.pos = self.slots.pos + count
+        self.slots.pos = self.slots.pos + consumed
+        if self._spec and self.serve_cfg.paged:
+            # page rollback: pages ensured for the full verify chunk but
+            # reaching past the committed position hold only rejected
+            # draft writes — release (and zero) them
+            for slot in plan:
+                if is_spec[slot] and consumed[slot] < count[slot]:
+                    self.slots.trim(slot, int(self.slots.pos[slot]))
 
         events: List[TokenEvent] = []
         done_slots = []
         for slot, n in sorted(plan.items()):
             req = self.by_slot[slot]
-            emitted = None
+            emitted: List[int] = []
             if req.state == rq.PREFILL:
                 req.prefilled += int(count[slot])
                 if req.remaining_prompt == 0:
@@ -379,11 +599,23 @@ class ContinuousBatchingEngine:
                     # re-predict the already-known generated[-1] — don't
                     # emit it twice.
                     if not req.generated:
-                        emitted = int(nxt[slot])
+                        emitted = [
+                            int(tok[slot, count[slot] - 1])
+                            if self._spec
+                            else int(nxt[slot])
+                        ]
+            elif self._spec:
+                # accepted drafts + the target's token past them —
+                # keep[slot] tokens, bit-identical to keep[slot]
+                # non-speculative decode steps (same folds)
+                emitted = [int(t) for t in tok[slot, : keep[slot]]]
+                if is_spec[slot]:
+                    self.spec_proposed += int(count[slot]) - 1
+                    self.spec_accepted += int(keep[slot]) - 1
             else:
-                emitted = int(nxt[slot])
-            if emitted is not None:
-                req.generated.append(emitted)
+                emitted = [int(nxt[slot])]
+            for e in emitted:
+                req.generated.append(e)
                 req.token_steps.append(self.clock)
                 req.token_latencies.append(dt)
                 if req.done:
@@ -391,7 +623,7 @@ class ContinuousBatchingEngine:
                     req.finish_step = self.clock
                     self.finished[req.rid] = req
                     done_slots.append(slot)
-                events.append(TokenEvent(req.rid, emitted, req.done))
+                events.append(TokenEvent(req.rid, e, req.done))
         for slot in done_slots:
             del self.by_slot[slot]
             self.slots.free(slot)
@@ -399,7 +631,7 @@ class ContinuousBatchingEngine:
         self.compute_steps += 1
         self.step_times.append(dt)
         self.padded_tokens += b * width
-        n_total = int(count.sum())
+        n_total = int(consumed.sum())
         self.prefill_tokens += n_prefill
         self.decode_tokens += n_total - n_prefill
         # mixed steps: apportion wall time by token share so the
@@ -457,7 +689,10 @@ class ContinuousBatchingEngine:
         latency percentiles, slot economics (``slot_utilization``,
         ``peak_concurrency``), step-padding efficiency
         (``padded_tokens``, ``padding_efficiency`` — the decode-width
-        ladder's metric) and paged-cache health (``preemptions``).
+        ladder's metric), paged-cache health (``preemptions``) and
+        speculative decoding (``spec_proposed`` / ``spec_accepted`` /
+        ``acceptance_rate`` — accepted over proposed draft tokens — and
+        ``draft_steps``, the drafter invocations those savings cost).
         """
         total_tokens = self.prefill_tokens + self.decode_tokens
         steps = max(self.compute_steps, 1)
@@ -493,6 +728,10 @@ class ContinuousBatchingEngine:
             "swapped_bytes": self.swapped_bytes,
             "padded_tokens": self.padded_tokens,
             "padding_efficiency": total_tokens / max(self.padded_tokens, 1),
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
+            "acceptance_rate": self.spec_accepted / max(self.spec_proposed, 1),
+            "draft_steps": self.draft_steps,
             "wall_s": wall,
             "prefill_s": self.prefill_s,
             "decode_s": self.decode_s,

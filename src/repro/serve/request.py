@@ -44,6 +44,8 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.launch.steps import TOP_K_CAP
+
 WAITING = "waiting"
 PREFILL = "prefill"
 DECODE = "decode"
@@ -57,7 +59,10 @@ class SamplingParams:
     Attributes:
       temperature: 0 (default) is greedy argmax decode; > 0 divides the
         logits before sampling.
-      top_k: keep only the k highest logits before sampling (0 = off).
+      top_k: keep only the k highest logits before sampling (0 = off;
+        bounded by ``repro.launch.steps.TOP_K_CAP`` — the jitted step
+        computes the top ``TOP_K_CAP`` logits once instead of sorting
+        the whole vocabulary, so k must fit under the static cap).
       top_p: keep the smallest prefix of the sorted distribution with
         cumulative probability >= top_p (1.0 = off). Applied after
         top-k, matching the usual serving convention.
@@ -76,6 +81,11 @@ class SamplingParams:
             raise ValueError(f"temperature must be >= 0, got {self.temperature}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0 (0 = off), got {self.top_k}")
+        if self.top_k > TOP_K_CAP:
+            raise ValueError(
+                f"top_k must be <= {TOP_K_CAP} (the static lax.top_k bound "
+                f"in the jitted step), got {self.top_k}"
+            )
         if not 0.0 < self.top_p <= 1.0:
             raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
 
@@ -110,6 +120,10 @@ class Request:
       frames: optional ``[enc_seq, d_model]`` encoder input (encdec
         families); encoded once at admission.
       sampling: per-request :class:`SamplingParams` (greedy default).
+      no_spec: opt this request out of speculative decoding — it decodes
+        one token per step even when the engine runs with
+        ``ServeConfig.spec_k > 0`` (output is identical either way;
+        the opt-out only trades steps for verify width).
     """
 
     rid: int
@@ -118,6 +132,7 @@ class Request:
     arrival: int = 0
     frames: Optional[np.ndarray] = None
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    no_spec: bool = False
 
     # --- engine-owned lifecycle state ---
     state: str = WAITING

@@ -72,6 +72,16 @@ class ServeConfig:
         ``"swap"`` stages the victim's KV pages + SSM/conv rows on the
         host and restores them — correct for any request; ``"auto"``
         (default) swaps sampled requests and recomputes greedy ones.
+      spec_k: draft tokens proposed per decode slot per step
+        (speculative decoding; 0 = off). A decoding slot is planned a
+        ``1 + spec_k``-token chunk (the last committed token plus k
+        draft proposals) which the target model verifies in one step;
+        the accepted prefix plus one target token is emitted. The
+        verify chunk must fit a compiled width, so ``spec_k + 1 <=
+        prefill_chunk`` (add ``spec_k + 1`` to ``decode_widths`` to
+        avoid padding up to the next ladder width). Output is
+        bit-identical to ``spec_k=0`` — same tokens at the same folds,
+        fewer steps.
     """
 
     max_slots: int
@@ -83,6 +93,7 @@ class ServeConfig:
     decode_widths: Tuple[int, ...] = (1, 4)
     attn_kernel: bool = False
     preempt: str = "auto"
+    spec_k: int = 0
 
     def __post_init__(self):
         if self.max_slots < 1:
@@ -121,6 +132,14 @@ class ServeConfig:
             raise ValueError(
                 f"unknown preemption policy {self.preempt!r}: expected "
                 "'auto', 'swap' or 'recompute'"
+            )
+        if self.spec_k < 0:
+            raise ValueError("spec_k must be >= 0 (0 = speculation off)")
+        if self.spec_k and self.spec_k + 1 > self.prefill_chunk:
+            raise ValueError(
+                f"spec_k={self.spec_k} needs a {self.spec_k + 1}-wide verify "
+                f"chunk but prefill_chunk={self.prefill_chunk} is the widest "
+                "compiled width — lower spec_k or raise prefill_chunk"
             )
 
     @property
@@ -198,11 +217,19 @@ class Scheduler:
     def plan(self, by_slot: Dict[int, Request]) -> Dict[int, int]:
         """Token counts per slot for one step, under the budget.
 
-        Decode slots first (1 token each, round-robin so a budget
-        smaller than the decode count rotates fairly instead of
-        starving high slot ids), then prefill chunks by arrival order.
-        Slots that don't fit this step's budget are left out (count 0)
-        and move to the front of the rotation next tick.
+        Decode slots first (round-robin so a budget smaller than the
+        decode count rotates fairly instead of starving high slot ids),
+        then prefill chunks by arrival order. Slots that don't fit this
+        step's budget are left out (count 0) and move to the front of
+        the rotation next tick.
+
+        With ``spec_k > 0`` a decoding slot is allotted ``1 + spec_k``
+        tokens (last committed token + k draft proposals), clamped to
+        the request's remaining generation budget (proposing past
+        ``max_new_tokens`` is wasted verify width), its per-request
+        opt-out (``no_spec`` slots stay at 1), and the step budget
+        (a tight budget truncates the chunk rather than starving the
+        slot).
         """
         budget = self.cfg.budget
         plan: Dict[int, int] = {}
@@ -218,8 +245,13 @@ class Scheduler:
         for s in decoding:
             if budget < 1:
                 break
-            plan[s] = 1
-            budget -= 1
+            req = by_slot[s]
+            n = 1
+            if self.cfg.spec_k and not req.no_spec:
+                remaining = req.max_new_tokens - len(req.generated)
+                n = 1 + max(0, min(self.cfg.spec_k, remaining - 1))
+            plan[s] = min(n, budget)
+            budget -= plan[s]
         for s in prefilling:
             if budget < 1:
                 break

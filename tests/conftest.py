@@ -16,6 +16,15 @@ _SLOW = {
     "test_train_cli_crash_resume",
 }
 
+# The speculative parity grids are 16 cells at ~1 CPU-minute each (the
+# mismatched drafter rejects nearly everything, so every tick runs the
+# drafter AND the rollback path). The decoder cells stay in the fast
+# lane as the representative; the other families ride the full lane.
+_SLOW_GRID_PREFIXES = (
+    "test_speculative_matches_lockstep_greedy[",
+    "test_speculative_matches_lockstep_sampled[",
+)
+
 
 def pytest_configure(config):
     config.addinivalue_line(
@@ -26,4 +35,9 @@ def pytest_configure(config):
 def pytest_collection_modifyitems(config, items):
     for item in items:
         if item.name in _SLOW:
+            item.add_marker(pytest.mark.slow)
+        elif (
+            item.name.startswith(_SLOW_GRID_PREFIXES)
+            and "decoder" not in item.name
+        ):
             item.add_marker(pytest.mark.slow)

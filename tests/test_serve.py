@@ -792,3 +792,246 @@ def test_submit_rejects_duplicate_rid():
         eng.submit(mk(7))  # finished rids stay reserved
     eng.submit(mk(8))  # fresh rid is fine
     assert len(eng.run()) == 2
+
+
+# ----------------------------------------------------------------------
+# speculative decoding: parity, preemption, rollback, drafter contract
+# ----------------------------------------------------------------------
+
+# the rollback-heavy grid point: a drafter with the SAME architecture but
+# DIFFERENT weights proposes tokens the target mostly rejects, exercising
+# per-step acceptance, KV fencing past the accepted prefix, SSM state
+# selection and (paged) page trim on nearly every tick
+SPEC_ENGINE_KW = {
+    "contiguous": {},
+    "paged": dict(block_size=4, n_blocks=12),
+}
+
+
+def _run_spec_engine(cfg, params, reqs, *, slots=2, chunk=4, spec_k=3,
+                     draft_cfg=None, draft_params=None, **kw):
+    eng = ContinuousBatchingEngine(
+        cfg, params,
+        ServeConfig(max_slots=slots, max_seq=MAX_SEQ, prefill_chunk=chunk,
+                    spec_k=spec_k, **kw),
+        draft_cfg=draft_cfg, draft_params=draft_params,
+    )
+    for r in reqs:
+        eng.submit(r)
+    out = eng.run()
+    return eng, out
+
+
+@pytest.mark.parametrize("engine", sorted(SPEC_ENGINE_KW))
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_speculative_matches_lockstep_greedy(family, engine):
+    """Speculative parity grid, greedy: the spec_k=3 engine with a
+    mismatched drafter (same config, different weights — near-zero
+    acceptance, so rollback runs constantly) must emit token-for-token
+    what the per-request lock-step oracle emits."""
+    cfg, params = _setup(FAMILY_ARCHS[family])
+    draft_params = lm.init_params(cfg, jax.random.PRNGKey(99))
+    reqs = poisson_workload(
+        cfg, n_requests=6, arrival_rate=0.7, prompt_len=(3, 7),
+        gen_len=(3, 9), seed=42,
+    )
+    eng, out = _run_spec_engine(
+        cfg, params, reqs, draft_params=draft_params,
+        **SPEC_ENGINE_KW[engine],
+    )
+    assert eng.spec_proposed > 0  # speculation actually engaged
+    for r in reqs:
+        ref = generate_reference(
+            cfg, params, r.prompt, r.max_new_tokens, max_seq=MAX_SEQ,
+            frames=r.frames,
+        )
+        np.testing.assert_array_equal(
+            out[r.rid], ref, err_msg=f"{family}/{engine} rid={r.rid}"
+        )
+
+
+@pytest.mark.parametrize("engine", sorted(SPEC_ENGINE_KW))
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCHS))
+def test_speculative_matches_lockstep_sampled(family, engine):
+    """Speculative parity grid, sampled: per-request temperature/top-k/
+    top-p streams are a pure function of (seed, position), so the
+    accepted-prefix emission must reproduce the lock-step oracle exactly
+    — same folds, fewer steps. Mismatched drafter keeps rollback hot."""
+    cfg, params = _setup(FAMILY_ARCHS[family])
+    draft_params = lm.init_params(cfg, jax.random.PRNGKey(99))
+    reqs = poisson_workload(
+        cfg, n_requests=5, arrival_rate=0.8, prompt_len=(3, 7),
+        gen_len=(3, 8), seed=13, temperature=0.8, top_k=12, top_p=0.9,
+    )
+    eng, out = _run_spec_engine(
+        cfg, params, reqs, draft_params=draft_params,
+        **SPEC_ENGINE_KW[engine],
+    )
+    assert eng.spec_proposed > 0
+    for r in reqs:
+        ref = generate_reference(
+            cfg, params, r.prompt, r.max_new_tokens, max_seq=MAX_SEQ,
+            frames=r.frames, sampling=r.sampling,
+        )
+        np.testing.assert_array_equal(
+            out[r.rid], ref, err_msg=f"{family}/{engine} rid={r.rid}"
+        )
+
+
+def test_speculative_self_draft_full_acceptance():
+    """Drafter == target: every proposal must be accepted (the drafter
+    samples the same logits at the same folds), so acceptance is exactly
+    1.0 and the engine takes strictly fewer verify steps than spec_k=0
+    on the identical workload — while emitting identical tokens."""
+    cfg, params = _setup(FAMILY_ARCHS["decoder"])
+
+    def wl():
+        return poisson_workload(
+            cfg, n_requests=5, arrival_rate=0.7, prompt_len=(3, 6),
+            gen_len=(6, 12), seed=11,
+        )
+
+    spec_eng, spec_out = _run_spec_engine(cfg, params, wl())  # self-draft
+    base_eng, base_out = _run_engine(cfg, params, wl())
+    for rid in base_out:
+        np.testing.assert_array_equal(spec_out[rid], base_out[rid])
+    st = spec_eng.stats()
+    assert st["spec_proposed"] > 0
+    assert st["acceptance_rate"] == 1.0
+    assert st["draft_steps"] > 0
+    assert st["compute_steps"] < base_eng.stats()["compute_steps"]
+
+
+def test_speculative_sampled_self_draft_full_acceptance():
+    """Self-draft under sampling: the drafter folds the request's own
+    PRNG lane at the same absolute positions the target will fold, so
+    acceptance stays exactly 1.0 even for stochastic streams."""
+    cfg, params = _setup(FAMILY_ARCHS["decoder"])
+    reqs = poisson_workload(
+        cfg, n_requests=4, arrival_rate=0.9, prompt_len=(3, 6),
+        gen_len=(5, 10), seed=23, temperature=0.8, top_k=16, top_p=0.9,
+    )
+    eng, out = _run_spec_engine(cfg, params, reqs)
+    st = eng.stats()
+    assert st["spec_proposed"] > 0 and st["acceptance_rate"] == 1.0
+    for r in reqs:
+        ref = generate_reference(
+            cfg, params, r.prompt, r.max_new_tokens, max_seq=MAX_SEQ,
+            sampling=r.sampling,
+        )
+        np.testing.assert_array_equal(out[r.rid], ref, err_msg=f"rid={r.rid}")
+
+
+def test_speculative_swap_preemption_determinism():
+    """Forced swap evictions with speculation on: drafter state is
+    advisory (dropped with the slot, rebuilt by catch-up on resume), so
+    the sampled stream through a pressured pool must stay bit-identical
+    to the pressure-free run of the same workload."""
+    cfg, params = _setup(FAMILY_ARCHS["decoder"])
+    draft_params = lm.init_params(cfg, jax.random.PRNGKey(99))
+
+    def wl():
+        return poisson_workload(
+            cfg, n_requests=6, arrival_rate=2.0, prompt_len=(3, 7),
+            gen_len=(6, 12), seed=5, temperature=0.7, top_k=12,
+        )
+
+    forced_eng, forced_out = _run_spec_engine(
+        cfg, params, wl(), slots=3, draft_params=draft_params,
+        block_size=4, n_blocks=7,
+    )
+    assert forced_eng.swap_preemptions > 0, "pool never pressured — vacuous"
+    free_eng, free_out = _run_spec_engine(
+        cfg, params, wl(), slots=3, draft_params=draft_params,
+        block_size=4, n_blocks=18,
+    )
+    assert free_eng.preemptions == 0
+    for rid in free_out:
+        np.testing.assert_array_equal(
+            forced_out[rid], free_out[rid], err_msg=f"rid={rid}"
+        )
+
+
+def test_speculative_recompute_preemption_parity():
+    """Forced recompute evictions with speculation on: the victim's
+    re-prefilled context and re-synced drafter must land back on the
+    oracle stream (greedy — recompute's contract)."""
+    cfg, params = _setup(FAMILY_ARCHS["decoder"])
+    draft_params = lm.init_params(cfg, jax.random.PRNGKey(99))
+    reqs = poisson_workload(
+        cfg, n_requests=6, arrival_rate=2.0, prompt_len=(3, 7),
+        gen_len=(6, 12), seed=5,
+    )
+    eng, out = _run_spec_engine(
+        cfg, params, reqs, slots=3, draft_params=draft_params,
+        block_size=4, n_blocks=7, preempt="recompute",
+    )
+    assert eng.recompute_preemptions > 0, "pool never pressured — vacuous"
+    for r in reqs:
+        ref = generate_reference(
+            cfg, params, r.prompt, r.max_new_tokens, max_seq=MAX_SEQ,
+        )
+        np.testing.assert_array_equal(out[r.rid], ref, err_msg=f"rid={r.rid}")
+
+
+def test_speculative_width_ladder_and_no_spec_optout():
+    """spec_k+1 added to decode_widths gives verify chunks their own
+    compiled width; a no_spec request rides the same engine one token
+    per step — both must stay on the oracle stream, and the opted-out
+    request must never contribute proposals."""
+    cfg, params = _setup(FAMILY_ARCHS["decoder"])
+    reqs = poisson_workload(
+        cfg, n_requests=4, arrival_rate=1.0, prompt_len=(3, 6),
+        gen_len=(4, 9), seed=31,
+    )
+    reqs[0].no_spec = True
+    eng, out = _run_spec_engine(
+        cfg, params, reqs, spec_k=2, decode_widths=(1, 3),
+    )
+    assert eng.spec_proposed > 0  # the other requests still speculate
+    for r in reqs:
+        ref = generate_reference(
+            cfg, params, r.prompt, r.max_new_tokens, max_seq=MAX_SEQ,
+        )
+        np.testing.assert_array_equal(out[r.rid], ref, err_msg=f"rid={r.rid}")
+
+
+def test_serve_config_rejects_oversized_spec_k():
+    with pytest.raises(ValueError, match="spec_k"):
+        ServeConfig(max_slots=2, max_seq=32, prefill_chunk=4, spec_k=4)
+    with pytest.raises(ValueError, match="spec_k"):
+        ServeConfig(max_slots=2, max_seq=32, spec_k=-1)
+    assert ServeConfig(max_slots=2, max_seq=32, prefill_chunk=4,
+                       spec_k=3).spec_k == 3
+
+
+def test_sampling_params_rejects_top_k_above_cap():
+    """lax.top_k in the jitted step uses a static bound; a request
+    asking for a larger k must be refused at construction, not silently
+    truncated on device."""
+    from repro.launch.steps import TOP_K_CAP
+
+    with pytest.raises(ValueError, match="top_k"):
+        SamplingParams(top_k=TOP_K_CAP + 1)
+    assert SamplingParams(top_k=TOP_K_CAP).top_k == TOP_K_CAP
+
+
+def test_paged_trim_releases_and_zeroes_pages():
+    """Rolling a slot back past rejected draft tokens must return the
+    now-unreferenced pages to the pool zeroed (the zero-on-free
+    invariant the isolation tests rely on)."""
+    cfg, _ = _setup(FAMILY_ARCHS["decoder"])
+    mgr = PagedCacheManager(cfg, 2, 16, block_size=4, n_blocks=6)
+    slot = mgr.alloc()
+    assert mgr.ensure(slot, 11)  # 3 pages
+    dropped = mgr.block_tables[slot, 2]
+    mgr.cache = jax.tree.map(lambda a: jnp.ones_like(a), mgr.cache)
+    mgr.trim(slot, 6)  # keep 2 pages
+    assert int(mgr.n_table_blocks[slot]) == 2
+    assert mgr.n_free_blocks == 4
+    view = mgr.page_view(int(dropped))
+    assert view is not None
+    for leaf in view:
+        assert float(np.abs(leaf).max()) == 0.0
+    mgr.trim(slot, 8)  # keep >= have: no-op
+    assert int(mgr.n_table_blocks[slot]) == 2
