@@ -1,23 +1,42 @@
-"""Checkpointing: msgpack tensor store, async save, restart discovery.
+"""Checkpointing: msgpack tensor store, async save, restart discovery,
+per-host sharded checkpoints with partial-read restore.
 
-Layout: ``<dir>/step_<N>/{manifest.json, shard_<i>.msgpack}``. Tensors
+Layout: ``<dir>/step_<N>/{manifest.json, shard_<r>.msgpack}``. Tensors
 are serialized host-side (numpy + msgpack) with dtype/shape metadata;
 a ``COMMITTED`` marker file makes partially-written checkpoints invisible
-to restart discovery (crash-safe). ``save_async`` snapshots to host
-memory synchronously (cheap) and writes on a daemon thread so the train
-loop never blocks on disk.
+to restart discovery (crash-safe). ``AsyncCheckpointer`` snapshots to
+host memory synchronously (cheap) and writes on a daemon thread so the
+train loop never blocks on disk.
 
-Elastic restore: tensors are loaded host-side and re-placed with
-``jax.device_put(..., sharding)`` for whatever mesh the restarted job
-has — resharding across a different device count is automatic.
+**Per-host sharding.** In a multi-host run each rank writes its own
+``shard_<r>.msgpack`` covering only the array *pieces* it owns — either
+FSDP-style balanced slices (:func:`make_shard_plan`) or the slices its
+devices actually hold under the production partition specs
+(:func:`plan_from_specs`, the addressable-shards addressing). A single
+``manifest.json`` (written by the leader, derived from the same
+deterministic plan every rank computes) records key → piece → shard
+placement plus global dtype/shape; ``COMMITTED`` is written only after
+**every** shard named in the manifest exists, so a writer killed
+mid-save leaves a torn step that restart discovery skips.
+
+**Partial-read restore.** :func:`restore` reads the manifest, loads
+*only the shard files containing pieces of the keys in ``like``*, and
+re-lands each tensor with ``jax.device_put(..., sharding)`` on whatever
+mesh the restarted job has — a reshaped mesh (different host count,
+different axis split) restores bit-exactly because assembly happens in
+index space, not device space. Restoring a subtree touches only the
+shards that cover it; a shard file required by the request but missing
+on disk is a hard, actionable error — never a silently partial tree.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+import zlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -82,25 +101,71 @@ class AsyncCheckpointer:
 
     At most one in-flight save; a new save waits for the previous write
     (bounded memory). ``wait()`` drains before exit/restore.
+
+    **Sharded mode**: construct with ``rank=`` and ``ranks=`` (the
+    active fleet) and each rank's checkpointer writes only its own
+    ``shard_<r>.msgpack``; the leader (lowest active rank) writes the
+    manifest and commits once every peer's shard lands, all on the
+    background thread so a slow peer never blocks the train loop. A
+    commit that times out (a peer died mid-save) leaves the step torn —
+    restart discovery skips it and the fleet falls back to the previous
+    committed step. Reassign ``.ranks`` after a membership change; the
+    next save's plan spans the new fleet.
     """
 
-    def __init__(self, ckpt_dir: str, keep: int = 3):
+    def __init__(
+        self,
+        ckpt_dir: str,
+        keep: int = 3,
+        *,
+        rank: int = 0,
+        ranks: Optional[Sequence[int]] = None,
+        commit_timeout_s: float = 60.0,
+    ):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
+        self.rank = rank
+        self.ranks = list(ranks) if ranks is not None else None
+        self.commit_timeout_s = commit_timeout_s
         self._thread: Optional[threading.Thread] = None
         self.last_path: Optional[str] = None
+        self.last_error: Optional[BaseException] = None
+
+    def _sharded(self) -> bool:
+        return self.ranks is not None and len(self.ranks) > 1
 
     def save(self, step: int, tree: Any):
         items, _ = _flatten(tree)
         host = [(k, np.asarray(jax.device_get(v))) for k, v in items]
         self.wait()
+        ranks = list(self.ranks) if self.ranks is not None else None
         self._thread = threading.Thread(
-            target=self._run, args=(step, host), daemon=True
+            target=self._run, args=(step, host, ranks), daemon=True
         )
         self._thread.start()
 
-    def _run(self, step, host):
-        self.last_path = _write(self.ckpt_dir, step, host, self.keep)
+    def _run(self, step, host, ranks):
+        try:
+            if ranks is not None and len(ranks) > 1:
+                plan = make_shard_plan(host, ranks)
+                self.last_path = write_shard(
+                    self.ckpt_dir, step, host, rank=self.rank, plan=plan
+                )
+                if self.rank == min(ranks):
+                    write_sharded_manifest(
+                        self.ckpt_dir, step, host, plan=plan, ranks=ranks
+                    )
+                    commit_sharded(
+                        self.ckpt_dir,
+                        step,
+                        timeout_s=self.commit_timeout_s,
+                        keep=self.keep,
+                    )
+            else:
+                self.last_path = _write(self.ckpt_dir, step, host, self.keep)
+            self.last_error = None
+        except BaseException as e:  # surfaced via .last_error on wait()
+            self.last_error = e
 
     def wait(self):
         if self._thread is not None:
@@ -127,6 +192,403 @@ def list_steps(ckpt_dir: str) -> List[int]:
 def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = list_steps(ckpt_dir)
     return steps[-1] if steps else None
+
+
+# ----------------------------------------------------------------------
+# per-host shard plans
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Piece:
+    """One rank's slice of one tensor: ``index`` is a per-dim
+    ``(start, stop)`` tuple covering the full rank of the array."""
+
+    shard: int
+    index: Tuple[Tuple[int, int], ...]
+
+    def slices(self) -> Tuple[slice, ...]:
+        return tuple(slice(s, e) for s, e in self.index)
+
+
+Plan = Dict[str, List[Piece]]
+
+
+def _owner(key: str, eligible: Sequence[int]) -> int:
+    """Deterministic owner pick (crc32, NOT the salted builtin hash —
+    every process must compute the identical plan)."""
+    return sorted(eligible)[zlib.crc32(key.encode()) % len(eligible)]
+
+
+def make_shard_plan(items, ranks: Sequence[int]) -> Plan:
+    """FSDP-style balanced ownership: each tensor is sliced along its
+    largest ``len(ranks)``-divisible axis, one contiguous slice per
+    rank; tensors with no divisible axis are owned whole by a
+    deterministic rank (crc32 spread, so small norms/biases balance
+    across shards instead of piling onto rank 0).
+
+    ``items`` is ``[(key, array_or_shapedtype)]`` as produced by the
+    flattener; the plan is a pure function of (keys, shapes, ranks), so
+    every rank derives the same plan independently — no coordination.
+    """
+    ranks = sorted(ranks)
+    n = len(ranks)
+    plan: Plan = {}
+    for key, leaf in items:
+        shape = tuple(int(d) for d in leaf.shape)
+        axis = None
+        if n > 1 and shape:
+            divisible = [i for i, d in enumerate(shape) if d % n == 0 and d > 0]
+            if divisible:
+                axis = max(divisible, key=lambda i: (shape[i], -i))
+        if axis is None:
+            full = tuple((0, d) for d in shape)
+            plan[key] = [Piece(_owner(key, ranks), full)]
+            continue
+        per = shape[axis] // n
+        pieces = []
+        for j, r in enumerate(ranks):
+            idx = tuple(
+                (j * per, (j + 1) * per) if i == axis else (0, d)
+                for i, d in enumerate(shape)
+            )
+            pieces.append(Piece(r, idx))
+        plan[key] = pieces
+    return plan
+
+
+class _DictMesh:
+    """Shape-only stand-in accepted by ``fit_spec`` (no devices)."""
+
+    def __init__(self, shape: Dict[str, int]):
+        self.shape = dict(shape)
+
+
+def plan_from_specs(
+    items,
+    specs,
+    mesh_shape: Dict[str, int],
+    ranks: Sequence[int],
+) -> Plan:
+    """Addressable-shards addressing: the pieces each host's devices own.
+
+    Mirrors ``Array.addressable_shards`` arithmetic without allocating:
+    the mesh is ``mesh_shape`` (ordered axis → size, row-major device
+    enumeration), hosts are ``ranks`` holding equal contiguous device
+    blocks, and each tensor's partition spec (a
+    ``jax.sharding.PartitionSpec``-like per-dim assignment, repaired
+    with ``fit_spec`` against the mesh first) determines which index
+    block each device holds. A block replicated across several hosts is
+    written by exactly ONE deterministic owner (crc32 pick among the
+    holders), so the union of all per-host shards covers every tensor
+    exactly once — no gap, no overlap.
+
+    ``specs`` is a list aligned with ``items`` (one spec per leaf).
+    """
+    from repro.dist.sharding import fit_spec  # local: avoid import cycle
+
+    ranks = sorted(ranks)
+    n_hosts = len(ranks)
+    axis_names = list(mesh_shape)
+    sizes = [int(mesh_shape[a]) for a in axis_names]
+    n_dev = 1
+    for s in sizes:
+        n_dev *= s
+    if n_dev % n_hosts:
+        raise ValueError(
+            f"{n_dev} mesh devices not divisible by {n_hosts} hosts"
+        )
+    per_host = n_dev // n_hosts
+
+    def device_coords(d: int) -> Dict[str, int]:
+        out = {}
+        rem = d
+        for name, size in zip(reversed(axis_names), reversed(sizes)):
+            out[name] = rem % size
+            rem //= size
+        return out
+
+    mesh = _DictMesh(mesh_shape)
+    plan: Plan = {}
+    for (key, leaf), spec in zip(items, specs):
+        shape = tuple(int(d) for d in leaf.shape)
+        spec = fit_spec(spec, shape, mesh)
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        # block → set of hosts whose devices hold it
+        holders: Dict[Tuple[Tuple[int, int], ...], set] = {}
+        for d in range(n_dev):
+            coords = device_coords(d)
+            host = ranks[d // per_host]
+            idx = []
+            for dim, entry in zip(shape, entries):
+                if entry is None:
+                    idx.append((0, dim))
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                nblk, blk = 1, 0
+                for a in axes:
+                    nblk *= mesh_shape[a]
+                    blk = blk * mesh_shape[a] + coords[a]
+                per = dim // nblk
+                idx.append((blk * per, (blk + 1) * per))
+            holders.setdefault(tuple(idx), set()).add(host)
+        plan[key] = [
+            Piece(_owner(f"{key}{idx}", sorted(hosts)), idx)
+            for idx, hosts in sorted(holders.items())
+        ]
+    return plan
+
+
+def validate_plan(plan: Plan, shapes: Dict[str, Sequence[int]]) -> None:
+    """Assert the plan partitions every key: pieces pairwise disjoint
+    and their volumes sum to the full array (⇒ no gap, no overlap)."""
+    for key, shape in shapes.items():
+        pieces = plan.get(key)
+        if not pieces:
+            raise AssertionError(f"plan has no pieces for {key}")
+        total = 1
+        for d in shape:
+            total *= int(d)
+        vol = 0
+        for p in pieces:
+            if len(p.index) != len(shape):
+                raise AssertionError(f"{key}: piece rank mismatch {p}")
+            v = 1
+            for (s, e), d in zip(p.index, shape):
+                if not (0 <= s <= e <= d):
+                    raise AssertionError(f"{key}: piece out of bounds {p}")
+                v *= e - s
+            vol += v
+        for i, a in enumerate(pieces):
+            for b in pieces[i + 1:]:
+                if all(
+                    a.index[k][0] < b.index[k][1] and b.index[k][0] < a.index[k][1]
+                    for k in range(len(shape))
+                ):
+                    raise AssertionError(f"{key}: overlapping pieces {a} / {b}")
+        if vol != total:
+            raise AssertionError(
+                f"{key}: pieces cover {vol} of {total} elements (gap)"
+            )
+
+
+# ----------------------------------------------------------------------
+# sharded save / commit / restore
+# ----------------------------------------------------------------------
+
+
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def _atomic_bytes(path: str, data: bytes) -> None:
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(data)
+    os.replace(tmp, path)
+
+
+def _shard_name(rank: int) -> str:
+    return f"shard_{rank}.msgpack"
+
+
+def write_shard(ckpt_dir: str, step: int, host_items, *, rank: int, plan: Plan) -> str:
+    """Write this rank's pieces (crash-atomic). ``host_items`` must hold
+    host (numpy) arrays. Returns the shard path."""
+    path = _step_dir(ckpt_dir, step)
+    os.makedirs(path, exist_ok=True)
+    payload: Dict[str, List[Dict[str, Any]]] = {}
+    for key, arr in host_items:
+        own = [p for p in plan.get(key, ()) if p.shard == rank]
+        if not own:
+            continue
+        pieces = []
+        for p in own:
+            # np.ascontiguousarray promotes 0-d to shape (1,) (ndmin=1),
+            # which would round-trip scalars as 1-element vectors
+            sub = np.asarray(arr[p.slices()])
+            if sub.ndim:
+                sub = np.ascontiguousarray(sub)
+            pieces.append(
+                dict(_encode(sub), index=[list(se) for se in p.index])
+            )
+        payload[key] = pieces
+    shard_path = os.path.join(path, _shard_name(rank))
+    _atomic_bytes(shard_path, msgpack.packb(payload))
+    return shard_path
+
+
+def write_sharded_manifest(
+    ckpt_dir: str, step: int, host_items, *, plan: Plan, ranks: Sequence[int]
+) -> str:
+    """Leader-side: publish key → piece → shard placement (atomic)."""
+    path = _step_dir(ckpt_dir, step)
+    os.makedirs(path, exist_ok=True)
+    keys = {
+        key: {
+            "dtype": str(arr.dtype),
+            "shape": [int(d) for d in arr.shape],
+            "pieces": [
+                {"shard": p.shard, "index": [list(se) for se in p.index]}
+                for p in plan[key]
+            ],
+        }
+        for key, arr in host_items
+    }
+    manifest = {
+        "step": step,
+        "format": "sharded",
+        "ranks": sorted(ranks),
+        "keys": keys,
+    }
+    mpath = os.path.join(path, "manifest.json")
+    tmp = f"{mpath}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, mpath)
+    return mpath
+
+
+def commit_sharded(
+    ckpt_dir: str,
+    step: int,
+    *,
+    timeout_s: float = 60.0,
+    poll_s: float = 0.02,
+    keep: int = 3,
+) -> str:
+    """Wait until every shard the manifest names exists, then write
+    ``COMMITTED``. A peer that died mid-save makes this time out and
+    the step stays torn (invisible to restart discovery) — that is the
+    crash-atomicity contract, not an error to paper over."""
+    import time as _time
+
+    path = _step_dir(ckpt_dir, step)
+    mpath = os.path.join(path, "manifest.json")
+    deadline = _time.monotonic() + timeout_s
+    while not os.path.exists(mpath):
+        if _time.monotonic() > deadline:
+            raise TimeoutError(f"commit: no manifest at {path}")
+        _time.sleep(poll_s)
+    with open(mpath) as f:
+        manifest = json.load(f)
+    needed = sorted(
+        {p["shard"] for meta in manifest["keys"].values() for p in meta["pieces"]}
+    )
+    while True:
+        missing = [
+            r for r in needed
+            if not os.path.exists(os.path.join(path, _shard_name(r)))
+        ]
+        if not missing:
+            break
+        if _time.monotonic() > deadline:
+            raise TimeoutError(
+                f"commit: step {step} still missing shards from ranks "
+                f"{missing} after {timeout_s}s — leaving the step torn"
+            )
+        _time.sleep(poll_s)
+    with open(os.path.join(path, _COMMIT), "w") as f:
+        f.write("ok")
+    _gc(ckpt_dir, keep)
+    return path
+
+
+def save_sharded(
+    ckpt_dir: str,
+    step: int,
+    tree: Any,
+    *,
+    rank: int,
+    ranks: Sequence[int],
+    plan: Optional[Plan] = None,
+    commit: Optional[bool] = None,
+    commit_timeout_s: float = 60.0,
+    keep: int = 3,
+) -> str:
+    """One rank's synchronous sharded save.
+
+    Every rank calls this with the same ``tree``/``ranks``; each writes
+    only its own pieces. The leader (lowest rank) also writes the
+    manifest and — unless ``commit=False`` — waits for its peers'
+    shards and commits. Returns the shard path.
+    """
+    items, _ = _flatten(tree)
+    host = [(k, np.asarray(jax.device_get(v))) for k, v in items]
+    if plan is None:
+        plan = make_shard_plan(host, ranks)
+    shard_path = write_shard(ckpt_dir, step, host, rank=rank, plan=plan)
+    if rank == min(ranks):
+        write_sharded_manifest(ckpt_dir, step, host, plan=plan, ranks=ranks)
+        if commit is None or commit:
+            commit_sharded(
+                ckpt_dir, step, timeout_s=commit_timeout_s, keep=keep
+            )
+    return shard_path
+
+
+class MissingShardError(FileNotFoundError):
+    """A restore needs a shard file that is not on disk."""
+
+
+def _restore_sharded(path: str, manifest, items, flat_sh) -> List[Any]:
+    """Assemble the leaves of ``items`` from a sharded checkpoint,
+    reading ONLY the shard files their pieces live in."""
+    by_key = manifest["keys"]
+    missing_keys = [k for k, _ in items if k not in by_key]
+    if missing_keys:
+        raise KeyError(
+            f"checkpoint {path} has no entry for {missing_keys[:5]} "
+            f"(manifest keys look like: {sorted(by_key)[:3]})"
+        )
+    needed = sorted(
+        {p["shard"] for k, _ in items for p in by_key[k]["pieces"]}
+    )
+    missing = [
+        r for r in needed
+        if not os.path.exists(os.path.join(path, _shard_name(r)))
+    ]
+    if missing:
+        covered = [
+            k for k, _ in items
+            if any(p["shard"] in missing for p in by_key[k]["pieces"])
+        ]
+        raise MissingShardError(
+            f"checkpoint {path} is missing "
+            f"{[_shard_name(r) for r in missing]} covering "
+            f"{len(covered)} requested tensors (e.g. {covered[:3]}); the "
+            f"save was torn or the files were lost — restore an earlier "
+            f"committed step, or restrict `like` to the keys you need"
+        )
+    shards: Dict[int, Any] = {}
+    for r in needed:
+        with open(os.path.join(path, _shard_name(r)), "rb") as f:
+            shards[r] = msgpack.unpackb(f.read(), strict_map_key=False)
+    out = []
+    for (k, proto), sh in zip(items, flat_sh):
+        meta = by_key[k]
+        arr = np.empty(tuple(meta["shape"]), dtype=meta["dtype"])
+        for p in meta["pieces"]:
+            stored = next(
+                (
+                    e
+                    for e in shards[p["shard"]].get(k, [])
+                    if [list(se) for se in e["index"]] == p["index"]
+                ),
+                None,
+            )
+            if stored is None:
+                raise MissingShardError(
+                    f"{_shard_name(p['shard'])} in {path} has no piece "
+                    f"{p['index']} of {k} — shard/manifest mismatch "
+                    f"(mixed-up save?); restore an earlier committed step"
+                )
+            sl = tuple(slice(s, e) for s, e in p["index"])
+            arr[sl] = _decode(stored)
+        if hasattr(proto, "dtype"):
+            arr = arr.astype(proto.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else jnp.asarray(arr))
+    return out
 
 
 def _shardings_by_key(items, shardings) -> List[Any]:
@@ -168,12 +630,26 @@ def restore(
     ``shardings``: optional pytree of jax.sharding.Sharding (or a single
     sharding) — enables elastic restore onto any mesh. May be partial:
     leaves without a matching entry are restored unsharded.
+
+    ``like`` may itself be a *partial* tree (e.g. only ``{"params":
+    ...}`` out of a params/m/v checkpoint): only its leaves are
+    restored, and on a sharded checkpoint only the shard files covering
+    those leaves are read (partial-read restore).
     """
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(path, "shard_0.msgpack"), "rb") as f:
-        payload = msgpack.unpackb(f.read(), strict_map_key=False)
+    path = _step_dir(ckpt_dir, step)
     items, treedef = _flatten(like)
     flat_sh = _shardings_by_key(items, shardings)
+    manifest = None
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError):
+        pass  # legacy layout: monolithic shard_0 with no/old manifest
+    if manifest is not None and manifest.get("format") == "sharded":
+        out = _restore_sharded(path, manifest, items, flat_sh)
+        return jax.tree_util.tree_unflatten(treedef, out)
+    with open(os.path.join(path, "shard_0.msgpack"), "rb") as f:
+        payload = msgpack.unpackb(f.read(), strict_map_key=False)
     out = []
     for (k, proto), sh in zip(items, flat_sh):
         arr = _decode(payload[k])

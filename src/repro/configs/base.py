@@ -27,6 +27,10 @@ class ShapeConfig:
 
 SHAPES = {
     "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    # global batch BELOW the multi-pod dp_size (2x16 = 32): the
+    # ('pod','data') batch split cannot fit whole, so fit_spec's joint
+    # placement keeps pod on batch and relocates data to the seq dim
+    "train_tight": ShapeConfig("train_tight", 4_096, 8, "train"),
     "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
     "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
     "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),

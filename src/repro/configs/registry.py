@@ -34,7 +34,7 @@ def get_shape(name: str) -> ShapeConfig:
 
 
 def all_cells():
-    """All (arch, shape) cells with applicability flags — 40 rows."""
+    """All (arch, shape) cells with applicability flags — 50 rows."""
     rows = []
     for arch in ARCH_IDS:
         cfg = get_config(arch)

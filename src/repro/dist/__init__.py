@@ -39,16 +39,38 @@ Sharding rule table (tensor → mesh axis placement):
 multi-pod mesh, ``"data"`` otherwise. Any placement whose dim is not
 divisible by the mesh axis size is relocated by ``fit_spec`` to the
 nearest divisible free dim (ties prefer the later dim), falling back to
-replication when no dim is legal.
+replication when no dim is legal. A *tuple* of axes whose product does
+not divide its dim is split jointly: the largest divisible sub-tuple
+stays put and the leftover axes relocate one by one (the multi-pod
+``("pod", "data")`` batch split at ``batch < dp_size`` keeps ``pod``
+on batch and moves ``data`` to the seq dim — see the ``train_tight``
+shape cell).
 
-``repro.dist.fault`` implements the file-based fault-tolerance
-protocol used by the training driver:
+``repro.dist.compat`` provides ``initialize()`` — the
+``jax.distributed``-style multi-process entry point, coordinated
+through a shared filesystem directory instead of a gRPC service — and
+the :class:`~repro.dist.compat.ProcessGroup` control-plane collectives
+(barrier / gather / broadcast of JSON payloads, never tensors).
 
-  * ``Heartbeat`` — each rank touches ``<dir>/rank_<r>`` at most every
-    ``interval_s`` seconds; the file mtime IS the liveness signal (no
-    server, works on any shared filesystem).
+``repro.dist.fault`` implements the file-based **rank-complete**
+fault-tolerance protocol used by the training driver:
+
+  * ``Heartbeat`` — EVERY rank touches ``<dir>/rank_<r>`` at most
+    every ``interval_s`` seconds; the file mtime IS the liveness
+    signal (no server, works on any shared filesystem).
   * ``HeartbeatMonitor.dead_ranks()`` — ranks whose heartbeat file
-    mtime is older than ``timeout_s``.
+    mtime is older than ``timeout_s``, judged against the monitor's
+    own same-filesystem sentinel mtime (clock-skew safe).
+  * ``FleetSupervisor`` — aggregates all heartbeats into membership
+    *epochs* (atomically-published ``membership.json``): stale beat ⇒
+    evict, rejoin request + fresh beat ⇒ un-evict; each bumps the
+    epoch. The supervisor seat is the lowest active rank and fails
+    over deterministically. Workers guard each step with
+    ``check_epoch`` and abort with ``MembershipChanged`` on drift;
+    the restart layer reshards them around the new active set, and a
+    recovered rank re-enters through ``request_rejoin`` +
+    ``wait_active``. See ``docs/distributed.md`` for the state
+    machine.
   * ``StragglerTracker`` — per-rank step-time EWMA; a rank is a
     straggler when its EWMA exceeds ``slack`` × the median EWMA of
     the other ranks (leave-one-out, so it can't shift its own

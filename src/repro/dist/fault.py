@@ -1,19 +1,35 @@
-"""File-based fault tolerance: heartbeats, stragglers, bounded restart.
+"""File-based fault tolerance: heartbeats, membership, bounded restart.
 
 The protocol needs nothing but a shared filesystem (the checkpoint
 directory): each rank touches ``<dir>/rank_<r>``; a monitor reads the
-mtimes. See the module docstring of ``repro.dist`` for the full
-contract.
+mtimes. On top of the per-rank signals sits the **rank-complete**
+supervisor layer:
+
+* every rank beats (not just rank 0); :class:`HeartbeatMonitor`
+  aggregates all of them against its own filesystem-clock sentinel;
+* :class:`FleetSupervisor` turns stale heartbeats into *membership
+  epochs* — an atomically-published ``membership.json`` that names the
+  active and evicted ranks. Evicting and un-evicting both bump the
+  epoch; workers that observe a new epoch abort their attempt with
+  :class:`MembershipChanged` and reshard around the new active set;
+* a recovered rank **rejoins**: it touches its heartbeat again, files a
+  rejoin request, and waits; the supervisor un-evicts it on the next
+  poll, the epoch bumps, and every rank (the rejoiner included)
+  restarts on the grown mesh from the last committed checkpoint.
+
+See the module docstring of ``repro.dist`` for the full contract.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import statistics
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 _PREFIX = "rank_"
+_SENTINEL = "monitor.sentinel"
 
 
 class Heartbeat:
@@ -42,19 +58,59 @@ class Heartbeat:
         return True
 
 
+class HeartbeatThread:
+    """Background beater: keeps a rank's heartbeat fresh through long
+    main-thread stalls — multi-second XLA compiles, blocking checkpoint
+    commits, restore replays. The heartbeat then signals *process
+    liveness*, which is the contract the eviction protocol wants: a
+    SIGKILL takes the thread down with the process (detected within
+    ``timeout_s``), while a rank that is merely busy compiling is NOT
+    falsely evicted. Slow-but-alive ranks are the straggler layer's
+    job, not the heartbeat's.
+
+    Daemon thread; ``stop()`` is graceful but optional.
+    """
+
+    def __init__(self, hb: Heartbeat):
+        import threading
+
+        self.hb = hb
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self):
+        while not self._stop.is_set():
+            self.hb.beat(force=True)
+            self._stop.wait(self.hb.interval_s)
+
+    def start(self) -> "HeartbeatThread":
+        self.hb.beat(force=True)  # visible before the thread spins up
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        self._thread.join(timeout=2 * self.hb.interval_s + 1.0)
+
+
 class HeartbeatMonitor:
     """Reads every rank's heartbeat mtime; stale ⇒ dead.
 
-    Mtimes are compared against the monitor's ``time.time()``. On a
-    network filesystem whose server clock is skewed from the monitor
-    host, pass an explicit ``now`` to ``dead_ranks`` (e.g. the mtime
-    of a file the monitor itself just touched on the same filesystem)
-    so both sides of the comparison share one clock.
+    Heartbeat mtimes are stamped by the *filesystem* (an NFS server's
+    clock), so comparing them against the monitor host's ``time.time()``
+    invites clock skew: a monitor running ahead of the file server
+    falsely evicts live ranks, one running behind never evicts dead
+    ones. By default ``dead_ranks`` therefore touches its **own
+    sentinel file** on the same filesystem and uses that file's mtime as
+    ``now`` — both sides of the comparison then share the one clock that
+    stamped them. Pass an explicit ``now`` to override (tests, or a
+    caller that already holds a same-filesystem timestamp).
     """
 
     def __init__(self, hb_dir: str, timeout_s: float = 60.0):
         self.hb_dir = hb_dir
         self.timeout_s = timeout_s
+        self._sentinel = os.path.join(hb_dir, _SENTINEL)
 
     def last_seen(self) -> Dict[int, float]:
         """rank → heartbeat file mtime (empty when no dir/beats yet)."""
@@ -71,11 +127,305 @@ class HeartbeatMonitor:
                 continue  # foreign file, or beat racing the scan
         return out
 
+    def filesystem_now(self) -> float:
+        """Touch the monitor's sentinel; return its mtime — a timestamp
+        from the same clock that stamps the heartbeat files."""
+        os.makedirs(self.hb_dir, exist_ok=True)
+        with open(self._sentinel, "w") as f:
+            f.write("monitor clock sentinel\n")
+        return os.path.getmtime(self._sentinel)
+
     def dead_ranks(self, now: Optional[float] = None) -> List[int]:
-        now = time.time() if now is None else now
-        return sorted(
-            r for r, t in self.last_seen().items() if now - t > self.timeout_s
+        seen = self.last_seen()
+        if not seen:
+            return []
+        if now is None:
+            now = self.filesystem_now()
+        return sorted(r for r, t in seen.items() if now - t > self.timeout_s)
+
+
+# ----------------------------------------------------------------------
+# fleet membership: rank-complete eviction + un-evict/rejoin
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Membership:
+    """One epoch of the fleet view: who is in, who is out.
+
+    Immutable and totally ordered by ``epoch``; workers compare the
+    epoch they trained under against the published one and reshard on
+    any change (grow or shrink — both are just "the mesh is different
+    now").
+    """
+
+    epoch: int
+    active: Tuple[int, ...]
+    evicted: Tuple[int, ...]
+
+    @property
+    def leader(self) -> int:
+        """The supervisor seat: lowest active rank (fails over
+        deterministically when the leader itself is evicted)."""
+        return min(self.active) if self.active else -1
+
+    def evict(self, ranks: Sequence[int]) -> "Membership":
+        gone = [r for r in self.active if r in set(ranks)]
+        if not gone:
+            return self
+        return Membership(
+            epoch=self.epoch + 1,
+            active=tuple(r for r in self.active if r not in set(gone)),
+            evicted=tuple(sorted(set(self.evicted) | set(gone))),
         )
+
+    def unevict(self, ranks: Sequence[int]) -> "Membership":
+        back = [r for r in self.evicted if r in set(ranks)]
+        if not back:
+            return self
+        return Membership(
+            epoch=self.epoch + 1,
+            active=tuple(sorted(set(self.active) | set(back))),
+            evicted=tuple(r for r in self.evicted if r not in set(back)),
+        )
+
+
+class MembershipChanged(RuntimeError):
+    """Abort signal: the fleet membership epoch moved under this attempt.
+
+    Raised by workers when the published :class:`Membership` epoch
+    differs from the one the attempt started on (a rank was evicted, or
+    an evicted rank rejoined). :meth:`RestartPolicy.run` treats it like
+    an eviction: restart *immediately* (no backoff, no restart-budget
+    slot — the fleet changed shape, nothing is broken) so the attempt
+    function re-reads the membership and reshards.
+    """
+
+    def __init__(self, membership: Membership):
+        super().__init__(
+            f"membership epoch {membership.epoch}: "
+            f"active={list(membership.active)} evicted={list(membership.evicted)}"
+        )
+        self.membership = membership
+
+
+class MembershipView:
+    """The atomically-published fleet view (``<dir>/membership.json``).
+
+    Readers never block and never observe a torn file (tmp + rename);
+    concurrent supervisor writes are last-write-wins, which is safe
+    because every would-be writer derives the same decision from the
+    same heartbeat files — see :class:`FleetSupervisor`.
+    """
+
+    def __init__(self, coord_dir: str, world_size: int):
+        self.path = os.path.join(coord_dir, "membership.json")
+        self.world_size = world_size
+
+    def initial(self) -> Membership:
+        return Membership(0, tuple(range(self.world_size)), ())
+
+    def read(self) -> Membership:
+        try:
+            with open(self.path) as f:
+                obj = json.load(f)
+        except (OSError, ValueError):
+            return self.initial()  # not yet published (or mid-rename)
+        return Membership(
+            int(obj["epoch"]),
+            tuple(obj["active"]),
+            tuple(obj["evicted"]),
+        )
+
+    def write(self, m: Membership) -> None:
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(
+                {
+                    "epoch": m.epoch,
+                    "active": list(m.active),
+                    "evicted": list(m.evicted),
+                    "world_size": self.world_size,
+                },
+                f,
+            )
+        os.replace(tmp, self.path)
+
+
+class FleetSupervisor:
+    """Rank-complete fault supervision: every rank beats, the supervisor
+    aggregates, eviction AND rejoin decisions cover any rank.
+
+    One ``poll()`` pass:
+
+    1. stale heartbeats among the active set ⇒ evict (epoch bump) —
+       unless the rank left a ``<coord>/done/rank_<r>*`` completion
+       marker (orderly leave, see :meth:`completed_ranks`);
+    2. rejoin requests (``<coord>/rejoin/rank_<r>``) from evicted ranks
+       whose heartbeat is *fresh again* ⇒ un-evict (epoch bump) and
+       clear the request.
+
+    The supervisor seat is the lowest active rank, but the decision
+    procedure is a pure function of the shared files, so when the
+    leader itself dies the next rank takes over by simply running
+    ``poll()`` — duplicate writers converge on the same content
+    (last-write-wins on an atomic rename).
+    """
+
+    def __init__(
+        self,
+        coord_dir: str,
+        world_size: int,
+        *,
+        timeout_s: float = 60.0,
+        monitor: Optional[HeartbeatMonitor] = None,
+    ):
+        self.coord_dir = coord_dir
+        self.view = MembershipView(coord_dir, world_size)
+        self.monitor = (
+            monitor
+            if monitor is not None
+            else HeartbeatMonitor(os.path.join(coord_dir, "hb"), timeout_s)
+        )
+        self._rejoin_dir = os.path.join(coord_dir, "rejoin")
+
+    # -- worker-side rejoin request ------------------------------------
+
+    def request_rejoin(self, rank: int) -> None:
+        os.makedirs(self._rejoin_dir, exist_ok=True)
+        with open(os.path.join(self._rejoin_dir, f"{_PREFIX}{rank:05d}"), "w") as f:
+            f.write(str(os.getpid()))
+
+    def _rejoin_requests(self) -> List[int]:
+        if not os.path.isdir(self._rejoin_dir):
+            return []
+        out = []
+        for name in os.listdir(self._rejoin_dir):
+            if name.startswith(_PREFIX):
+                try:
+                    out.append(int(name[len(_PREFIX):]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def _clear_rejoin(self, rank: int) -> None:
+        try:
+            os.remove(os.path.join(self._rejoin_dir, f"{_PREFIX}{rank:05d}"))
+        except OSError:
+            pass
+
+    # -- worker-side orderly completion --------------------------------
+
+    def completed_ranks(self) -> List[int]:
+        """Ranks that finished the job and exited on purpose: a
+        ``<coord>/done/rank_<r>*`` marker (written by the driver right
+        before exit). Their heartbeats go silent exactly like a dead
+        rank's, but completion is an orderly leave, NOT a fault — the
+        supervisor exempts them from eviction so ranks that finish
+        first don't trigger a reshard storm while stragglers drain."""
+        done_dir = os.path.join(self.coord_dir, "done")
+        if not os.path.isdir(done_dir):
+            return []
+        out = set()
+        for name in os.listdir(done_dir):
+            if name.startswith(_PREFIX):
+                try:
+                    out.add(int(name[len(_PREFIX):].split(".")[0]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    # -- supervisor-side decision pass ---------------------------------
+
+    def poll(self) -> Membership:
+        """One supervision pass; returns the (possibly bumped) view."""
+        m = self.view.read()
+        now = self.monitor.filesystem_now()
+        seen = self.monitor.last_seen()
+        done = set(self.completed_ranks())
+
+        # 1. eviction: active ranks whose beat is stale — or missing
+        # entirely (initialize() guarantees every rank beat once, so a
+        # missing file means the rank died before this poll ever saw
+        # it). Ranks that COMPLETED are silent too, but on purpose —
+        # never evicted.
+        dead = [
+            r
+            for r in m.active
+            if r not in done
+            and (r not in seen or now - seen[r] > self.monitor.timeout_s)
+        ]
+        m2 = m.evict(dead)
+
+        # 2. rejoin: an evicted rank asking back in must prove liveness
+        # with a *fresh* heartbeat, else a stale request file from a
+        # rank that died again would flap the membership.
+        back = [
+            r
+            for r in self._rejoin_requests()
+            if r in m2.evicted
+            and r in seen
+            and now - seen[r] <= self.monitor.timeout_s
+        ]
+        m3 = m2.unevict(back)
+        for r in back:
+            self._clear_rejoin(r)
+
+        if m3.epoch != m.epoch:
+            self.view.write(m3)
+            return m3
+        return m
+
+    def should_poll(self, rank: int, m: Optional[Membership] = None) -> bool:
+        """Does ``rank`` currently hold (or inherit) the supervisor seat?
+
+        The leader polls; any other active rank takes over only when the
+        leader's own heartbeat has gone stale — otherwise exactly one
+        writer runs per pass in the steady state.
+        """
+        m = self.view.read() if m is None else m
+        if rank not in m.active:
+            return False
+        done = set(self.completed_ranks())
+        # seat order skips completed ranks: a finished leader has
+        # exited, so the lowest still-running active rank inherits
+        live = [r for r in m.active if r not in done]
+        if not live:
+            return False
+        lead = min(live)
+        if rank == lead:
+            return True
+        others = [r for r in live if r != lead]
+        if not others:
+            return False
+        seen = self.monitor.last_seen()
+        if lead not in seen:
+            return rank == min(others)
+        now = self.monitor.filesystem_now()
+        if now - seen[lead] > self.monitor.timeout_s:
+            return rank == min(others)
+        return False
+
+    def check_epoch(self, epoch: int) -> Membership:
+        """Worker-side guard: raise :class:`MembershipChanged` when the
+        published epoch differs from the one this attempt trains on."""
+        m = self.view.read()
+        if m.epoch != epoch:
+            raise MembershipChanged(m)
+        return m
+
+    def wait_active(self, rank: int, *, timeout_s: float, poll_s: float = 0.05) -> Membership:
+        """Block until ``rank`` is in the active set (rejoin handshake)."""
+        deadline = time.monotonic() + timeout_s
+        while True:
+            m = self.view.read()
+            if rank in m.active:
+                return m
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"rank {rank} never re-admitted (view: {m})"
+                )
+            time.sleep(poll_s)
 
 
 class StragglerTracker:
@@ -222,13 +572,32 @@ class RestartPolicy:
     be evicted twice — either overrun degrades the signal to an
     ordinary bounded restart (backoff included), so ``run`` always
     terminates.
+
+    Membership response: a :class:`MembershipChanged` raised from
+    inside the attempt (the supervisor moved the fleet epoch — a rank
+    died, or a recovered rank rejoined) also restarts immediately and
+    budget-free, bounded by ``max_reshards``. The attempt function
+    re-reads the published membership on entry. ``unexclude(rank)``
+    re-admits a previously evicted straggler (the un-evict half of the
+    rejoin protocol): the next attempt reshards *with* the rank again,
+    and the rank becomes evictable afresh.
     """
 
     max_restarts: int = 3
     backoff_s: float = 1.0
     backoff_mult: float = 2.0
     max_evictions: int = 16
+    max_reshards: int = 64
     excluded_ranks: List[int] = dataclasses.field(default_factory=list)
+
+    def unexclude(self, rank: int) -> bool:
+        """Re-admit an evicted rank (rejoin). Returns True if it was
+        excluded. The rank regains a fresh eviction-budget slot: a
+        recovered machine that degrades again must be evictable."""
+        if rank in self.excluded_ranks:
+            self.excluded_ranks.remove(rank)
+            return True
+        return False
 
     def run(
         self,
@@ -236,14 +605,31 @@ class RestartPolicy:
         *,
         on_restart: Optional[Callable[[int, BaseException], None]] = None,
         on_evict: Optional[Callable[[int, "StragglerEvicted"], None]] = None,
+        on_reshard: Optional[Callable[[Membership], None]] = None,
     ):
         delay = self.backoff_s
         restarts = 0
         evictions = 0
+        reshards = 0
         i = 0
         while True:
             try:
                 return attempt(i)
+            except MembershipChanged as e:
+                if reshards >= self.max_reshards:
+                    # a flapping fleet must not restart forever; degrade
+                    # to the bounded-restart budget like eviction storms
+                    if restarts >= self.max_restarts:
+                        raise
+                    if on_restart is not None:
+                        on_restart(restarts, e)
+                    time.sleep(delay)
+                    delay *= self.backoff_mult
+                    restarts += 1
+                else:
+                    reshards += 1
+                    if on_reshard is not None:
+                        on_reshard(e.membership)
             except StragglerEvicted as e:
                 fresh = e.rank not in self.excluded_ranks
                 if fresh:

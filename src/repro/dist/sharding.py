@@ -49,15 +49,21 @@ def fit_spec(spec: P, shape: Sequence[int], mesh) -> P:
     With no legal dim the axis is dropped (replicated) — always safe,
     never wrong, just less parallel. A spec longer than the shape is
     truncated (its extra axes are dropped the same way).
+
+    **Joint placement** — when a *tuple* of mesh axes contends for one
+    dim and their product does not divide it (the multi-pod
+    ``("pod", "data")`` batch split at ``batch < dp_size``), the tuple
+    is SPLIT rather than moved whole: the largest-product sub-tuple
+    that does divide stays on the dim, and each remaining axis is
+    relocated independently by the single-axis rule. A 2×16 pod×data
+    fleet with global batch 8 keeps ``pod`` (2 | 8) on the batch dim
+    and moves ``data`` (16) to the sequence dim, instead of giving up
+    all 32-way data parallelism on the batch at once.
     """
     entries = list(spec)[: len(shape)] + [None] * (len(shape) - len(spec))
-    for i, axis in enumerate(entries):
-        if axis is None:
-            continue
+
+    def relocate_one(i, axis):
         n = _axis_size(mesh, axis)
-        if n <= 1 or shape[i] % n == 0:
-            continue
-        entries[i] = None
         cands = [
             j
             for j, e in enumerate(entries)
@@ -66,6 +72,32 @@ def fit_spec(spec: P, shape: Sequence[int], mesh) -> P:
         if cands:
             best = min(cands, key=lambda j: (abs(j - i), 0 if j > i else 1))
             entries[best] = axis
+
+    for i, axis in enumerate(list(entries)):
+        if axis is None:
+            continue
+        n = _axis_size(mesh, axis)
+        if n <= 1 or shape[i] % n == 0:
+            continue
+        entries[i] = None
+        if isinstance(axis, tuple) and len(axis) > 1:
+            # joint placement: keep the biggest divisible sub-tuple on
+            # this dim, relocate the leftover axes one by one
+            best_sub, best_n = (), 1
+            for mask in range(1, 1 << len(axis)):
+                sub = tuple(
+                    a for k, a in enumerate(axis) if mask & (1 << k)
+                )
+                sn = _axis_size(mesh, sub)
+                if shape[i] % sn == 0 and sn > best_n:
+                    best_sub, best_n = sub, sn
+            if best_sub:
+                entries[i] = best_sub if len(best_sub) > 1 else best_sub[0]
+            for a in axis:
+                if a not in best_sub:
+                    relocate_one(i, a)
+        else:
+            relocate_one(i, axis)
     return P(*entries)
 
 

@@ -220,7 +220,31 @@ def build_cell(arch: str, shape_name: str, mesh, policy_name: str):
     return fn, (params_sds, state), meta
 
 
-def run_cell(arch, shape_name, mesh_kind, policy_name, out_dir=None, verbose=True):
+def _placement_report(args_sds) -> dict:
+    """Input placements of one cell, by pytree path — the cheap audit
+    surface for the sharding rule table (``--placements-only``): the
+    first tree is the params (reported as a spec → leaf-count
+    histogram), the rest (batch / opt state / serve state) leaf by
+    leaf. No lowering, no compile."""
+    params, *rest = args_sds
+    hist: dict = {}
+    for _, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        k = str(leaf.sharding.spec)
+        hist[k] = hist.get(k, 0) + 1
+    inputs = {}
+    for tree in rest:
+        for path, leaf in jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=lambda x: hasattr(x, "sharding")
+        )[0]:
+            if hasattr(leaf, "sharding"):
+                inputs[jax.tree_util.keystr(path)] = str(leaf.sharding.spec)
+    return {"param_spec_histogram": hist, "inputs": inputs}
+
+
+def run_cell(
+    arch, shape_name, mesh_kind, policy_name, out_dir=None, verbose=True,
+    placements_only=False,
+):
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     t0 = time.time()
     fn, args, meta = build_cell(arch, shape_name, mesh, policy_name)
@@ -229,6 +253,15 @@ def run_cell(arch, shape_name, mesh_kind, policy_name, out_dir=None, verbose=Tru
         rec["status"] = "skipped"
         if verbose:
             print(f"[dryrun] {arch} × {shape_name} × {mesh_kind}: SKIP ({meta['skipped']})")
+        return rec
+    if placements_only:
+        rec["placements"] = _placement_report(args)
+        rec["status"] = "ok"
+        if verbose:
+            print(f"[dryrun] {arch} × {shape_name} × {mesh_kind} × {policy_name}: placements")
+            for k, v in rec["placements"]["inputs"].items():
+                print(f"  {k}: {v}")
+        print(json.dumps(rec["placements"]))
         return rec
     try:
         with mesh:
@@ -297,6 +330,9 @@ def main():
     ap.add_argument("--mesh", choices=["single", "multi"], default="single")
     ap.add_argument("--policy", choices=["ssprop", "ssprop_tp", "opt", "dense"], default="ssprop")
     ap.add_argument("--all", action="store_true", help="every (arch × shape)")
+    ap.add_argument("--placements-only", action="store_true",
+                    help="report input placements (JSON) without "
+                         "lowering/compiling — fast rule-table audit")
     ap.add_argument("--out", default="benchmarks/results/dryrun")
     args = ap.parse_args()
 
@@ -312,7 +348,11 @@ def main():
 
     failures = 0
     for a, s in cells:
-        rec = run_cell(a, s, args.mesh, args.policy, out_dir=args.out)
+        rec = run_cell(
+            a, s, args.mesh, args.policy,
+            out_dir=None if args.placements_only else args.out,
+            placements_only=args.placements_only,
+        )
         if rec["status"] == "error":
             failures += 1
             print(rec.get("error"))

@@ -13,6 +13,24 @@ The sparsity control surface is ONE object: a
 ``docs/policies.md``) and ``--scheduler``; the loop just asks
 ``resolved.policies_for_step(step)``.
 
+**Multi-process mode** (``--coord-dir`` + ``--world-size N`` +
+``--rank r``): every rank runs this driver as its own OS process
+against a shared coordination directory. Each rank heartbeats, the
+leader (lowest active rank) runs the :class:`FleetSupervisor` poll,
+and every step is guarded by a membership-epoch check — a stale rank
+is evicted (epoch bump), survivors abort with ``MembershipChanged``
+and restart resharded from the last committed checkpoint, and a
+relaunched rank rejoins through the un-evict protocol. Checkpoints
+are **per-host sharded**: each rank writes only ``shard_<r>.msgpack``
+and the leader commits once every active peer's shard lands.
+
+Compute is replicated across ranks (every rank steps the full global
+batch): loss trajectories are bit-identical at any fleet size, which
+is what lets the chaos tests assert kill → shrink → rejoin leaves the
+trajectory exactly equal to an uninterrupted run. The *distributed*
+state — membership epochs, shard plans, commit barriers — is the real
+multi-host protocol. See ``docs/distributed.md``.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
       --reduced --steps 50 --ckpt-dir /tmp/run1
@@ -22,11 +40,16 @@ Examples:
       --rules 'layer_{0,-1}/*=dense;*/attn/*=0.5;*=0.8'
   # crash/resume: re-running the same command continues from the latest
   # checkpoint.
+  # 4-rank fleet on one machine (each line its own process):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+      --reduced --steps 50 --ckpt-dir /tmp/fleet/ckpt \
+      --coord-dir /tmp/fleet --world-size 4 --rank 0  # ... rank 1..3
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import os
 import time
 
@@ -39,7 +62,14 @@ from repro.core.policy import PolicyProgram, PolicyRules, paper_default, tpu_def
 from repro.core.schedulers import make_schedule
 from repro.data.pipeline import TokenPipeline, TokenPipelineConfig
 from repro.dist import sharding as shd
-from repro.dist.fault import Heartbeat, RestartPolicy, StragglerSupervisor
+from repro.dist import compat as dist_compat
+from repro.dist.fault import (
+    FleetSupervisor,
+    Heartbeat,
+    HeartbeatThread,
+    RestartPolicy,
+    StragglerSupervisor,
+)
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as lm
@@ -75,6 +105,24 @@ def build_parser():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--fail-at-step", type=int, default=-1,
                     help="inject a crash once (fault-tolerance demo/test)")
+    # multi-process fleet (see module docstring / docs/distributed.md)
+    ap.add_argument("--coord-dir", default="",
+                    help="shared coordination dir; with --world-size > 1 "
+                         "enables the rank-complete fault protocol and "
+                         "per-host sharded checkpoints")
+    ap.add_argument("--rank", type=int, default=0)
+    ap.add_argument("--world-size", type=int, default=1)
+    ap.add_argument("--hb-interval", type=float, default=1.0,
+                    help="seconds between heartbeat touches")
+    ap.add_argument("--hb-timeout", type=float, default=5.0,
+                    help="heartbeat staleness before eviction")
+    ap.add_argument("--commit-timeout", type=float, default=30.0,
+                    help="leader wait for peers' checkpoint shards")
+    ap.add_argument("--rejoin-timeout", type=float, default=60.0,
+                    help="evicted rank's wait to be re-admitted")
+    ap.add_argument("--step-delay", type=float, default=0.0,
+                    help="sleep per step (chaos tests: stretch the run "
+                         "so a kill lands mid-training)")
     return ap
 
 
@@ -134,12 +182,44 @@ def run(args) -> dict:
         return step_cache[table]
 
     ckpt_dir = args.ckpt_dir
-    saver = ckpt_lib.AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
-    hb = Heartbeat(os.path.join(ckpt_dir, "hb"), rank=0) if ckpt_dir else None
+    rank = getattr(args, "rank", 0)
+    world = getattr(args, "world_size", 1)
+    coord_dir = getattr(args, "coord_dir", "")
+    multi = bool(coord_dir) and world > 1
+
+    sup = None
+    loss_log = None
+    if coord_dir:
+        # per-rank loss log (jsonl, append-only): replayed steps after a
+        # restart append AGAIN, so readers take the LAST occurrence of a
+        # step — exactly the value an uninterrupted run would have
+        os.makedirs(os.path.join(coord_dir, "loss"), exist_ok=True)
+        loss_log = os.path.join(coord_dir, "loss", f"rank_{rank:05d}.jsonl")
+    if multi:
+        # background beater: heartbeat = PROCESS liveness, so a rank
+        # stuck in a long XLA compile is not falsely evicted while a
+        # SIGKILLed one is detected within --hb-timeout
+        hb = Heartbeat(
+            os.path.join(coord_dir, "hb"), rank=rank,
+            interval_s=args.hb_interval,
+        )
+        HeartbeatThread(hb).start()
+        dist_compat.initialize(
+            coord_dir, process_id=rank, num_processes=world,
+            timeout_s=args.rejoin_timeout,
+        )
+        sup = FleetSupervisor(coord_dir, world, timeout_s=args.hb_timeout)
+    else:
+        hb = Heartbeat(os.path.join(ckpt_dir, "hb"), rank=0) if ckpt_dir else None
     strag = StragglerSupervisor()
     restart_policy = RestartPolicy(max_restarts=3, backoff_s=0.1)
     history = []
     injected = {"done": False}
+
+    def log_loss(step: int, loss: float) -> None:
+        if loss_log:
+            with open(loss_log, "a") as f:
+                f.write(json.dumps({"step": step, "loss": loss}) + "\n")
 
     def attempt(attempt_idx: int):
         # Evicted stragglers stay out of the fleet across restarts. A
@@ -148,6 +228,31 @@ def run(args) -> dict:
         # its data split around the survivors here.
         if restart_policy.excluded_ranks:
             print(f"[train] resharding around ranks {restart_policy.excluded_ranks}")
+        membership = None
+        active = [rank]
+        if multi:
+            membership = sup.view.read()
+            if rank not in membership.active:
+                # we were evicted (crash, stall, ...) — file a rejoin
+                # request and wait for the supervisor to re-admit us
+                sup.request_rejoin(rank)
+                print(f"[train] rank {rank} evicted; requesting rejoin")
+                membership = sup.wait_active(
+                    rank, timeout_s=args.rejoin_timeout
+                )
+            active = list(membership.active)
+            print(
+                f"[train] rank {rank} attempt {attempt_idx}: "
+                f"epoch {membership.epoch} active={active}"
+            )
+        saver = None
+        if ckpt_dir:
+            saver = ckpt_lib.AsyncCheckpointer(
+                ckpt_dir,
+                rank=rank,
+                ranks=active if multi else None,
+                commit_timeout_s=args.commit_timeout,
+            )
         with jax.set_mesh(mesh):
             params = jax.jit(
                 lambda r: lm.init_params(cfg, r), out_shardings=p_sh
@@ -178,9 +283,16 @@ def run(args) -> dict:
                     print(f"[train] resumed from step {latest}")
 
             for step in range(start, args.steps):
+                if multi:
+                    if sup.should_poll(rank):
+                        sup.poll()
+                    # abort + reshard if the fleet changed under us
+                    membership = sup.check_epoch(membership.epoch)
                 if step == args.fail_at_step and not injected["done"]:
                     injected["done"] = True
                     raise RuntimeError("injected failure (fault-tolerance test)")
+                if args.step_delay > 0:
+                    time.sleep(args.step_delay)
                 fn = get_step(step)
                 rate = program.schedule.rate(step)
                 batch = jax.tree.map(jnp.asarray, pipe.batch_at(step))
@@ -188,11 +300,12 @@ def run(args) -> dict:
                 params, opt_state, metrics = fn(params, opt_state, batch)
                 loss = float(metrics["loss"])
                 dt = time.time() - t0
-                strag.record(0, dt)
+                strag.record(rank, dt)
                 strag.check(excluded=restart_policy.excluded_ranks)
                 if hb:
                     hb.beat()
                 history.append(loss)
+                log_loss(step, loss)
                 if step % args.log_every == 0 or step == args.steps - 1:
                     print(
                         f"[train] step {step:5d} rate={rate:.2f} "
@@ -205,13 +318,32 @@ def run(args) -> dict:
                     )
             if saver:
                 saver.wait()
+                if saver.last_error is not None:
+                    # a failed FINAL save must not report success — mid-run
+                    # save errors (e.g. a torn commit after a peer died)
+                    # surface on the next attempt's restore instead
+                    raise saver.last_error
         return {"history": history, "final_loss": history[-1] if history else None}
 
-    return restart_policy.run(
+    out = restart_policy.run(
         attempt,
         on_restart=lambda i, e: print(f"[train] restart {i}: {e}"),
         on_evict=lambda r, e: print(f"[train] evicted straggler rank {r}: {e}"),
+        on_reshard=lambda m: print(
+            f"[train] rank {rank} resharding to epoch {m.epoch} "
+            f"active={list(m.active)}"
+        ),
     )
+    if coord_dir:
+        # durable completion marker for the multi-process harness
+        os.makedirs(os.path.join(coord_dir, "done"), exist_ok=True)
+        done = os.path.join(coord_dir, "done", f"rank_{rank:05d}.json")
+        tmp = f"{done}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({"rank": rank, "final_loss": out["final_loss"],
+                       "steps": args.steps}, f)
+        os.replace(tmp, done)
+    return out
 
 
 def main():

@@ -30,6 +30,11 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: multi-minute end-to-end test (fast lane skips these)"
     )
+    config.addinivalue_line(
+        "markers",
+        "dist: multi-process fault-tolerance harness (spawns real rank "
+        "subprocesses; CI runs these in their own lane)",
+    )
 
 
 def pytest_collection_modifyitems(config, items):
@@ -40,4 +45,9 @@ def pytest_collection_modifyitems(config, items):
             item.name.startswith(_SLOW_GRID_PREFIXES)
             and "decoder" not in item.name
         ):
+            item.add_marker(pytest.mark.slow)
+        # every test in the multi-process harness is dist (and slow:
+        # the fast lane must not pay for subprocess fleets)
+        if "test_multiprocess" in str(item.fspath):
+            item.add_marker(pytest.mark.dist)
             item.add_marker(pytest.mark.slow)

@@ -9,10 +9,16 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.configs.registry import get_config
+from repro.dist import compat as dist_compat
 from repro.dist import sharding as shd
 from repro.dist.fault import (
+    FleetSupervisor,
     Heartbeat,
     HeartbeatMonitor,
+    HeartbeatThread,
+    Membership,
+    MembershipChanged,
+    MembershipView,
     RestartPolicy,
     StragglerEvicted,
     StragglerSupervisor,
@@ -52,11 +58,29 @@ class TestFitSpec:
         sp = shd.fit_spec(P("model", None), (3, 5), mesh)
         assert sp == P(None, None)
 
-    def test_tuple_axis_uses_product_size(self):
+    def test_tuple_axis_splits_jointly(self):
         mesh = FakeMesh(pod=2, data=16)
-        # ('pod','data') = 32-way on batch 8 -> moves to the seq dim
+        # ('pod','data') = 32-way on batch 8: pod (2 | 8) stays on the
+        # batch dim, data (16 | 64) relocates to the seq dim — the
+        # tuple is split, not moved whole
         sp = shd.fit_spec(P(("pod", "data"), None), (8, 64), mesh)
-        assert sp == P(None, ("pod", "data"))
+        assert sp == P("pod", "data")
+
+    def test_tuple_axis_keeps_largest_divisible_subtuple(self):
+        mesh = FakeMesh(pod=2, data=16, model=4)
+        # batch 16: data (16) wins the batch dim, pod moves to seq
+        sp = shd.fit_spec(P(("pod", "data"), None), (16, 4096), mesh)
+        assert sp == P("data", "pod")
+        # batch 1 decode: nothing divides batch, both relocate; only
+        # one free dim remains so the larger axis priority is moot —
+        # relocation is per-axis, first-come
+        sp = shd.fit_spec(P(("pod", "data"), None), (1, 524288), mesh)
+        assert sp == P(None, "pod")
+
+    def test_tuple_axis_whole_tuple_stays_when_divisible(self):
+        mesh = FakeMesh(pod=2, data=16)
+        sp = shd.fit_spec(P(("pod", "data"), None), (64, 64), mesh)
+        assert sp == P(("pod", "data"), None)
 
     def test_short_spec_is_padded(self):
         mesh = FakeMesh(data=2)
@@ -440,3 +464,326 @@ class TestCkptPaths:
         saver.wait()
         saver.wait()
         assert ckpt_lib.latest_step(str(tmp_path)) == 1
+
+
+# ----------------------------------------------------------------------
+# clock skew: heartbeat mtimes vs the monitor's wall clock
+# ----------------------------------------------------------------------
+
+
+class TestMonitorClockSkew:
+    def test_skewed_monitor_clock_does_not_evict_live_ranks(
+        self, tmp_path, monkeypatch
+    ):
+        """Regression: ``dead_ranks()`` used to compare file mtimes
+        against the monitor host's ``time.time()``; a monitor running
+        ahead of the file server's clock falsely evicted live ranks.
+        The default ``now`` is a sentinel-file mtime from the SAME
+        filesystem clock, so process-clock skew is invisible."""
+        import time as _time
+
+        hb = Heartbeat(str(tmp_path), rank=0, interval_s=0.0)
+        hb.beat(force=True)
+        mon = HeartbeatMonitor(str(tmp_path), timeout_s=5.0)
+
+        real = _time.time
+        monkeypatch.setattr(_time, "time", lambda: real() + 10_000.0)
+        assert mon.dead_ranks() == []
+
+    def test_skewed_monitor_clock_behind_still_detects_dead(
+        self, tmp_path, monkeypatch
+    ):
+        """The converse skew (monitor clock behind the file server)
+        must not mask a genuinely stale heartbeat."""
+        import os as _os
+        import time as _time
+
+        hb = Heartbeat(str(tmp_path), rank=0, interval_s=0.0)
+        hb.beat(force=True)
+        # fake a rank that stopped beating 100s ago (skewed mtimes)
+        past = _os.path.getmtime(hb.path) - 100.0
+        _os.utime(hb.path, (past, past))
+        mon = HeartbeatMonitor(str(tmp_path), timeout_s=5.0)
+
+        real = _time.time
+        monkeypatch.setattr(_time, "time", lambda: real() - 10_000.0)
+        assert mon.dead_ranks() == [0]
+
+    def test_explicit_now_overrides_sentinel(self, tmp_path):
+        import os as _os
+
+        hb = Heartbeat(str(tmp_path), rank=3, interval_s=0.0)
+        hb.beat(force=True)
+        mon = HeartbeatMonitor(str(tmp_path), timeout_s=5.0)
+        mtime = _os.path.getmtime(hb.path)
+        assert mon.dead_ranks(now=mtime + 1.0) == []
+        assert mon.dead_ranks(now=mtime + 100.0) == [3]
+
+
+class TestHeartbeatThread:
+    def test_background_beater_keeps_beating_through_main_stall(
+        self, tmp_path
+    ):
+        """The beater thread models a rank whose MAIN thread is stuck
+        in a long XLA compile: the heartbeat must stay fresh anyway
+        (process liveness, not step progress)."""
+        import os as _os
+        import time as _time
+
+        hb = Heartbeat(str(tmp_path), rank=0, interval_s=0.05)
+        t = HeartbeatThread(hb).start()
+        try:
+            first = _os.path.getmtime(hb.path)
+            deadline = _time.monotonic() + 5.0
+            while _os.path.getmtime(hb.path) <= first:
+                assert _time.monotonic() < deadline, "beater never beat again"
+                _time.sleep(0.05)  # the "stalled" main thread
+        finally:
+            t.stop()
+
+    def test_stop_is_graceful_and_idempotent(self, tmp_path):
+        hb = Heartbeat(str(tmp_path), rank=1, interval_s=0.05)
+        t = HeartbeatThread(hb).start()
+        t.stop()
+        t.stop()
+        assert not t._thread.is_alive()
+
+
+# ----------------------------------------------------------------------
+# membership epochs: evict / un-evict / leader failover
+# ----------------------------------------------------------------------
+
+
+class TestMembership:
+    def test_evict_bumps_epoch_and_moves_rank(self):
+        m = Membership(0, (0, 1, 2, 3), ())
+        m2 = m.evict([2])
+        assert (m2.epoch, m2.active, m2.evicted) == (1, (0, 1, 3), (2,))
+
+    def test_evict_noop_for_inactive_rank_keeps_epoch(self):
+        m = Membership(0, (0, 1), (2,))
+        assert m.evict([2]) is m
+        assert m.evict([7]) is m
+
+    def test_unevict_restores_rank_and_bumps_epoch(self):
+        m = Membership(1, (0, 1, 3), (2,))
+        m2 = m.unevict([2])
+        assert (m2.epoch, m2.active, m2.evicted) == (2, (0, 1, 2, 3), ())
+
+    def test_leader_fails_over_deterministically(self):
+        m = Membership(0, (0, 1, 2), ())
+        assert m.leader == 0
+        assert m.evict([0]).leader == 1
+        assert m.evict([0, 1]).leader == 2
+        assert m.evict([0, 1, 2]).leader == -1
+
+    def test_view_roundtrip_and_initial(self, tmp_path):
+        view = MembershipView(str(tmp_path), 4)
+        assert view.read() == view.initial() == Membership(0, (0, 1, 2, 3), ())
+        m = view.initial().evict([1])
+        view.write(m)
+        assert view.read() == m
+
+
+class TestFleetSupervisor:
+    def _beat_all(self, coord, ranks):
+        for r in ranks:
+            Heartbeat(str(coord / "hb"), rank=r, interval_s=0.0).beat(force=True)
+
+    def _stale(self, coord, rank, ago=100.0):
+        import os as _os
+
+        path = str(coord / "hb" / f"rank_{rank:05d}")
+        past = _os.path.getmtime(path) - ago
+        _os.utime(path, (past, past))
+
+    def test_poll_evicts_stale_rank(self, tmp_path):
+        self._beat_all(tmp_path, range(3))
+        sup = FleetSupervisor(str(tmp_path), 3, timeout_s=5.0)
+        self._stale(tmp_path, 2)
+        m = sup.poll()
+        assert (m.epoch, m.active, m.evicted) == (1, (0, 1), (2,))
+
+    def test_poll_evicts_rank_that_never_beat(self, tmp_path):
+        self._beat_all(tmp_path, [0, 2])
+        sup = FleetSupervisor(str(tmp_path), 3, timeout_s=5.0)
+        m = sup.poll()
+        assert m.evicted == (1,)
+
+    def test_rejoin_needs_request_and_fresh_beat(self, tmp_path):
+        self._beat_all(tmp_path, range(2))
+        sup = FleetSupervisor(str(tmp_path), 2, timeout_s=5.0)
+        self._stale(tmp_path, 1)
+        assert sup.poll().evicted == (1,)
+
+        # a rejoin request alone (beat still stale) is not enough: a
+        # stale request file from a rank that died again must not flap
+        sup.request_rejoin(1)
+        assert sup.poll().evicted == (1,)
+
+        # fresh beat + request ⇒ un-evicted, epoch bumped again
+        self._beat_all(tmp_path, [1])
+        m = sup.poll()
+        assert (m.epoch, m.active, m.evicted) == (2, (0, 1), ())
+        # the request was consumed: the next poll is a no-op
+        assert sup.poll().epoch == 2
+
+    def test_completed_rank_is_never_evicted(self, tmp_path):
+        """Orderly leave: a rank that wrote its done marker stops
+        heartbeating on purpose — silence is completion, not death."""
+        self._beat_all(tmp_path, range(2))
+        (tmp_path / "done").mkdir()
+        (tmp_path / "done" / "rank_00001.json").write_text("{}")
+        sup = FleetSupervisor(str(tmp_path), 2, timeout_s=5.0)
+        self._stale(tmp_path, 1)
+        m = sup.poll()
+        assert (m.epoch, m.active, m.evicted) == (0, (0, 1), ())
+        assert sup.completed_ranks() == [1]
+
+    def test_check_epoch_raises_on_drift(self, tmp_path):
+        self._beat_all(tmp_path, range(2))
+        sup = FleetSupervisor(str(tmp_path), 2, timeout_s=5.0)
+        assert sup.check_epoch(0).epoch == 0
+        self._stale(tmp_path, 1)
+        sup.poll()
+        with pytest.raises(MembershipChanged) as exc:
+            sup.check_epoch(0)
+        assert exc.value.membership.epoch == 1
+
+    def test_should_poll_leader_and_failover(self, tmp_path):
+        self._beat_all(tmp_path, range(3))
+        sup = FleetSupervisor(str(tmp_path), 3, timeout_s=5.0)
+        assert sup.should_poll(0)
+        assert not sup.should_poll(1)
+        assert not sup.should_poll(2)
+        # leader heartbeat goes stale: the NEXT rank inherits the seat
+        # (exactly one standby — rank 2 still defers)
+        self._stale(tmp_path, 0)
+        assert sup.should_poll(1)
+        assert not sup.should_poll(2)
+
+    def test_should_poll_skips_completed_leader(self, tmp_path):
+        self._beat_all(tmp_path, range(3))
+        (tmp_path / "done").mkdir()
+        (tmp_path / "done" / "rank_00000.json").write_text("{}")
+        sup = FleetSupervisor(str(tmp_path), 3, timeout_s=5.0)
+        # rank 0 finished: the lowest still-running rank is the leader
+        assert not sup.should_poll(0)
+        assert sup.should_poll(1)
+        assert not sup.should_poll(2)
+
+    def test_wait_active_times_out_with_actionable_error(self, tmp_path):
+        self._beat_all(tmp_path, range(2))
+        sup = FleetSupervisor(str(tmp_path), 2, timeout_s=5.0)
+        self._stale(tmp_path, 1)
+        sup.poll()
+        with pytest.raises(TimeoutError, match="rank 1 never re-admitted"):
+            sup.wait_active(1, timeout_s=0.1)
+
+
+class TestRestartPolicyUnexclude:
+    def test_unexclude_readmits_and_reports(self):
+        p = RestartPolicy(max_restarts=0)
+        p.excluded_ranks.append(3)
+        assert p.unexclude(3) is True
+        assert p.excluded_ranks == []
+        assert p.unexclude(3) is False
+
+    def test_unexcluded_rank_is_evictable_afresh(self):
+        """The rejoin half of the protocol: after unexclude, a repeat
+        eviction of the same rank must again restart budget-free."""
+        p = RestartPolicy(max_restarts=0, backoff_s=0.0)
+        calls = []
+
+        def attempt(i):
+            calls.append(i)
+            if len(calls) == 1:
+                raise StragglerEvicted(3, 1.0, 0.1)
+            if len(calls) == 2:
+                p.unexclude(3)
+                raise StragglerEvicted(3, 1.0, 0.1)
+            return "ok"
+
+        assert p.run(attempt) == "ok"
+        assert len(calls) == 3
+
+
+# ----------------------------------------------------------------------
+# ProcessGroup: filesystem-backed control-plane collectives
+# ----------------------------------------------------------------------
+
+
+class TestProcessGroup:
+    def _group(self, tmp_path, world=2, **kw):
+        return [
+            dist_compat.ProcessGroup(str(tmp_path), r, world, **kw)
+            for r in range(world)
+        ]
+
+    def test_put_get_roundtrip(self, tmp_path):
+        a, b = self._group(tmp_path)
+        a.put("x.0", {"v": 1})
+        assert b.get("x.0", 0, timeout_s=1.0) == {"v": 1}
+        assert b.try_get("x.0", 1) is None
+
+    def test_gather_returns_every_participant(self, tmp_path):
+        a, b = self._group(tmp_path)
+        a.put("g.0", "from0")
+        got = b.gather("g.0", "from1", timeout_s=1.0)
+        assert got == {0: "from0", 1: "from1"}
+
+    def test_collectives_among_survivor_subset(self, tmp_path):
+        """After an eviction the survivors pass ``ranks=`` and never
+        wait on the dead rank."""
+        pgs = self._group(tmp_path, world=3)
+        pgs[0].put("s.0", 0)
+        got = pgs[2].gather("s.0", 2, ranks=[0, 2], timeout_s=1.0)
+        assert got == {0: 0, 2: 2}
+        pgs[0].put("bar.b.0", None)
+        pgs[2].barrier("b.0", ranks=[0, 2], timeout_s=1.0)
+
+    def test_broadcast_from_src(self, tmp_path):
+        a, b = self._group(tmp_path)
+        a.broadcast("cfg.0", {"seed": 7})
+        assert b.broadcast("cfg.0", src=0, timeout_s=1.0) == {"seed": 7}
+
+    def test_missing_peer_times_out_not_hangs(self, tmp_path):
+        (a,) = self._group(tmp_path, world=1)
+        pg = dist_compat.ProcessGroup(str(tmp_path), 0, 2)
+        with pytest.raises(dist_compat.ProcessGroupTimeout, match="rank 1"):
+            pg.get("never.0", 1, timeout_s=0.05)
+
+    def test_rank_outside_world_rejected(self, tmp_path):
+        with pytest.raises(ValueError, match="outside world"):
+            dist_compat.ProcessGroup(str(tmp_path), 5, 2)
+
+    def test_initialize_registers_and_unblocks(self, tmp_path):
+        """initialize blocks until every peer registers, so the two
+        ranks must initialize concurrently (as real processes would)."""
+        import threading
+
+        d = str(tmp_path)
+        pgs = {}
+
+        def init(r):
+            pgs[r] = dist_compat.initialize(
+                d, process_id=r, num_processes=2, timeout_s=10.0
+            )
+
+        threads = [threading.Thread(target=init, args=(r,)) for r in (0, 1)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=15.0)
+        assert sorted(pgs) == [0, 1]
+        assert dist_compat.registered_ranks(d) == [0, 1]
+        pgs[0].put("hello.0", "hi")
+        assert pgs[1].get("hello.0", 0, timeout_s=1.0) == "hi"
+
+    def test_initialize_times_out_on_missing_peer(self, tmp_path):
+        with pytest.raises(
+            dist_compat.ProcessGroupTimeout, match="never registered"
+        ):
+            dist_compat.initialize(
+                str(tmp_path), process_id=0, num_processes=2, timeout_s=0.1
+            )

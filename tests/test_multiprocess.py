@@ -1,0 +1,503 @@
+"""Multi-process chaos harness: N real ranks as OS subprocesses.
+
+Every test here spawns genuine concurrent processes sharing a tmpdir
+filesystem (the same substrate a multi-host fleet shares over NFS) and
+exercises the rank-complete fault protocol end to end:
+
+* a 4-rank fleet trains, SIGKILL takes a live rank down mid-step, the
+  supervisor evicts it within the heartbeat timeout, the survivors
+  restart resharded from the last committed checkpoint, a relaunched
+  rank rejoins through the un-evict protocol — and the loss trajectory
+  is bit-identical to an uninterrupted single-process reference run
+  (compute is replicated across ranks, so fleet size never changes the
+  math — see the train driver docstring);
+* a checkpoint writer killed between its shard write and ``COMMITTED``
+  leaves a torn step that restart discovery skips, and a restore that
+  needs a missing ``shard_<r>.msgpack`` fails with an actionable error;
+* per-host sharded save + partial-read restore onto a *reshaped* mesh
+  (different axis split over 8 ``--xla_force_host_platform_device_count``
+  devices) is bit-exact vs the monolithic restore path;
+* the 512-chip dry-run lowering path lands the joint ``fit_spec``
+  placement (``("pod","data")`` split across batch and seq at
+  ``batch < dp_size``).
+
+The test process legitimately runs ``FleetSupervisor.poll()`` in its
+wait loops: the decision procedure is a pure function of the shared
+files, so an extra (external) supervisor converges with the leader's —
+and keeps the rejoin handshake from racing survivors that finish early.
+
+Marked ``dist`` (and ``slow``): CI runs these in their own lane.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.dist.fault import FleetSupervisor
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# generous single-core CI slack on top of the protocol timeout: four jax
+# processes compete for the CPU, so wall-clock detection latency is
+# timeout_s + (scheduler noise + supervisor poll cadence), not timeout_s
+HB_TIMEOUT_S = 3.0
+DETECT_SLACK_S = 25.0
+
+
+def _env(**extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)  # identical device topology in every proc
+    env.update(extra)
+    return env
+
+
+def _train_cmd(coord, rank, *, steps, world, step_delay=0.0):
+    return [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", "qwen2.5-3b", "--reduced",
+        "--steps", str(steps), "--seq-len", "32", "--global-batch", "2",
+        "--steps-per-epoch", "4",
+        "--ckpt-dir", os.path.join(coord, "ckpt"), "--ckpt-every", "5",
+        "--coord-dir", coord, "--world-size", str(world), "--rank", str(rank),
+        "--hb-interval", "0.2", "--hb-timeout", str(HB_TIMEOUT_S),
+        # a rejoined rank recompiles while its peers are already
+        # stepping: the leader's commit must tolerate that skew
+        "--commit-timeout", "30", "--rejoin-timeout", "300",
+        "--step-delay", str(step_delay),
+    ]
+
+
+def _spawn(cmd, log_path):
+    with open(log_path, "w") as log:
+        return subprocess.Popen(
+            cmd, env=_env(), stdout=log, stderr=subprocess.STDOUT
+        )
+
+
+def _tail(log_path, n=2000):
+    try:
+        with open(log_path) as f:
+            return f.read()[-n:]
+    except OSError:
+        return "<no log>"
+
+
+def _read_losses(path):
+    """step → loss from an append-only jsonl log; steps replayed after a
+    restart appear twice and the LAST occurrence wins."""
+    out = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rec = json.loads(line)
+                out[rec["step"]] = rec["loss"]
+    return out
+
+
+def _wait_for(cond, timeout_s, what, poll_s=0.25, on_poll=None):
+    deadline = time.monotonic() + timeout_s
+    while True:
+        if cond():
+            return
+        if time.monotonic() > deadline:
+            raise AssertionError(f"timed out waiting for {what}")
+        if on_poll is not None:
+            on_poll()
+        time.sleep(poll_s)
+
+
+def _membership(coord):
+    try:
+        with open(os.path.join(coord, "membership.json")) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _loss_lines(coord, rank):
+    path = os.path.join(coord, "loss", f"rank_{rank:05d}.jsonl")
+    if not os.path.exists(path):
+        return 0
+    with open(path) as f:
+        return sum(1 for _ in f)
+
+
+def test_chaos_kill_evict_rejoin_loss_parity(tmp_path):
+    """SIGKILL a live rank mid-step: eviction within the heartbeat
+    timeout, survivors restart resharded from the last committed
+    checkpoint, a relaunched rank rejoins via un-evict, and every
+    rank's final trajectory matches an uninterrupted run — exactly."""
+    steps, world, victim = 40, 4, 2
+    coord = str(tmp_path / "fleet")
+    ref = str(tmp_path / "ref")
+    os.makedirs(coord)
+    os.makedirs(ref)
+
+    # uninterrupted reference first (alone on the machine: fast, and its
+    # losses are what the chaotic fleet must reproduce bit-for-bit)
+    ref_log = str(tmp_path / "ref.log")
+    rc = _spawn(_train_cmd(ref, 0, steps=steps, world=1), ref_log).wait(
+        timeout=600
+    )
+    assert rc == 0, _tail(ref_log)
+    ref_losses = _read_losses(os.path.join(ref, "loss", "rank_00000.jsonl"))
+    assert sorted(ref_losses) == list(range(steps))
+
+    procs = {
+        r: _spawn(
+            _train_cmd(coord, r, steps=steps, world=world, step_delay=0.2),
+            str(tmp_path / f"rank{r}.log"),
+        )
+        for r in range(world)
+    }
+    sup = FleetSupervisor(coord, world, timeout_s=HB_TIMEOUT_S)
+    admitted = {}
+    try:
+        # let the fleet get past its first committed checkpoint so the
+        # survivors have something to restart from, then strike
+        _wait_for(
+            lambda: _loss_lines(coord, victim) >= 8
+            and ckpt_lib.list_steps(os.path.join(coord, "ckpt")),
+            timeout_s=300,
+            what="fleet progress past the first committed checkpoint",
+        )
+        procs[victim].send_signal(signal.SIGKILL)
+        procs[victim].wait(timeout=30)
+        t_kill = time.monotonic()
+
+        _wait_for(
+            lambda: victim in _membership(coord).get("evicted", []),
+            timeout_s=HB_TIMEOUT_S + DETECT_SLACK_S,
+            what=f"supervisor evicting rank {victim}",
+            on_poll=sup.poll,
+        )
+        detect_s = time.monotonic() - t_kill
+        assert detect_s <= HB_TIMEOUT_S + DETECT_SLACK_S
+
+        # relaunch the dead rank: same command, fresh process. It finds
+        # itself evicted, files a rejoin request, and waits for the
+        # supervisor to re-admit it.
+        procs[victim] = _spawn(
+            _train_cmd(coord, victim, steps=steps, world=world, step_delay=0.2),
+            str(tmp_path / f"rank{victim}_re.log"),
+        )
+        _wait_for(
+            lambda: victim in _membership(coord).get("active", []),
+            timeout_s=300,
+            what=f"rank {victim} re-admitted",
+            on_poll=sup.poll,
+        )
+        admitted = _membership(coord)
+
+        for r, p in procs.items():
+            log = tmp_path / (f"rank{r}_re.log" if r == victim else f"rank{r}.log")
+            assert p.wait(timeout=600) == 0, f"rank {r}: " + _tail(str(log))
+    finally:
+        for p in procs.values():
+            if p.poll() is None:
+                p.kill()
+
+    # the rejoin handshake bumped the epoch twice (evict, un-evict) and
+    # re-admitted the relaunched rank into the active set; completed
+    # ranks are exempt from eviction (orderly leave), so the final view
+    # is the full fleet again
+    assert admitted.get("epoch", 0) >= 2
+    assert victim in admitted.get("active", [])
+    final_view = _membership(coord)
+    assert sorted(final_view["active"]) == list(range(world))
+    assert final_view["evicted"] == []
+
+    # every rank — the relaunched victim included — reports completion
+    # at the same final loss
+    finals = []
+    for r in range(world):
+        with open(os.path.join(coord, "done", f"rank_{r:05d}.json")) as f:
+            done = json.load(f)
+        assert done["steps"] == steps
+        finals.append(done["final_loss"])
+    assert len(set(finals)) == 1
+
+    # loss parity: every rank's trajectory (kill, shrink, rejoin and
+    # all) equals the uninterrupted reference, step for step, bit for
+    # bit — including the relaunched victim's
+    for r in range(world):
+        losses = _read_losses(
+            os.path.join(coord, "loss", f"rank_{r:05d}.jsonl")
+        )
+        assert sorted(losses) == list(range(steps)), f"rank {r} gap"
+        assert losses == ref_losses, f"rank {r} trajectory diverged"
+
+    # the last committed checkpoint is per-host sharded across the FULL
+    # post-rejoin fleet: every rank owns pieces again
+    last = ckpt_lib.latest_step(os.path.join(coord, "ckpt"))
+    step_dir = os.path.join(coord, "ckpt", f"step_{last:08d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "sharded"
+    written = {
+        p["shard"]
+        for meta in manifest["keys"].values()
+        for p in meta["pieces"]
+    }
+    assert written == set(range(world))
+    for r in written:
+        assert os.path.exists(os.path.join(step_dir, f"shard_{r}.msgpack"))
+
+
+def _torn_tree():
+    # (6,4) and (6,) split 3 ways across shards 0/1/2; the scalar is
+    # whole-owned by shard 0 (crc32 pick) — the one key a partial
+    # restore can still serve after shard 2 is lost
+    return {
+        "w": np.arange(24, dtype=np.float32).reshape(6, 4),
+        "b": np.arange(6, dtype=np.float32),
+        "scale": np.float32(2.5),
+    }
+
+
+_TORN_WRITER = """
+import os, signal, sys
+import numpy as np
+sys.path.insert(0, {src!r})
+from repro.checkpoint import ckpt
+
+tree = {{
+    "w": np.arange(24, dtype=np.float32).reshape(6, 4),
+    "b": np.arange(6, dtype=np.float32),
+    "scale": np.float32(2.5),
+}}
+items, _ = ckpt._flatten(tree)
+items = [(k, np.asarray(v)) for k, v in items]
+ranks = [0, 1, 2]
+plan = ckpt.make_shard_plan(items, ranks)
+# shards 0 and 1 land; the manifest lands; then the process dies
+# before shard 2 and before COMMITTED — a torn step
+ckpt.write_shard({ckpt_dir!r}, 7, items, rank=0, plan=plan)
+ckpt.write_shard({ckpt_dir!r}, 7, items, rank=1, plan=plan)
+ckpt.write_sharded_manifest({ckpt_dir!r}, 7, items, plan=plan, ranks=ranks)
+print("WROTE", flush=True)
+os.kill(os.getpid(), signal.SIGKILL)
+"""
+
+
+def test_checkpoint_crash_atomicity(tmp_path):
+    """A writer killed between shard write and COMMITTED leaves a step
+    that restart discovery skips; a restore that needs the missing
+    shard is an actionable hard error, not a silently partial tree."""
+    ckpt_dir = str(tmp_path / "ckpt")
+    tree = _torn_tree()
+    like = {k: np.zeros_like(v) for k, v in tree.items()}
+
+    # a prior committed step the fleet can fall back to
+    ckpt_lib.save(ckpt_dir, 5, like)
+
+    script = _TORN_WRITER.format(src=SRC, ckpt_dir=ckpt_dir)
+    proc = subprocess.run(
+        [sys.executable, "-c", script], env=_env(),
+        capture_output=True, text=True, timeout=300,
+    )
+    assert "WROTE" in proc.stdout, proc.stdout + proc.stderr
+    assert proc.returncode == -signal.SIGKILL
+
+    step_dir = os.path.join(ckpt_dir, "step_00000007")
+    assert os.path.isdir(step_dir), "the torn step must exist on disk"
+    assert not os.path.exists(os.path.join(step_dir, "COMMITTED"))
+    # restart discovery skips the torn step and falls back
+    assert ckpt_lib.list_steps(ckpt_dir) == [5]
+    assert ckpt_lib.latest_step(ckpt_dir) == 5
+
+    # the leader's commit cannot complete either: shard 2 never landed
+    with pytest.raises(TimeoutError, match="missing shards"):
+        ckpt_lib.commit_sharded(ckpt_dir, 7, timeout_s=0.5)
+
+    # forcing a restore of the torn step: needing the missing shard is
+    # a hard, actionable error naming the lost file
+    with pytest.raises(ckpt_lib.MissingShardError, match="shard_2.msgpack"):
+        ckpt_lib.restore(ckpt_dir, 7, like)
+
+    # ...but keys whose pieces avoid the dead shard partial-restore fine
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    safe = [
+        k for k, meta in manifest["keys"].items()
+        if all(p["shard"] != 2 for p in meta["pieces"])
+    ]
+    assert safe == ["['scale']"]
+    partial = ckpt_lib.restore(ckpt_dir, 7, {"scale": like["scale"]})
+    np.testing.assert_array_equal(np.asarray(partial["scale"]), tree["scale"])
+
+    # the repaired save (shard 2 written, commit retried) becomes
+    # visible to discovery and restores in full
+    items, _ = ckpt_lib._flatten(tree)
+    items = [(k, np.asarray(v)) for k, v in items]
+    plan = ckpt_lib.make_shard_plan(items, [0, 1, 2])
+    ckpt_lib.write_shard(ckpt_dir, 7, items, rank=2, plan=plan)
+    ckpt_lib.commit_sharded(ckpt_dir, 7, timeout_s=5)
+    assert ckpt_lib.latest_step(ckpt_dir) == 7
+    full = ckpt_lib.restore(ckpt_dir, 7, like)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(full[k]), tree[k])
+
+
+_RESHAPE_SCRIPT = """
+import json, os, sys
+sys.path.insert(0, {src!r})
+import jax
+import numpy as np
+from repro.checkpoint import ckpt
+from repro.configs.registry import get_config
+from repro.dist import sharding as shd
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as lm
+
+out = {{}}
+cfg = get_config("qwen2.5-3b").reduced()
+assert jax.device_count() == 8, jax.device_count()
+
+# ---- writer: params live on a (data=2, model=4) mesh; 4 "hosts" of 2
+# devices each write their own shard under the addressable-shards plan
+mesh_w = make_host_mesh(2, 4)
+a_params, _ = steps_lib.abstract_state(cfg)
+p_sh_w = shd.param_shardings(mesh_w, a_params)
+with jax.set_mesh(mesh_w):
+    params = jax.jit(lambda r: lm.init_params(cfg, r), out_shardings=p_sh_w)(
+        jax.random.PRNGKey(0)
+    )
+
+flat, _ = jax.tree_util.tree_flatten_with_path(params)
+items = [
+    (jax.tree_util.keystr(k), np.asarray(jax.device_get(v))) for k, v in flat
+]
+sflat, _ = jax.tree_util.tree_flatten_with_path(shd.param_specs(a_params))
+specs = [v for _, v in sflat]
+ranks = [0, 1, 2, 3]
+plan = ckpt.plan_from_specs(items, specs, dict(mesh_w.shape), ranks)
+ckpt.validate_plan(plan, {{k: v.shape for k, v in items}})
+
+sharded_dir = {sharded_dir!r}
+mono_dir = {mono_dir!r}
+for r in ranks:
+    ckpt.write_shard(sharded_dir, 3, items, rank=r, plan=plan)
+ckpt.write_sharded_manifest(sharded_dir, 3, items, plan=plan, ranks=ranks)
+ckpt.commit_sharded(sharded_dir, 3, timeout_s=5)
+ckpt.save(mono_dir, 3, params)
+
+manifest = json.load(
+    open(os.path.join(sharded_dir, "step_00000003", "manifest.json"))
+)
+out["shards_used"] = sorted(
+    {{p["shard"] for m in manifest["keys"].values() for p in m["pieces"]}}
+)
+
+# ---- reader: a RESHAPED mesh (data=4, model=2) — different axis split,
+# different per-device slices; restore must be bit-exact anyway
+mesh_r = make_host_mesh(4, 2)
+p_sh_r = shd.param_shardings(mesh_r, a_params)
+like = jax.tree.map(lambda a: np.zeros(a.shape, a.dtype), a_params)
+got_sharded = ckpt.restore(sharded_dir, 3, like, shardings=p_sh_r)
+got_mono = ckpt.restore(mono_dir, 3, like, shardings=p_sh_r)
+
+def same(a, b):
+    return bool(
+        np.array_equal(
+            np.asarray(jax.device_get(a)), np.asarray(jax.device_get(b))
+        )
+    )
+
+out["bit_exact"] = all(
+    jax.tree.leaves(jax.tree.map(same, got_sharded, got_mono))
+)
+out["reader_sharding_ok"] = all(
+    jax.tree.leaves(
+        jax.tree.map(lambda g, s: g.sharding == s, got_sharded, p_sh_r)
+    )
+)
+
+# ---- partial read: restore one top-level subtree whose pieces span a
+# strict subset of the shards, with an UNNEEDED shard file hidden —
+# proving only the covering shards are read
+by_head = {{}}
+for key, meta in manifest["keys"].items():
+    head = key.split("]")[0] + "]"
+    by_head.setdefault(head, set()).update(p["shard"] for p in meta["pieces"])
+head, needed = min(
+    ((h, s) for h, s in by_head.items() if len(s) < len(ranks)),
+    key=lambda kv: len(kv[1]),
+)
+sub_key = head[2:-2]  # "['embed']" -> "embed"
+unneeded = sorted(set(ranks) - needed)[0]
+victim = os.path.join(
+    sharded_dir, "step_00000003", f"shard_{{unneeded}}.msgpack"
+)
+os.rename(victim, victim + ".hidden")
+sub = ckpt.restore(
+    sharded_dir, 3, {{sub_key: like[sub_key]}},
+    shardings={{sub_key: p_sh_r[sub_key]}},
+)
+out["partial_subtree"] = sub_key
+out["partial_bit_exact"] = all(
+    jax.tree.leaves(jax.tree.map(same, sub[sub_key], got_mono[sub_key]))
+)
+# the FULL restore does need the hidden shard: actionable hard error
+try:
+    ckpt.restore(sharded_dir, 3, like, shardings=p_sh_r)
+    out["missing_shard_detected"] = False
+except ckpt.MissingShardError:
+    out["missing_shard_detected"] = True
+print("RESULT " + json.dumps(out))
+"""
+
+
+def test_sharded_restore_reshaped_mesh_bit_exact(tmp_path):
+    """Per-host sharded save on a (2,4) mesh, partial-read restore onto
+    a reshaped (4,2) mesh: bit-exact vs the monolithic path, asserted
+    inside a real 8-device subprocess."""
+    script = _RESHAPE_SCRIPT.format(
+        src=SRC,
+        sharded_dir=str(tmp_path / "sharded"),
+        mono_dir=str(tmp_path / "mono"),
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        env=_env(XLA_FLAGS="--xla_force_host_platform_device_count=8"),
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    line = next(
+        ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT ")
+    )
+    out = json.loads(line[len("RESULT "):])
+    assert out["shards_used"] == [0, 1, 2, 3]
+    assert out["bit_exact"]
+    assert out["reader_sharding_ok"]
+    assert out["partial_bit_exact"], out
+    assert out["missing_shard_detected"]
+
+
+def test_dryrun_joint_fit_spec_placement():
+    """The 512-chip multi-pod lowering path lands the JOINT batch split
+    for the tight-batch train cell: batch 8 < dp_size 32, so ``pod``
+    (2 | 8) stays on the batch dim and ``data`` (16) relocates to seq."""
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", "qwen2.5-3b", "--shape", "train_tight",
+            "--mesh", "multi", "--placements-only",
+        ],
+        env=_env(), capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    payload = json.loads(
+        [ln for ln in proc.stdout.splitlines() if ln.startswith("{")][-1]
+    )
+    assert payload["inputs"]["['tokens']"] == "PartitionSpec('pod', 'data')"
+    assert payload["inputs"]["['targets']"] == "PartitionSpec('pod', 'data')"
