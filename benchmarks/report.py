@@ -50,18 +50,13 @@ def dryrun_table():
                     f"{k}×{v['count']}"
                     for k, v in top
                 )
+                fl = r.get("cost", {}).get("flops", 0) / 1e9
+                ar = mem.get("argument_bytes", 0) / dev / 2**30
+                tm = mem.get("temp_bytes", 0) / 2**30
+                w = r.get("collective_wire_bytes", 0) / 2**30
                 lines.append(
-                    "| {a} | {s} | {m} | {st} | {fl:.1f} | {ar:.2f} | {tm:.2f} | {w:.3f} | {tp} |".format(
-                        a=arch,
-                        s=shape,
-                        m=mesh,
-                        st=r["status"],
-                        fl=r.get("cost", {}).get("flops", 0) / 1e9,
-                        ar=mem.get("argument_bytes", 0) / dev / 2**30,
-                        tm=mem.get("temp_bytes", 0) / 2**30,
-                        w=r.get("collective_wire_bytes", 0) / 2**30,
-                        tp=tops,
-                    )
+                    f"| {arch} | {shape} | {mesh} | {r['status']} | "
+                    f"{fl:.1f} | {ar:.2f} | {tm:.2f} | {w:.3f} | {tops} |"
                 )
     return "\n".join(lines)
 
@@ -80,12 +75,10 @@ def roofline_table(policy="ssprop"):
                 lines.append(f"| {arch} | {shape} | — | — | — | — | {row['status']} | | |")
                 continue
             lines.append(
-                "| {a} | {s} | {c:.4f} | {m:.4f} | {mh:.4f} | {co:.4f} | {d} | {f:.3f} | {u:.2f} |".format(
-                    a=arch, s=shape, c=row["compute_s"], m=row["memory_s"],
-                    mh=row["memory_hlo_s"], co=row["collective_s"],
-                    d=row["dominant"], f=row["roofline_fraction"],
-                    u=row["useful_ratio"],
-                )
+                f"| {arch} | {shape} | {row['compute_s']:.4f} | "
+                f"{row['memory_s']:.4f} | {row['memory_hlo_s']:.4f} | "
+                f"{row['collective_s']:.4f} | {row['dominant']} | "
+                f"{row['roofline_fraction']:.3f} | {row['useful_ratio']:.2f} |"
             )
     return "\n".join(lines)
 
@@ -104,13 +97,12 @@ def variants_table(cells):
                 continue
             row = R.roofline_row(arch, shape, policy=pol)
             comp = f"{row['compute_s']:.4f}" if row.get("status") == "ok" else "—"
+            co = r.get("collective_wire_bytes", 0) / 50e9
+            t = r.get("memory", {}).get("temp_bytes", 0) / 2**30
+            w = r.get("collective_wire_bytes", 0) / 2**30
             lines.append(
-                "| {a} × {s} | {p} | {c} | {co:.4f} | {t:.2f} | {w:.3f} |".format(
-                    a=arch, s=shape, p=pol, c=comp,
-                    co=r.get("collective_wire_bytes", 0) / 50e9,
-                    t=r.get("memory", {}).get("temp_bytes", 0) / 2**30,
-                    w=r.get("collective_wire_bytes", 0) / 2**30,
-                )
+                f"| {arch} × {shape} | {pol} | {comp} | "
+                f"{co:.4f} | {t:.2f} | {w:.3f} |"
             )
     return "\n".join(lines)
 

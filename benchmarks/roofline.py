@@ -202,6 +202,48 @@ def model_flops(cfg, shape) -> float:
     return 2.0 * n * shape.global_batch  # decode: one token per request
 
 
+def lm_site_rows(arch, shape_name, policy_name="ssprop"):
+    """Jaxpr-derived per-site projection FLOPs for one (arch, shape).
+
+    Each row carries the plain forward cost and the *measured* backward
+    contraction interval from tracing the site's actual backward program
+    (``repro.analysis.savings``) — the per-site replacement for the 6ND
+    ``model_flops`` estimate. The trailing ``lm_site_total`` row sums
+    ``count * (fwd + bwd)`` and reports the ratio against 6ND so the
+    aggregate drift of the estimate is visible per cell.
+    """
+    from repro.analysis import savings
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if policy_name in _CONV_POLICIES:
+        policy = _CONV_POLICIES[policy_name]()
+    else:  # the dryrun/probe policy names ("ssprop", "ssprop_tp", ...)
+        policy = tpu_default(0.8)
+    rows = []
+    tot_fwd = tot_lo = tot_hi = 0
+    for site, count, fwd, lo, hi in savings.lm_site_flops(
+        cfg, policy, batch=shape.global_batch, seq=shape.seq_len
+    ):
+        tot_fwd += count * fwd
+        tot_lo += count * lo
+        tot_hi += count * hi
+        rows.append({
+            "arch": arch, "shape": shape_name, "policy": policy_name,
+            "kind": "lm_site", "site": site, "count": count,
+            "fwd_flops": fwd, "bwd_flops_lo": lo, "bwd_flops_hi": hi,
+        })
+    mf = model_flops(cfg, shape)
+    mid = tot_fwd + (tot_lo + tot_hi) / 2
+    rows.append({
+        "arch": arch, "shape": shape_name, "policy": policy_name,
+        "kind": "lm_site_total", "fwd_flops": tot_fwd,
+        "bwd_flops_lo": tot_lo, "bwd_flops_hi": tot_hi,
+        "model_flops_6nd": mf, "ratio_vs_6nd": mid / mf,
+    })
+    return rows
+
+
 _CONV_POLICIES = {
     "dense": lambda: SsPropPolicy(0.0),
     "ssprop_channel": lambda: paper_default(0.8),
@@ -510,9 +552,42 @@ def main():
                     help="emit fused-vs-materializing im2col A/B rows "
                     "(asserts fused bytes <= materializing) plus one "
                     "measured wall-clock cell")
+    ap.add_argument("--lm-sites", action="store_true",
+                    help="emit jaxpr-derived per-site projection rows "
+                    "(measured backward interval, replacing the 6ND "
+                    "estimate) for the selected cell(s)")
     ap.add_argument("--json", default="")
     args = ap.parse_args()
     rows = []
+    if args.lm_sites:
+        cells = (
+            [(a, s) for a in ARCH_IDS for s in SHAPES]
+            if args.all
+            else [(args.arch, args.shape)]
+        )
+        for a, s in cells:
+            for row in lm_site_rows(a, s, args.policy):
+                rows.append(row)
+                if row["kind"] == "lm_site":
+                    print(
+                        f"{a:28s} {s:12s} {row['site']:24s} "
+                        f"x{row['count']:<3d} fwd={row['fwd_flops']:.3e} "
+                        f"bwd=[{row['bwd_flops_lo']:.3e}, "
+                        f"{row['bwd_flops_hi']:.3e}]"
+                    )
+                else:
+                    print(
+                        f"{a:28s} {s:12s} {'TOTAL':24s}      "
+                        f"fwd={row['fwd_flops']:.3e} "
+                        f"bwd=[{row['bwd_flops_lo']:.3e}, "
+                        f"{row['bwd_flops_hi']:.3e}] "
+                        f"6ND={row['model_flops_6nd']:.3e} "
+                        f"ratio={row['ratio_vs_6nd']:.3f}"
+                    )
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(rows, f, indent=1)
+        return
     if args.conv or args.fused:
         if args.conv:
             for row in iter_conv_rows():

@@ -118,7 +118,7 @@ def bench_arch(arch: str) -> dict:
         )
         lock_steps += res["steps"]
         lock_s += res["prefill_s"] + res["decode_s"]
-        for r, toks in zip(wave, res["tokens"]):
+        for r, toks in zip(wave, res["tokens"], strict=True):
             if not np.array_equal(out[r.rid], toks):
                 raise RuntimeError(
                     f"{arch} rid={r.rid}: continuous != lockstep greedy output"
@@ -371,7 +371,7 @@ def bench_sampled(arch: str) -> dict:
             else None,
             sampling=[r.sampling for r in wave],
         )
-        for r, toks in zip(wave, res["tokens"]):
+        for r, toks in zip(wave, res["tokens"], strict=True):
             if not np.array_equal(out[r.rid], toks):
                 raise RuntimeError(
                     f"{arch} rid={r.rid}: continuous != lockstep sampled output"

@@ -1,0 +1,31 @@
+"""Static program auditor: jaxpr walks, lints, retrace budgets, Pallas checks.
+
+``repro.analysis`` never executes model code — it traces (abstract
+values only), walks the resulting ClosedJaxprs, and evaluates kernel
+specs. Entry points:
+
+* :mod:`~repro.analysis.savings` — honest-savings audit: jaxpr-measured
+  backward FLOPs vs the analytic tables in ``core/flops.py``.
+* :mod:`~repro.analysis.lints` — dtype-leak / host-transfer / dead-code
+  lints over walker censuses.
+* :mod:`~repro.analysis.retrace` — compiled-executable budgets for
+  train programs and the serve engine.
+* :mod:`~repro.analysis.pallas_check` — in-bounds, divisibility, VMEM
+  and traffic checks over the kernel specs.
+* ``launch/analyze.py`` — the CLI that runs all of it per config.
+"""
+from repro.analysis import jaxpr_walk, lints, pallas_check, retrace, savings
+from repro.analysis.report import ERROR, INFO, WARN, Finding, Report
+
+__all__ = [
+    "ERROR",
+    "INFO",
+    "WARN",
+    "Finding",
+    "Report",
+    "jaxpr_walk",
+    "lints",
+    "pallas_check",
+    "retrace",
+    "savings",
+]

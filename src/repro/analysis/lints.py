@@ -1,0 +1,99 @@
+"""Program lints over walker censuses.
+
+Two scopes:
+
+* :func:`lint_backward_counts` — per-site backward probes. Checks the
+  numerics contract (no f32 contraction inside a ``bwd_dtype="bfloat16"``
+  region) and that no host callback hides in the backward.
+* :func:`lint_step_counts` — whole jitted train/serve step programs.
+  Adds the transfer check plus dead-code findings: contraction FLOPs
+  buried in equations nothing demands (a forgotten aux output, a branch
+  XLA can't DCE because of effects) and ``while`` loops the FLOPs bound
+  cannot see through.
+
+Dead FLOPs are a *warning*, not an error: ``jax.vjp`` probes legitimately
+drag a dead forward half along, and step functions may keep debug
+outputs on purpose. Callbacks and dtype leaks are errors — both violate
+documented contracts (DESIGN.md: jitted steps never touch the host;
+``bwd_dtype`` regions compute every contraction in bf16).
+"""
+from __future__ import annotations
+
+from repro.analysis import jaxpr_walk
+from repro.analysis.report import ERROR, INFO, Report, WARN
+from repro.core.policy import SsPropPolicy
+
+
+def lint_backward_counts(
+    report: Report,
+    site: str,
+    counts: jaxpr_walk.Counts,
+    policy: SsPropPolicy,
+) -> None:
+    """Dtype-leak + host-transfer lints on one backward probe."""
+    if policy.bwd_dtype == "bfloat16":
+        for c in counts.contractions:
+            leaked = [d for d in c.operand_dtypes if d == "float32"]
+            if leaked:
+                report.add(
+                    "dtype",
+                    ERROR,
+                    site,
+                    f"f32 contraction inside bwd_dtype=bfloat16 region: "
+                    f"{c.prim} operands {c.operand_dtypes} at {c.path}",
+                    prim=c.prim,
+                    operand_dtypes=list(c.operand_dtypes),
+                    path=c.path,
+                )
+    for path in counts.callbacks:
+        report.add(
+            "transfer",
+            ERROR,
+            site,
+            f"host callback inside jitted backward: {path}",
+            path=path,
+        )
+
+
+def lint_step_counts(
+    report: Report,
+    name: str,
+    counts: jaxpr_walk.Counts,
+) -> None:
+    """Transfer + dead-code + loop lints on one full jitted step."""
+    for path in counts.callbacks:
+        report.add(
+            "transfer",
+            ERROR,
+            name,
+            f"host callback inside jitted step: {path}",
+            path=path,
+        )
+    if counts.dead_flops:
+        report.add(
+            "dead",
+            WARN,
+            name,
+            f"{counts.dead_flops:,} contraction FLOPs in equations no "
+            f"output demands ({counts.dead_eqns} dead eqns) — forgotten "
+            "aux output or undead debug branch?",
+            dead_flops=counts.dead_flops,
+            dead_eqns=counts.dead_eqns,
+        )
+    elif counts.dead_eqns:
+        report.add(
+            "dead",
+            INFO,
+            name,
+            f"{counts.dead_eqns} dead equations (no contraction FLOPs)",
+            dead_eqns=counts.dead_eqns,
+        )
+    if counts.unbounded_loops:
+        report.add(
+            "dead",
+            WARN,
+            name,
+            f"{counts.unbounded_loops} while loop(s): FLOPs bound counts "
+            "one trip per loop",
+            unbounded_loops=counts.unbounded_loops,
+        )

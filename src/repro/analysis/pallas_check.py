@@ -1,0 +1,318 @@
+"""Static Pallas kernel checks over :mod:`repro.kernels.specs` objects.
+
+The kernels build their ``pl.pallas_call`` grids from the same
+:class:`~repro.kernels.specs.KernelSpec` objects this module audits, so
+the checks below hold for the launched kernels by construction:
+
+* **in-bounds proof** — every BlockSpec index map is evaluated over the
+  *full* grid (with representative scalar-prefetch arrays at their
+  extreme legal values: the maps are monotone in the prefetch entries,
+  so min/max candidates bound every legal launch) and each returned
+  block index must address a real block of the operand.
+* **divisibility** — operand shapes must be whole multiples of their
+  block shapes, the contract ``docs/kernels.md`` states (wrappers pad
+  before launching; a ragged operand would silently read Pallas'
+  zero-fill).
+* **VMEM footprint** — resident blocks are double-buffered on TPU, so
+  the estimate is ``2 * Σ block_bytes + scratch``; it must fit the
+  per-platform budget (:data:`VMEM_BUDGETS`).
+* **traffic emulation** — the grid is swept sequentially (last axis
+  fastest, TPU order) with revisit elision: an operand whose index map
+  returns the same block on consecutive steps is fetched once. The
+  per-operand totals are cross-checked against the named components of
+  :func:`repro.core.flops.conv_backward_bytes_breakdown` — the bytes
+  model that *routes* the engine (fused vs canonical) — so the numbers
+  that pick the kernel are provably the numbers the kernel moves.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+
+import numpy as np
+
+from repro.analysis.report import ERROR, INFO, Report
+from repro.core import flops as ftab
+from repro.core.policy import SsPropPolicy
+from repro.kernels import specs
+from repro.kernels.specs import BlockSpecInfo, KernelSpec
+
+#: double-buffered VMEM budget per platform, bytes.
+VMEM_BUDGETS = {"tpu": 16 * 2**20, "interpret": 1 << 62}
+
+
+def _nblocks(info: BlockSpecInfo) -> tuple:
+    return tuple(
+        -(-dim // blk)
+        for dim, blk in zip(info.array_shape, info.block_shape, strict=True)
+    )
+
+
+def _eval_map(info: BlockSpecInfo, point, prefetch) -> tuple:
+    args = point if prefetch is None else (*point, prefetch)
+    return tuple(int(v) for v in info.index_map(*args))
+
+
+# ----------------------------------------------------------------------
+# structural checks
+# ----------------------------------------------------------------------
+
+
+def check_divisibility(report: Report, spec: KernelSpec) -> None:
+    for info in (*spec.in_specs, *spec.out_specs):
+        ragged = [
+            (d, blk)
+            for d, blk in zip(info.array_shape, info.block_shape, strict=True)
+            if d % blk
+        ]
+        if ragged:
+            report.add(
+                "pallas",
+                ERROR,
+                f"{spec.name}/{info.name}",
+                f"operand {info.array_shape} not divisible by block "
+                f"{info.block_shape} (docs/kernels.md contract: wrappers "
+                "pad before launch)",
+                array_shape=list(info.array_shape),
+                block_shape=list(info.block_shape),
+            )
+
+
+def check_in_bounds(
+    report: Report,
+    spec: KernelSpec,
+    prefetch_candidates=(None,),
+) -> None:
+    """Prove every index map addresses a real block over the full grid."""
+    for info in (*spec.in_specs, *spec.out_specs):
+        limit = _nblocks(info)
+        bad = None
+        for prefetch in prefetch_candidates:
+            for point in itertools.product(*(range(g) for g in spec.grid)):
+                idx = _eval_map(info, point, prefetch)
+                if any(not 0 <= v < lim for v, lim in zip(idx, limit, strict=True)):
+                    bad = (point, idx)
+                    break
+            if bad:
+                break
+        if bad:
+            report.add(
+                "pallas",
+                ERROR,
+                f"{spec.name}/{info.name}",
+                f"index map out of bounds at grid {bad[0]}: block index "
+                f"{bad[1]}, valid < {limit}",
+                grid_point=list(bad[0]),
+                block_index=list(bad[1]),
+                limit=list(limit),
+            )
+        else:
+            report.add(
+                "pallas",
+                INFO,
+                f"{spec.name}/{info.name}",
+                f"in-bounds over {spec.grid_size} grid steps "
+                f"x {len(prefetch_candidates)} prefetch candidate(s)",
+                grid=list(spec.grid),
+            )
+
+
+def vmem_bytes(spec: KernelSpec) -> int:
+    """Double-buffered resident-block + scratch VMEM estimate."""
+    blocks = sum(
+        i.block_elems * i.itemsize for i in (*spec.in_specs, *spec.out_specs)
+    )
+    scratch = sum(4 * math.prod(s) for s in spec.scratch)
+    return 2 * blocks + scratch
+
+
+def check_vmem(
+    report: Report, spec: KernelSpec, *, platform: str = "tpu"
+) -> None:
+    budget = VMEM_BUDGETS[platform]
+    used = vmem_bytes(spec)
+    sev = ERROR if used > budget else INFO
+    report.add(
+        "pallas",
+        sev,
+        spec.name,
+        f"VMEM estimate {used:,} B vs {platform} budget {budget:,} B",
+        vmem_bytes=used,
+        budget=budget,
+        platform=platform,
+    )
+
+
+# ----------------------------------------------------------------------
+# traffic emulation
+# ----------------------------------------------------------------------
+
+
+def emulate_traffic(spec: KernelSpec, prefetch=None) -> dict:
+    """Per-operand element traffic under sequential-grid revisit elision.
+
+    Sweeps the grid in TPU order (last axis fastest); each operand is
+    (re)fetched — or each output block flushed — whenever its index map
+    output differs from the previous step's.
+    """
+    totals = {}
+    for info in (*spec.in_specs, *spec.out_specs):
+        prev = None
+        fetches = 0
+        for point in itertools.product(*(range(g) for g in spec.grid)):
+            idx = _eval_map(info, point, prefetch)
+            if idx != prev:
+                fetches += 1
+                prev = idx
+        totals[info.name] = fetches * info.block_elems
+    return totals
+
+
+# ----------------------------------------------------------------------
+# per-site audits (fused conv + paged attention)
+# ----------------------------------------------------------------------
+
+
+def conv_fused_site_specs(
+    bt: int,
+    h_out: int,
+    w_out: int,
+    c_in: int,
+    c_out: int,
+    k: int,
+    policy: SsPropPolicy,
+    *,
+    groups: int = 1,
+):
+    """The (dW, dX) fused kernel specs the engine would launch for one
+    conv site at the auditor's stride-1 probe geometry, plus the
+    balanced kept-block index array (sorted, groups covered evenly —
+    what the engine's per-group top-k produces)."""
+    bs = policy.block_size
+    c_pad = c_out + (-c_out) % bs
+    nb = c_pad // bs
+    kb = policy.keep_count(c_out)
+    bpg = nb // groups
+    per_g = max(kb // groups, 1)
+    idx = np.concatenate(
+        [g * bpg + np.arange(per_g) for g in range(groups)]
+    )[:kb].astype(np.int32)
+    geom = dict(
+        b=bt, h_pad=h_out + k - 1, w_pad=w_out + k - 1, groups=groups,
+        cg=c_in // groups, h_out=h_out, w_out=w_out, c_pad=c_pad,
+        kh_dim=k, kw_dim=k, stride=(1, 1), dilation=(1, 1), kb=kb,
+        block_size=bs,
+    )
+    return (
+        specs.conv_dw_fused_spec(**geom),
+        specs.conv_dx_fused_spec(**geom),
+        idx,
+    )
+
+
+def check_conv_fused_site(
+    report: Report,
+    site: str,
+    bt: int,
+    h_out: int,
+    w_out: int,
+    c_in: int,
+    c_out: int,
+    k: int,
+    policy: SsPropPolicy,
+    *,
+    groups: int = 1,
+    platform: str = "tpu",
+) -> None:
+    """Full kernel audit of one fused conv site: bounds, VMEM, traffic.
+
+    The traffic cross-check pins the fused kernel components of
+    ``conv_backward_bytes_breakdown`` to the emulated grid: exact for
+    every component except the dX cotangent stream, where the model
+    ignores the ``clip``-at-border revisit elision and so upper-bounds
+    the emulation by at most ``2*(K-1)^2`` collapsed fetches per
+    (image, kept block).
+    """
+    dw_spec, dx_spec, idx = conv_fused_site_specs(
+        bt, h_out, w_out, c_in, c_out, k, policy, groups=groups
+    )
+    nb = (c_out + (-c_out) % policy.block_size) // policy.block_size
+    lo = np.zeros_like(idx)
+    hi = np.full_like(idx, nb - 1)
+    for spec in (dw_spec, dx_spec):
+        check_divisibility(report, spec)
+        check_in_bounds(report, spec, prefetch_candidates=(lo, hi, idx))
+        check_vmem(report, spec, platform=platform)
+
+    parts = ftab.conv_backward_bytes_breakdown(
+        bt, h_out, w_out, c_in, c_out, k, policy, fused=True, groups=groups
+    )
+    dw_traffic = emulate_traffic(dw_spec, idx)
+    dx_traffic = emulate_traffic(dx_spec, idx)
+    exact = {
+        "dw.xg_rows": dw_traffic["xg"],
+        "dw.dy_panels": dw_traffic["dy2r"],
+        "dw.out_flush": dw_traffic["dw"],
+        "dx.w2k_fetch": dx_traffic["w2k"],
+        "dx.out_writes": dx_traffic["dxp"],
+    }
+    for key, measured in exact.items():
+        if measured != parts[key]:
+            report.add(
+                "pallas",
+                ERROR,
+                f"{site}:{key}",
+                f"traffic model {parts[key]:,} elems != emulated "
+                f"{measured:,}",
+                model=parts[key],
+                emulated=measured,
+            )
+    dy_model = parts["dx.dy_rows"]
+    dy_meas = dx_traffic["dy2r"]
+    bs = policy.block_size
+    slack = 2 * (k - 1) ** 2 * bt * len(idx) * w_out * bs
+    if not (dy_meas <= dy_model <= dy_meas + slack):
+        report.add(
+            "pallas",
+            ERROR,
+            f"{site}:dx.dy_rows",
+            f"traffic model {dy_model:,} outside [{dy_meas:,}, "
+            f"{dy_meas + slack:,}] (emulated + border-clip slack)",
+            model=dy_model,
+            emulated=dy_meas,
+            slack=slack,
+        )
+    report.add(
+        "pallas",
+        INFO,
+        site,
+        "fused kernel traffic cross-checked against bytes model "
+        f"({len(exact)} exact components, dy_rows within clip slack)",
+        model={k_: int(v) for k_, v in parts.items()},
+        emulated_dw={k_: int(v) for k_, v in dw_traffic.items()},
+        emulated_dx={k_: int(v) for k_, v in dx_traffic.items()},
+    )
+
+
+def check_paged_attention_site(
+    report: Report,
+    *,
+    b: int,
+    s: int,
+    h: int,
+    d: int,
+    n_pages: int,
+    bs_pg: int,
+    kvh: int,
+    nb: int,
+    platform: str = "tpu",
+) -> None:
+    """Audit the paged-attention launch geometry for one serve config."""
+    spec = specs.paged_attention_spec(
+        b=b, s=s, h=h, d=d, n_pages=n_pages, bs_pg=bs_pg, kvh=kvh, nb=nb
+    )
+    lo = np.zeros((b * nb,), np.int32)
+    hi = np.full((b * nb,), n_pages - 1, np.int32)
+    check_divisibility(report, spec)
+    check_in_bounds(report, spec, prefetch_candidates=(lo, hi))
+    check_vmem(report, spec, platform=platform)

@@ -1,0 +1,150 @@
+"""Retrace-budget checker: compiled-executable counts, statically.
+
+Every distinct (shape, static-arg) signature a jitted function sees is
+one XLA compile. Two surfaces in this repo are designed around a bounded
+jit cache, and this module enumerates their executables *without
+running anything*:
+
+* **Train** — a :class:`~repro.core.policy.PolicyProgram`'s per-step
+  site tables. ``Schedule.scale`` is bucket-quantized, so the distinct
+  tables over any run are a subset of the tables the bucket scales
+  produce; :func:`train_tables` enumerates exactly that candidate set
+  (``{0} ∪ {bucket/target}``) and deduplicates the resolved
+  :class:`SitePolicies`. The documented budget is
+  ``len(schedule.rate_buckets)`` (see ``core/schedulers.py``) — one
+  compiled train step per bucket, whatever the schedule's shape.
+* **Serve** — the engine's jit surface (``serve/engine.py``): the
+  target ``_step_fn`` compiles once per width in
+  ``ServeConfig.widths`` (the decode-width ladder, prefill chunk
+  included); a speculative drafter adds its own step at the catch-up
+  width (``prefill_chunk``) and the width-1 propose step; an
+  encoder-decoder adds one ``encode`` executable per plane. The
+  documented budget is :data:`SERVE_JIT_BUDGET` total executables —
+  past that, width-ladder "flexibility" is really a compile-time and
+  HBM (executable cache) regression.
+
+Both checks fail (error finding) when the static bound exceeds the
+budget; the enumeration itself is attached as an info finding so
+``--json`` consumers can see where the executables come from.
+"""
+from __future__ import annotations
+
+from collections.abc import Sequence
+
+from repro.analysis.report import ERROR, INFO, Report
+from repro.core.policy import PolicyProgram, SitePolicies
+
+#: documented ceiling on serve-engine executables (all planes summed).
+SERVE_JIT_BUDGET = 12
+
+
+# ----------------------------------------------------------------------
+# train
+# ----------------------------------------------------------------------
+
+
+def train_tables(
+    program: PolicyProgram,
+    sites: Sequence[str],
+    *,
+    depth: int | None = None,
+) -> list[SitePolicies]:
+    """Distinct per-step site tables the program can ever compile.
+
+    Candidate scales are ``{0}`` plus every ``bucket / target`` the
+    schedule's quantizer can emit; ``at_scale`` re-buckets per site, so
+    deduplicating the resulting tables gives the exact executable set —
+    typically far fewer than ``len(rate_buckets)`` for bar-like
+    schedules that only ever visit {off, peak}.
+    """
+    resolved = program.resolve(sites, depth=depth)
+    sched = program.schedule
+    scales = {0.0}
+    if sched.target > 0:
+        scales |= {min(b / sched.target, 1.0) for b in sched.rate_buckets}
+    seen: list[SitePolicies] = []
+    for s in sorted(scales):
+        table = resolved.at_scale(s)
+        if table not in seen:
+            seen.append(table)
+    return seen
+
+
+def check_train_retrace(
+    report: Report,
+    program: PolicyProgram,
+    sites: Sequence[str],
+    *,
+    depth: int | None = None,
+    budget: int | None = None,
+) -> int:
+    """Bound train-step executables; error when over budget."""
+    if budget is None:
+        budget = len(program.schedule.rate_buckets)
+    tables = train_tables(program, sites, depth=depth)
+    n = len(tables)
+    sev = ERROR if n > budget else INFO
+    report.add(
+        "retrace",
+        sev,
+        "train_step",
+        f"{n} distinct compiled step table(s) (budget {budget}: one per "
+        "schedule rate bucket)",
+        executables=n,
+        budget=budget,
+        rate_buckets=list(program.schedule.rate_buckets),
+    )
+    return n
+
+
+# ----------------------------------------------------------------------
+# serve
+# ----------------------------------------------------------------------
+
+
+def serve_executables(cfg, serve_cfg) -> dict[str, int]:
+    """Executable count per jitted engine function, from config alone.
+
+    Mirrors ``ServeEngine.__init__`` + ``_pick_width`` +
+    ``_draft_propose``: the target step sees every ladder width; the
+    drafter sees the catch-up width (``prefill_chunk``) and, for
+    ``spec_k > 1``, the width-1 propose step; encdec planes add one
+    encode each.
+    """
+    widths = serve_cfg.widths
+    out = {"_step_fn": len(widths)}
+    if serve_cfg.spec_k > 0:
+        draft_widths = {serve_cfg.prefill_chunk}
+        if serve_cfg.spec_k > 1:
+            draft_widths.add(1)
+        out["_draft_step_fn"] = len(draft_widths)
+    if cfg.family == "encdec":
+        out["_encode"] = 1
+        if serve_cfg.spec_k > 0:
+            out["_draft_encode"] = 1
+    return out
+
+
+def check_serve_retrace(
+    report: Report,
+    cfg,
+    serve_cfg,
+    *,
+    budget: int = SERVE_JIT_BUDGET,
+) -> int:
+    """Bound serve-engine executables; error when over budget."""
+    per_fn = serve_executables(cfg, serve_cfg)
+    total = sum(per_fn.values())
+    sev = ERROR if total > budget else INFO
+    report.add(
+        "retrace",
+        sev,
+        "serve_engine",
+        f"{total} executable(s) across {len(per_fn)} jit function(s) "
+        f"(budget {budget}); widths {list(serve_cfg.widths)}",
+        executables=total,
+        budget=budget,
+        per_fn=per_fn,
+        widths=list(serve_cfg.widths),
+    )
+    return total

@@ -30,13 +30,14 @@ on disk is a hard, actionable error — never a silently partial tree.
 """
 from __future__ import annotations
 
+from collections.abc import Sequence
 import dataclasses
 import json
 import os
 import shutil
 import threading
+from typing import Any
 import zlib
-from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,13 +47,13 @@ import numpy as np
 _COMMIT = "COMMITTED"
 
 
-def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+def _flatten(tree) -> tuple[list[tuple[str, Any]], Any]:
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     items = [(jax.tree_util.keystr(k), v) for k, v in flat]
     return items, treedef
 
 
-def _encode(arr: np.ndarray) -> Dict[str, Any]:
+def _encode(arr: np.ndarray) -> dict[str, Any]:
     return {
         "dtype": str(arr.dtype),
         "shape": list(arr.shape),
@@ -119,7 +120,7 @@ class AsyncCheckpointer:
         keep: int = 3,
         *,
         rank: int = 0,
-        ranks: Optional[Sequence[int]] = None,
+        ranks: Sequence[int] | None = None,
         commit_timeout_s: float = 60.0,
     ):
         self.ckpt_dir = ckpt_dir
@@ -127,9 +128,9 @@ class AsyncCheckpointer:
         self.rank = rank
         self.ranks = list(ranks) if ranks is not None else None
         self.commit_timeout_s = commit_timeout_s
-        self._thread: Optional[threading.Thread] = None
-        self.last_path: Optional[str] = None
-        self.last_error: Optional[BaseException] = None
+        self._thread: threading.Thread | None = None
+        self.last_path: str | None = None
+        self.last_error: BaseException | None = None
 
     def _sharded(self) -> bool:
         return self.ranks is not None and len(self.ranks) > 1
@@ -176,7 +177,7 @@ class AsyncCheckpointer:
 Saver = AsyncCheckpointer
 
 
-def list_steps(ckpt_dir: str) -> List[int]:
+def list_steps(ckpt_dir: str) -> list[int]:
     """Committed checkpoint steps, ascending."""
     if not os.path.isdir(ckpt_dir):
         return []
@@ -189,7 +190,7 @@ def list_steps(ckpt_dir: str) -> List[int]:
     return sorted(out)
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def latest_step(ckpt_dir: str) -> int | None:
     steps = list_steps(ckpt_dir)
     return steps[-1] if steps else None
 
@@ -205,13 +206,13 @@ class Piece:
     ``(start, stop)`` tuple covering the full rank of the array."""
 
     shard: int
-    index: Tuple[Tuple[int, int], ...]
+    index: tuple[tuple[int, int], ...]
 
-    def slices(self) -> Tuple[slice, ...]:
+    def slices(self) -> tuple[slice, ...]:
         return tuple(slice(s, e) for s, e in self.index)
 
 
-Plan = Dict[str, List[Piece]]
+Plan = dict[str, list[Piece]]
 
 
 def _owner(key: str, eligible: Sequence[int]) -> int:
@@ -260,14 +261,14 @@ def make_shard_plan(items, ranks: Sequence[int]) -> Plan:
 class _DictMesh:
     """Shape-only stand-in accepted by ``fit_spec`` (no devices)."""
 
-    def __init__(self, shape: Dict[str, int]):
+    def __init__(self, shape: dict[str, int]):
         self.shape = dict(shape)
 
 
 def plan_from_specs(
     items,
     specs,
-    mesh_shape: Dict[str, int],
+    mesh_shape: dict[str, int],
     ranks: Sequence[int],
 ) -> Plan:
     """Addressable-shards addressing: the pieces each host's devices own.
@@ -300,27 +301,27 @@ def plan_from_specs(
         )
     per_host = n_dev // n_hosts
 
-    def device_coords(d: int) -> Dict[str, int]:
+    def device_coords(d: int) -> dict[str, int]:
         out = {}
         rem = d
-        for name, size in zip(reversed(axis_names), reversed(sizes)):
+        for name, size in zip(reversed(axis_names), reversed(sizes), strict=True):
             out[name] = rem % size
             rem //= size
         return out
 
     mesh = _DictMesh(mesh_shape)
     plan: Plan = {}
-    for (key, leaf), spec in zip(items, specs):
+    for (key, leaf), spec in zip(items, specs, strict=True):
         shape = tuple(int(d) for d in leaf.shape)
         spec = fit_spec(spec, shape, mesh)
         entries = list(spec) + [None] * (len(shape) - len(spec))
         # block → set of hosts whose devices hold it
-        holders: Dict[Tuple[Tuple[int, int], ...], set] = {}
+        holders: dict[tuple[tuple[int, int], ...], set] = {}
         for d in range(n_dev):
             coords = device_coords(d)
             host = ranks[d // per_host]
             idx = []
-            for dim, entry in zip(shape, entries):
+            for dim, entry in zip(shape, entries, strict=True):
                 if entry is None:
                     idx.append((0, dim))
                     continue
@@ -339,7 +340,7 @@ def plan_from_specs(
     return plan
 
 
-def validate_plan(plan: Plan, shapes: Dict[str, Sequence[int]]) -> None:
+def validate_plan(plan: Plan, shapes: dict[str, Sequence[int]]) -> None:
     """Assert the plan partitions every key: pieces pairwise disjoint
     and their volumes sum to the full array (⇒ no gap, no overlap)."""
     for key, shape in shapes.items():
@@ -354,7 +355,7 @@ def validate_plan(plan: Plan, shapes: Dict[str, Sequence[int]]) -> None:
             if len(p.index) != len(shape):
                 raise AssertionError(f"{key}: piece rank mismatch {p}")
             v = 1
-            for (s, e), d in zip(p.index, shape):
+            for (s, e), d in zip(p.index, shape, strict=True):
                 if not (0 <= s <= e <= d):
                     raise AssertionError(f"{key}: piece out of bounds {p}")
                 v *= e - s
@@ -397,7 +398,7 @@ def write_shard(ckpt_dir: str, step: int, host_items, *, rank: int, plan: Plan) 
     host (numpy) arrays. Returns the shard path."""
     path = _step_dir(ckpt_dir, step)
     os.makedirs(path, exist_ok=True)
-    payload: Dict[str, List[Dict[str, Any]]] = {}
+    payload: dict[str, list[dict[str, Any]]] = {}
     for key, arr in host_items:
         own = [p for p in plan.get(key, ()) if p.shard == rank]
         if not own:
@@ -501,8 +502,8 @@ def save_sharded(
     *,
     rank: int,
     ranks: Sequence[int],
-    plan: Optional[Plan] = None,
-    commit: Optional[bool] = None,
+    plan: Plan | None = None,
+    commit: bool | None = None,
     commit_timeout_s: float = 60.0,
     keep: int = 3,
 ) -> str:
@@ -531,7 +532,7 @@ class MissingShardError(FileNotFoundError):
     """A restore needs a shard file that is not on disk."""
 
 
-def _restore_sharded(path: str, manifest, items, flat_sh) -> List[Any]:
+def _restore_sharded(path: str, manifest, items, flat_sh) -> list[Any]:
     """Assemble the leaves of ``items`` from a sharded checkpoint,
     reading ONLY the shard files their pieces live in."""
     by_key = manifest["keys"]
@@ -560,12 +561,12 @@ def _restore_sharded(path: str, manifest, items, flat_sh) -> List[Any]:
             f"save was torn or the files were lost — restore an earlier "
             f"committed step, or restrict `like` to the keys you need"
         )
-    shards: Dict[int, Any] = {}
+    shards: dict[int, Any] = {}
     for r in needed:
         with open(os.path.join(path, _shard_name(r)), "rb") as f:
             shards[r] = msgpack.unpackb(f.read(), strict_map_key=False)
     out = []
-    for (k, proto), sh in zip(items, flat_sh):
+    for (k, proto), sh in zip(items, flat_sh, strict=True):
         meta = by_key[k]
         arr = np.empty(tuple(meta["shape"]), dtype=meta["dtype"])
         for p in meta["pieces"]:
@@ -591,7 +592,7 @@ def _restore_sharded(path: str, manifest, items, flat_sh) -> List[Any]:
     return out
 
 
-def _shardings_by_key(items, shardings) -> List[Any]:
+def _shardings_by_key(items, shardings) -> list[Any]:
     """Per-leaf shardings aligned to ``items`` by pytree path.
 
     ``shardings`` may be a single Sharding (applied everywhere), a full
@@ -651,7 +652,7 @@ def restore(
     with open(os.path.join(path, "shard_0.msgpack"), "rb") as f:
         payload = msgpack.unpackb(f.read(), strict_map_key=False)
     out = []
-    for (k, proto), sh in zip(items, flat_sh):
+    for (k, proto), sh in zip(items, flat_sh, strict=True):
         arr = _decode(payload[k])
         if hasattr(proto, "dtype"):
             arr = arr.astype(proto.dtype)

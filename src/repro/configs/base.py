@@ -12,7 +12,6 @@ Input shapes are global; the four assigned shape cells live in
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,7 +119,7 @@ class ModelConfig:
     def n_ssm_heads(self) -> int:
         return self.d_inner // self.ssm_headdim
 
-    def supports_shape(self, shape: ShapeConfig) -> Tuple[bool, str]:
+    def supports_shape(self, shape: ShapeConfig) -> tuple[bool, str]:
         """Whether a shape cell applies (long_500k needs sub-quadratic)."""
         if shape.seq_len > 100_000 and self.family not in ("ssm", "hybrid"):
             return False, "long_500k skipped: pure full-attention arch (DESIGN.md §4)"

@@ -8,7 +8,6 @@ unavailable) datasets with shape-identical deterministic streams.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -16,7 +15,7 @@ class PaperTask:
     task: str            # classification | generation
     dataset: str
     model: str           # resnet18 | resnet26 | resnet50 | ddpm
-    image: Tuple[int, int, int]
+    image: tuple[int, int, int]
     n_classes: int
     lr: float
     epochs: int

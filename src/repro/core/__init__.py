@@ -26,6 +26,10 @@ The paper's contribution as a composable JAX module:
   the train loop's one control object) and ``SitePolicies`` (the
   resolved site → policy table threaded through the models).
 """
+from repro.core import flops
+from repro.core.backward import ChannelSparseOp, channel_sparse_backward
+from repro.core.conv import sparse_conv2d
+from repro.core.dense import sparse_dense
 from repro.core.policy import (
     DENSE,
     PolicyProgram,
@@ -55,13 +59,9 @@ from repro.core.schedulers import (
 from repro.core.sparsity import (
     Selection,
     channel_importance,
-    select_topk_channels,
     select_topk_blocks,
+    select_topk_channels,
 )
-from repro.core.backward import ChannelSparseOp, channel_sparse_backward
-from repro.core.dense import sparse_dense
-from repro.core.conv import sparse_conv2d
-from repro.core import flops
 
 __all__ = [
     "SsPropPolicy",

@@ -31,8 +31,8 @@ pins down).
 """
 from __future__ import annotations
 
+from collections.abc import Callable
 import dataclasses
-from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -90,7 +90,7 @@ class ChannelSparseOp:
         and the policy's TP degree into this."""
         return 1
 
-    def contract_full(self, dy_eff: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    def contract_full(self, dy_eff: jax.Array) -> tuple[jax.Array, jax.Array]:
         """(dX, dW) from a full-size (possibly masked) cotangent."""
         raise NotImplementedError
 
@@ -105,7 +105,7 @@ class ChannelSparseOp:
 
     def contract_gathered(
         self, dy_k: jax.Array, sel: sparsity.Selection
-    ) -> Tuple[jax.Array, jax.Array]:
+    ) -> tuple[jax.Array, jax.Array]:
         """(dX, compact dW) from the gathered cotangent ``dy_k`` (kept
         channels only, phantom slots already zeroed). The compact dW has
         ``sel.k`` channels on ``dw_channel_axis``; the engine scatters."""
@@ -120,14 +120,14 @@ class ChannelSparseOp:
         """Gathered compact dW alone (mixed ``sparsify_dx=False`` path)."""
         return self.contract_gathered(dy_k, sel)[1]
 
-    def canonical(self, dy_eff: jax.Array) -> Optional[CanonicalForm]:
+    def canonical(self, dy_eff: jax.Array) -> CanonicalForm | None:
         """The 2-D lowering for the Pallas gathered kernels, or None when
         the op cannot (or should not) lower itself."""
         return None
 
     def fused_backward(
         self, dy_eff: jax.Array, sel: sparsity.Selection, sdx: bool, sdw: bool
-    ) -> Optional[Tuple[jax.Array, jax.Array]]:
+    ) -> tuple[jax.Array, jax.Array] | None:
         """Optional fully-fused Pallas path: (dX, dW) in native shapes and
         accumulation dtype, or None to fall through to the canonical-form
         kernels. Checked first in the Pallas branch — ops that can fuse
@@ -137,7 +137,7 @@ class ChannelSparseOp:
 
     def tp_contract(
         self, dy_eff: jax.Array, sel: sparsity.Selection
-    ) -> Optional[Tuple[jax.Array, jax.Array]]:
+    ) -> tuple[jax.Array, jax.Array] | None:
         """Optional comm-free sharded fast path: (dX, full dW) from the
         per-shard selection, or None to use the generic gather path."""
         return None
@@ -164,7 +164,7 @@ def _acc_dtype(policy: SsPropPolicy):
     return jnp.bfloat16 if policy.bwd_dtype == "bfloat16" else jnp.float32
 
 
-def _wrap_key(policy: SsPropPolicy, key32) -> Optional[jax.Array]:
+def _wrap_key(policy: SsPropPolicy, key32) -> jax.Array | None:
     if policy.selection == "random" and key32 is not None:
         return jax.random.wrap_key_data(key32.astype(jnp.uint32))
     return None
@@ -175,9 +175,9 @@ def channel_sparse_backward(
     op: ChannelSparseOp,
     dy: jax.Array,
     *,
-    key32: Optional[jax.Array] = None,
+    key32: jax.Array | None = None,
     has_bias: bool = False,
-) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+) -> tuple[jax.Array, jax.Array, jax.Array | None]:
     """Run the shared ssProp backward pipeline for one op.
 
     Returns ``(dX, dW, db)`` in accumulation dtype (callers cast back to

@@ -28,8 +28,8 @@ behave as in ``sparse_dense``.
 """
 from __future__ import annotations
 
+from collections.abc import Sequence
 import functools
-from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -38,10 +38,13 @@ import numpy as np
 from repro.core import backward
 from repro.core.policy import SsPropPolicy
 
+# frozen, so safe to share as the signature default
+_DEFAULT_POLICY = SsPropPolicy()
+
 _DN = ("NCHW", "OIHW", "NCHW")
 
 
-def _norm_pair(v) -> Tuple[int, int]:
+def _norm_pair(v) -> tuple[int, int]:
     if isinstance(v, int):
         return (v, v)
     return tuple(v)
@@ -138,7 +141,7 @@ class _ConvOp(backward.ChannelSparseOp):
         w_k = jnp.take(self.w, sel.idx, axis=0)
         return self._vjp(w_k, dy_k)
 
-    def _explicit_padding(self) -> Tuple[Tuple[int, int], Tuple[int, int]]:
+    def _explicit_padding(self) -> tuple[tuple[int, int], tuple[int, int]]:
         """Resolve string padding to explicit per-dim (lo, hi) pairs.
 
         The fused kernels address the zero-padded image directly, so they
@@ -146,7 +149,7 @@ class _ConvOp(backward.ChannelSparseOp):
         filter extent."""
         if isinstance(self.padding, str):
             kh, kw = self.w.shape[2:]
-            eff = tuple((k - 1) * d + 1 for k, d in zip((kh, kw), self.dilation))
+            eff = tuple((k - 1) * d + 1 for k, d in zip((kh, kw), self.dilation, strict=True))
             pads = jax.lax.padtype_to_pads(
                 self.x.shape[2:], eff, self.stride, self.padding
             )
@@ -257,14 +260,14 @@ _DUMMY_KEY = np.zeros((2,), dtype=np.uint32)
 def sparse_conv2d(
     x: jax.Array,
     w: jax.Array,
-    b: Optional[jax.Array] = None,
+    b: jax.Array | None = None,
     *,
-    stride: Union[int, Sequence[int]] = 1,
-    padding: Union[str, int, Sequence[Tuple[int, int]]] = 0,
-    dilation: Union[int, Sequence[int]] = 1,
+    stride: int | Sequence[int] = 1,
+    padding: str | int | Sequence[tuple[int, int]] = 0,
+    dilation: int | Sequence[int] = 1,
     groups: int = 1,
-    policy: SsPropPolicy = SsPropPolicy(),
-    key: Optional[jax.Array] = None,
+    policy: SsPropPolicy = _DEFAULT_POLICY,
+    key: jax.Array | None = None,
 ) -> jax.Array:
     """2-D convolution (NCHW) with ssProp scheduled-sparse backward.
 

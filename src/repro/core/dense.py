@@ -19,7 +19,6 @@ adapter. ``sparse_conv2d`` plugs into the same engine.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +26,9 @@ import numpy as np
 
 from repro.core import backward
 from repro.core.policy import SsPropPolicy
+
+# frozen, so safe to share as the signature default
+_DEFAULT_POLICY = SsPropPolicy()
 
 
 def _float0_like(x):
@@ -151,10 +153,10 @@ _DUMMY_KEY = np.zeros((2,), dtype=np.uint32)
 def sparse_dense(
     x: jax.Array,
     w: jax.Array,
-    b: Optional[jax.Array] = None,
+    b: jax.Array | None = None,
     *,
-    policy: SsPropPolicy = SsPropPolicy(),
-    key: Optional[jax.Array] = None,
+    policy: SsPropPolicy = _DEFAULT_POLICY,
+    key: jax.Array | None = None,
 ) -> jax.Array:
     """Linear layer with ssProp scheduled-sparse backward.
 

@@ -26,7 +26,7 @@ roofline rows, and the property test on the drop-rate lower bound
 """
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, Dict
+from typing import TYPE_CHECKING
 
 if TYPE_CHECKING:
     from repro.core.policy import PolicyLike, SsPropPolicy
@@ -119,6 +119,29 @@ def kept_channels(c_out: int, policy: "SsPropPolicy") -> int:
     return min(c_out, policy.keep_count(c_out) * policy.block_size)
 
 
+def gather_width(
+    c_out: int, policy: "SsPropPolicy", n_shards: int = 1
+) -> int:
+    """The engine's true gathered contraction width (``Selection.k``).
+
+    Unlike :func:`kept_channels` this is **not** capped at ``C``: with a
+    ragged tail block the engine still gathers ``keep_count * block_size``
+    columns (phantom slots zeroed by the ``valid`` mask), so the matmul
+    is sized for whole blocks. Sharded selection (TP / grouped convs)
+    keeps ``k_loc`` channels per shard with a shard-local block size —
+    mirrored from :func:`repro.core.sparsity.shard_select_width` so the
+    tables count exactly what the backward traces.
+    """
+    if n_shards > 1:
+        from repro.core.sparsity import shard_select_width
+
+        k_loc, _ = shard_select_width(c_out, policy, n_shards)
+        return n_shards * k_loc
+    if policy.granularity == "channel":
+        return policy.keep_count(c_out)
+    return policy.keep_count(c_out) * policy.block_size
+
+
 def effective_drop_rate(c_out: int, policy: "SsPropPolicy") -> float:
     """The drop rate the backward actually realizes at ``c_out`` channels
     (block rounding makes this coarser than ``policy.drop_rate``)."""
@@ -189,6 +212,195 @@ def dense_backward_flops_policy(
     return int(f + m * d_out)
 
 
+def _conv_fused_route(
+    bt: int, h_out: int, w_out: int, c_in: int, c_out: int, k: int,
+    policy: "SsPropPolicy", groups: int,
+) -> bool:
+    """Would the engine take the fused-im2col Pallas route for this conv?
+
+    Replicates :meth:`repro.core.conv._ConvOp.fused_backward`'s gate:
+    structural conditions (``fuse_im2col``, a real patch buffer to fuse
+    away, whole blocks per group) plus the traffic-model min. The
+    auditor needs the routing decision statically to predict which
+    kernels appear in the jaxpr.
+    """
+    if not (
+        policy.active
+        and policy.use_pallas
+        and policy.granularity == "block"
+        and policy.fuse_im2col
+        and k > 1
+    ):
+        return False
+    if groups > 1 and c_out % (groups * policy.block_size) != 0:
+        return False
+    fus = conv_backward_bytes_policy(
+        bt, h_out, w_out, c_in, c_out, k, policy, fused=True, groups=groups
+    )
+    mat = conv_backward_bytes_policy(
+        bt, h_out, w_out, c_in, c_out, k, policy, fused=False, groups=groups
+    )
+    return fus < mat
+
+
+def conv_backward_contraction_bounds(
+    bt: int,
+    h_out: int,
+    w_out: int,
+    c_in: int,
+    c_out: int,
+    k: int,
+    policy: "SsPropPolicy",
+    *,
+    groups: int = 1,
+    h_pad: int = None,
+) -> tuple:
+    """Exact ``(lo, hi)`` *contraction* FLOPs of one conv backward.
+
+    The jaxpr-auditable core of :func:`conv_backward_flops_policy`: only
+    ``conv_general_dilated`` / ``dot_general`` / Pallas-kernel work — no
+    bias reduction, no importance pass (those are elementwise and the
+    walker doesn't count them). Groups-aware (``N_g = (C_in/G)*K²``),
+    unlike the legacy per-site tables which predate grouped convs.
+
+    ``lo == hi`` everywhere except the fused-im2col dX kernel, whose
+    grid sweeps every *padded-image* row and masks invalid taps with
+    ``pl.when`` — in the jaxpr that is a ``cond``, so the walker reports
+    an interval: ``lo`` counts only valid grid steps (``B*H_out`` rows),
+    ``hi`` the full grid (``B*H_pad`` rows). ``h_pad`` defaults to the
+    stride-1 'SAME'-ish ``H_out + K - 1`` (the bytes model's
+    convention); pass the true padded height for exact bounds.
+
+    The invariant the hook-consistency test pins: on every non-fused
+    route, ``conv_backward_flops_policy == lo + db_term + M*C_out`` for
+    ``groups == 1``.
+    """
+    m = bt * h_out * w_out
+    cg = c_in // groups
+    n_g = cg * k * k
+    full_side = 2 * m * n_g * c_out
+    sdx, sdw = policy.sparsify_dx, policy.sparsify_dw
+    if not policy.active or not (sdx or sdw) or policy.mask_mode:
+        return (2 * full_side, 2 * full_side)
+
+    # selection sharding mirrors _ConvOp.selection_shards: per-group
+    # balance is structural; it subsumes a TP degree it doesn't divide.
+    n_shards = (
+        policy.tp_shards
+        if policy.tp_shards > 1 and c_out % policy.tp_shards == 0
+        else 1
+    )
+    if groups > 1 and (n_shards < groups or n_shards % groups != 0):
+        n_shards = groups
+    width = gather_width(c_out, policy, n_shards)
+    gathered_side = 2 * m * n_g * width
+
+    if (
+        policy.use_pallas
+        and policy.granularity == "block"
+    ):
+        bs = policy.block_size
+        nb = -(-c_out // bs)
+        if _conv_fused_route(bt, h_out, w_out, c_in, c_out, k, policy, groups):
+            # Every dX dot sits under the kernel's pl.when(valid) — a
+            # cond in the jaxpr — so the unconditional floor is the dW
+            # kernel alone (lo), and the ceiling bills the dX grid's
+            # full padded-row sweep (hi). The true cost, valid steps
+            # only, is 2*M*N_g*kept_dx + dw_term, inside the interval.
+            if h_pad is None:
+                h_pad = h_out + k - 1
+            kept_dx = width if sdx else nb * bs
+            kept_dw = width if sdw else nb * bs
+            dw_term = 2 * m * n_g * kept_dw
+            dx_hi = 2 * (bt * h_pad * w_out) * n_g * kept_dx
+            return (int(dw_term), int(dx_hi + dw_term))
+        if groups == 1:
+            # canonical-form gathered kernels over 128-padded tiles;
+            # a non-sparsified side is a plain unpadded jnp.matmul.
+            # conv_general_dilated_patches (X2) and its VJP (col2im)
+            # are themselves convs with K² identity output channels —
+            # 2*M*N*K² FLOPs each, the honest price of materializing.
+            n = c_in * k * k
+            m_pad = _roundup(m, 128)
+            n_pad = _roundup(n, 128)
+            gathered_pad = 2 * m_pad * n_pad * width
+            dx_term = gathered_pad if sdx else full_side
+            dw_term = gathered_pad if sdw else full_side
+            im2col_term = 2 * (2 * m * n * k * k)
+            t = int(dx_term + dw_term + im2col_term)
+            return (t, t)
+        # groups > 1 without the fused route: the canonical lowering
+        # declines grouped convs, so the engine falls back to the
+        # gathered-VJP path below.
+
+    dx_term = gathered_side if sdx else full_side
+    dw_term = gathered_side if sdw else full_side
+    t = int(dx_term + dw_term)
+    return (t, t)
+
+
+def dense_backward_contraction_bounds(
+    m: int, d_in: int, d_out: int, policy: "SsPropPolicy"
+) -> tuple:
+    """Exact ``(lo, hi)`` contraction FLOPs of one dense backward.
+
+    Dense analogue of :func:`conv_backward_contraction_bounds` — every
+    route is unconditional, so ``lo == hi`` always; the interval form is
+    kept for API symmetry. Routes mirrored from
+    :func:`repro.core.backward.channel_sparse_backward` +
+    :class:`repro.core.dense._DenseOp`:
+
+    * inactive / mask_mode: two full ``2*M*D_in*D_out`` matmuls,
+    * TP fast path (``tp_shards`` divides ``D_out``, both sides
+      sparsified): two unpadded gathered einsums — *before* the Pallas
+      branch, so padding never applies,
+    * Pallas block: gathered kernel sides at 128-padded tiles, dense
+      sides unpadded,
+    * Pallas channel: ``kops.matmul`` pads every operand dim to 128,
+    * plain gather: unpadded matmuls at the engine's *gathered* width
+      (:func:`gather_width` — whole blocks, not capped at ``D_out``).
+    """
+    full_side = 2 * m * d_in * d_out
+    sdx, sdw = policy.sparsify_dx, policy.sparsify_dw
+    if not policy.active or not (sdx or sdw) or policy.mask_mode:
+        return (2 * full_side, 2 * full_side)
+
+    # selection sharding mirrors _DenseOp.selection_shards
+    n_shards = (
+        policy.tp_shards
+        if policy.tp_shards > 1 and d_out % policy.tp_shards == 0
+        else 1
+    )
+    width = gather_width(d_out, policy, n_shards)
+    gathered_side = 2 * m * d_in * width
+
+    if n_shards > 1 and sdx and sdw:
+        # TP fast path: two unpadded shard-local einsums over the
+        # (shard, kept) axes — checked before the Pallas branch.
+        t = int(2 * gathered_side)
+        return (t, t)
+    if policy.use_pallas:
+        if policy.granularity == "block":
+            m_pad = _roundup(m, 128)
+            d_pad = _roundup(d_in, 128)
+            gathered_pad = 2 * m_pad * d_pad * width
+            dx_term = gathered_pad if sdx else full_side
+            dw_term = gathered_pad if sdw else full_side
+        else:
+            padded = (
+                2 * _roundup(m, 128) * _roundup(d_in, 128) * _roundup(width, 128)
+            )
+            dx_term = padded if sdx else full_side
+            dw_term = padded if sdw else full_side
+        t = int(dx_term + dw_term)
+        return (t, t)
+
+    dx_term = gathered_side if sdx else full_side
+    dw_term = gathered_side if sdw else full_side
+    t = int(dx_term + dw_term)
+    return (t, t)
+
+
 def conv_backward_bytes_policy(
     bt: int,
     h_out: int,
@@ -246,6 +458,42 @@ def conv_backward_bytes_policy(
         )
         return min(mat, fus)
 
+    parts = conv_backward_bytes_breakdown(
+        bt, h_out, w_out, c_in, c_out, k, policy, fused=fused, groups=groups
+    )
+    return sum(parts.values()) * itemsize
+
+
+def conv_backward_bytes_breakdown(
+    bt: int,
+    h_out: int,
+    w_out: int,
+    c_in: int,
+    c_out: int,
+    k: int,
+    policy: "SsPropPolicy",
+    *,
+    fused: bool,
+    groups: int = 1,
+) -> dict[str, int]:
+    """Per-component *element* counts behind the bytes model.
+
+    :func:`conv_backward_bytes_policy` is exactly
+    ``sum(breakdown.values()) * itemsize``; this exposes the terms so the
+    static checker can cross-validate the fused kernel components
+    against a grid-walk traffic emulation of the kernel specs
+    (:mod:`repro.analysis.pallas_check`). Fused kernel-side keys map 1:1
+    onto per-operand fetch totals of the ``conv_dw_fused`` /
+    ``conv_dx_fused`` grids under sequential-grid revisit elision:
+
+    * ``dw.xg_rows`` / ``dw.dy_panels`` / ``dw.out_flush`` — the dW
+      kernel's image-row fetches, cotangent fetches, output flushes;
+    * ``dx.dy_rows`` / ``dx.w2k_fetch`` / ``dx.out_writes`` — the dX
+      kernel's cotangent fetches, single compact-filter fetch (its
+      index map is constant), padded-image writes. ``dx.w2k_gather`` is
+      the wrapper-side ``jnp.take`` that builds the compact filter —
+      host of the kernel's fetch, not itself a kernel term.
+    """
     m = bt * h_out * w_out
     cg = c_in // groups
     n = cg * k * k
@@ -258,16 +506,15 @@ def conv_backward_bytes_policy(
     if not fused or k == 1:
         kept_dx = kept if sdx else c_out
         kept_dw = kept if sdw else c_out
-        elems = (
-            x_elems                      # read X to extract patches
-            + 4 * m * n * groups         # X2 write+read, dX2 write+read
-            + m * (kept_dx + kept_dw)    # dY2 panels read by each matmul
-            + m * c_out                  # dY read for importance
-            + n * kept_dx                # W2 panels read (dX side)
-            + n * c_out                  # dW written
-            + x_elems                    # dX written
-        )
-        return int(elems) * itemsize
+        return {
+            "mat.x_read": x_elems,               # read X to extract patches
+            "mat.patch_buffers": 4 * m * n * groups,  # X2 w+r, dX2 w+r
+            "mat.dy_panels": m * (kept_dx + kept_dw),  # read by each matmul
+            "mat.importance": m * c_out,         # dY read for importance
+            "mat.w_panels": n * kept_dx,         # W2 panels read (dX side)
+            "mat.dw_write": n * c_out,           # dW written
+            "mat.dx_write": x_elems,             # dX written
+        }
 
     bs = policy.block_size
     nb = -(-c_out // bs)
@@ -276,23 +523,22 @@ def conv_backward_bytes_policy(
     kb_dw = kb if sdw else nb
     m2 = bt * h_out      # dY row count (dW grid's sequential axis)
     s_ax = bt * h_pad    # padded-image row count (dX grid's outer axis)
-    dw_elems = (
-        k * kb_dw * m2 * (w_pad * cg)    # padded-image row per (tap, block)
-        + k * kb_dw * m2 * (w_out * bs)  # cotangent panel per grid step
-        + k * kb_dw * (k * cg * bs)      # output tap blocks flushed
-    )
-    dx_elems = (
-        s_ax * kb_dx * k * (w_out * bs)  # cotangent row per (row, block, tap)
-        + 2 * (k * k * cg * kb_dx * bs)  # compact filter: gather + one fetch
-        + s_ax * (w_pad * cg) * groups   # padded-image blocks written once
-    )
-    common = (
-        2 * x_elems      # build the padded row-major image view
-        + m * c_out      # dY read for importance
-        + n * c_out      # dW written
-        + x_elems        # dX written (padding border sliced off)
-    )
-    return int(dw_elems + dx_elems + common) * itemsize
+    return {
+        # dW kernel: one fetch per grid step for both streaming operands
+        "dw.xg_rows": k * kb_dw * m2 * (w_pad * cg),
+        "dw.dy_panels": k * kb_dw * m2 * (w_out * bs),
+        "dw.out_flush": k * kb_dw * (k * cg * bs),
+        # dX kernel: cotangent per (row, block, tap); filter once
+        "dx.dy_rows": s_ax * kb_dx * k * (w_out * bs),
+        "dx.w2k_gather": k * k * cg * kb_dx * bs,
+        "dx.w2k_fetch": k * k * cg * kb_dx * bs,
+        "dx.out_writes": s_ax * (w_pad * cg) * groups,
+        # shared wrapper traffic
+        "common.pad_image": 2 * x_elems,   # build padded row-major view
+        "common.importance": m * c_out,    # dY read for importance
+        "common.dw_write": n * c_out,      # dW written
+        "common.dx_write": x_elems,        # dX written (border sliced off)
+    }
 
 
 def conv_backward_bytes_site(
@@ -375,7 +621,7 @@ def conv_layer_report(
     k: int,
     drop_rate: float,
     policy: "SsPropPolicy" = None,
-) -> Dict[str, float]:
+) -> dict[str, float]:
     """Per-layer dict used by the benchmark tables.
 
     With ``policy`` the ssProp count uses the engine's real keep counts

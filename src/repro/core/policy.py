@@ -39,10 +39,10 @@ the table's ``default``.
 """
 from __future__ import annotations
 
+from collections.abc import Iterable, Sequence
 import dataclasses
 import fnmatch
 import re
-from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
 
 from repro.core.schedulers import Constant, Schedule, SCHEDULE_NAMES
 
@@ -93,7 +93,7 @@ class SsPropPolicy:
     selection: str = "topk"  # "topk" | "random"
     scheduler: str = "epoch_bar"  # see schedulers.SCHEDULES
     target_rate: float = 0.8
-    rate_buckets: Tuple[float, ...] = (0.0, 0.25, 0.5, 0.8, 0.95)
+    rate_buckets: tuple[float, ...] = (0.0, 0.25, 0.5, 0.8, 0.95)
     mask_mode: bool = False
     sparsify_dx: bool = True
     sparsify_dw: bool = True
@@ -184,9 +184,6 @@ def tpu_default(drop_rate: float = 0.8) -> SsPropPolicy:
 # site tables
 # ----------------------------------------------------------------------
 
-PolicyLike = Union[SsPropPolicy, "SitePolicies"]
-
-
 @dataclasses.dataclass(frozen=True)
 class SitePolicies:
     """A resolved site → policy table (hashable, jit-cache-key safe).
@@ -198,7 +195,7 @@ class SitePolicies:
     call site picks up its own policy via :func:`policy_for`.
     """
 
-    entries: Tuple[Tuple[str, SsPropPolicy], ...]
+    entries: tuple[tuple[str, SsPropPolicy], ...]
     default: SsPropPolicy = DENSE
 
     def __post_init__(self):
@@ -211,7 +208,7 @@ class SitePolicies:
         return name in self._table
 
     @property
-    def names(self) -> Tuple[str, ...]:
+    def names(self) -> tuple[str, ...]:
         return tuple(n for n, _ in self.entries)
 
     def scoped(self, prefix: str) -> "SitePolicies":
@@ -227,10 +224,13 @@ class SitePolicies:
         )
         return SitePolicies(sub, default=self.default)
 
-    def uniform(self) -> Optional[SsPropPolicy]:
+    def uniform(self) -> SsPropPolicy | None:
         """The single policy if every entry (and the default) agrees."""
         pols = {p for _, p in self.entries} | {self.default}
         return next(iter(pols)) if len(pols) == 1 else None
+
+
+PolicyLike = SsPropPolicy | SitePolicies
 
 
 def policy_for(policy: PolicyLike, site: str) -> SsPropPolicy:
@@ -255,7 +255,7 @@ _RANGE = re.compile(r"^(-?\d+)\.\.(-?\d+)$")
 _INT = re.compile(r"^-?\d+$")
 
 
-def _resolve_index(value: int, depth: Optional[int], pattern: str) -> int:
+def _resolve_index(value: int, depth: int | None, pattern: str) -> int:
     if value < 0:
         if depth is None:
             raise ValueError(
@@ -266,7 +266,7 @@ def _resolve_index(value: int, depth: Optional[int], pattern: str) -> int:
     return value
 
 
-def expand_pattern(pattern: str, depth: Optional[int] = None) -> Tuple[str, ...]:
+def expand_pattern(pattern: str, depth: int | None = None) -> tuple[str, ...]:
     """Expand brace sets into plain glob patterns.
 
     Items in ``{...}`` may be literals (``{conv1,conv2}``), integers —
@@ -296,7 +296,7 @@ def expand_pattern(pattern: str, depth: Optional[int] = None) -> Tuple[str, ...]
     return tuple(out)
 
 
-def pattern_matches(pattern: str, site: str, depth: Optional[int] = None) -> bool:
+def pattern_matches(pattern: str, site: str, depth: int | None = None) -> bool:
     """fnmatch-style match of one rule pattern against a site name."""
     return any(
         fnmatch.fnmatchcase(site, glob) for glob in expand_pattern(pattern, depth)
@@ -319,7 +319,7 @@ class PolicyRules:
     and its own target in lock-step.
     """
 
-    rules: Tuple[Tuple[str, SsPropPolicy], ...]
+    rules: tuple[tuple[str, SsPropPolicy], ...]
     default: SsPropPolicy = DENSE
 
     @classmethod
@@ -328,7 +328,7 @@ class PolicyRules:
         return cls(rules=(("*", policy),), default=policy)
 
     @classmethod
-    def of(cls, *rules, base: SsPropPolicy, default: Optional[SsPropPolicy] = None):
+    def of(cls, *rules, base: SsPropPolicy, default: SsPropPolicy | None = None):
         """Build rules from (pattern, rate-or-policy) pairs.
 
         A float rate becomes ``base.with_target(rate)`` — so every site
@@ -368,7 +368,7 @@ class PolicyRules:
         return cls.of(*rows, base=base)
 
     def resolve(
-        self, sites: Sequence[str], *, depth: Optional[int] = None
+        self, sites: Sequence[str], *, depth: int | None = None
     ) -> SitePolicies:
         """Assign every enumerated site its policy (first match wins)."""
         entries = []
@@ -402,7 +402,7 @@ class PolicyProgram:
 
     @classmethod
     def single(
-        cls, policy: SsPropPolicy, schedule: Optional[Schedule] = None
+        cls, policy: SsPropPolicy, schedule: Schedule | None = None
     ) -> "PolicyProgram":
         """The trivial program: one global policy, optionally scheduled.
 
@@ -430,7 +430,7 @@ class PolicyProgram:
         return cls(rules=PolicyRules.single(policy), schedule=schedule)
 
     def resolve(
-        self, sites: Sequence[str], *, depth: Optional[int] = None
+        self, sites: Sequence[str], *, depth: int | None = None
     ) -> "ResolvedProgram":
         return ResolvedProgram(
             sites=self.rules.resolve(sites, depth=depth), schedule=self.schedule
@@ -477,7 +477,7 @@ class ResolvedProgram:
             self.schedule.average_rate(total_steps) / self.schedule.target, 1.0
         )
 
-    def average_rates(self, total_steps: int) -> Dict[str, float]:
+    def average_rates(self, total_steps: int) -> dict[str, float]:
         """Per-site mean drop rate over a run — the per-site input to
         total-FLOPs accounting (each site saves at its own rate, not one
         global number)."""

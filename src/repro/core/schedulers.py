@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
 
 _DEFAULT_BUCKETS = (0.0, 0.25, 0.5, 0.8, 0.95)
 
@@ -43,7 +42,7 @@ class Schedule:
     """
 
     target: float = 0.8
-    rate_buckets: Tuple[float, ...] = _DEFAULT_BUCKETS
+    rate_buckets: tuple[float, ...] = _DEFAULT_BUCKETS
 
     def rate(self, step: int) -> float:
         """Raw scheduled drop rate at ``step`` (subclasses implement)."""
@@ -195,7 +194,7 @@ def make_schedule(
     total_steps: int = 100,
     steps_per_epoch: int = 1,
     period: int = 100,
-    rate_buckets: Tuple[float, ...] = _DEFAULT_BUCKETS,
+    rate_buckets: tuple[float, ...] = _DEFAULT_BUCKETS,
 ) -> Schedule:
     """Build a :class:`Schedule` from its legacy string name.
 

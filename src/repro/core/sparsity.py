@@ -17,7 +17,8 @@ lower to cheaper HLO and keep dW scatters coalesced.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence, Tuple
+from collections.abc import Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -48,9 +49,9 @@ class Selection(NamedTuple):
 
     idx: jax.Array
     k: int
-    valid: Optional[jax.Array] = None
-    block_idx: Optional[jax.Array] = None
-    shard_idx: Optional[jax.Array] = None
+    valid: jax.Array | None = None
+    block_idx: jax.Array | None = None
+    shard_idx: jax.Array | None = None
     k_loc: int = 0
     n_shards: int = 1
 
@@ -89,7 +90,7 @@ def select_topk_channels(
     k: int,
     *,
     selection: str = "topk",
-    key: Optional[jax.Array] = None,
+    key: jax.Array | None = None,
 ) -> jax.Array:
     """Indices of the K most important channels, sorted ascending.
 
@@ -116,7 +117,7 @@ def select_topk_blocks(
     k_blocks: int,
     *,
     selection: str = "topk",
-    key: Optional[jax.Array] = None,
+    key: jax.Array | None = None,
 ) -> jax.Array:
     """Indices of the K most important channel *blocks*, sorted ascending."""
     bimp = block_importance(imp, block_size)
@@ -135,7 +136,7 @@ def select(
     *,
     channel_axis: int = -1,
     n_shards: int = 1,
-    key: Optional[jax.Array] = None,
+    key: jax.Array | None = None,
 ) -> Selection:
     """Policy-driven selection in its full structured form.
 
@@ -201,8 +202,8 @@ def select_indices(
     policy: SsPropPolicy,
     *,
     channel_axis: int = -1,
-    key: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, int]:
+    key: jax.Array | None = None,
+) -> tuple[jax.Array, int]:
     """Back-compat view of :func:`select`: (sorted channel indices, K).
 
     For block granularity the indices are the expanded channel indices of
@@ -233,13 +234,37 @@ def keep_mask(
     return flat.reshape(shape).astype(dtype)
 
 
+def shard_select_width(
+    c: int, policy: SsPropPolicy, n_shards: int
+) -> tuple[int, int]:
+    """Static ``(k_loc, bs_loc)`` of sharded selection over ``C`` channels.
+
+    ``k_loc`` is the per-shard gathered width (channels each shard keeps)
+    and ``bs_loc`` the shard-local block size (halved until it tiles the
+    shard; 1 for channel granularity). This is the sizing half of
+    :func:`select_indices_per_shard`, split out so the FLOPs tables
+    (``core/flops.py``) model the *same* contraction widths the engine
+    traces — the honest-savings audit pins them equal, so keep the two
+    in one place.
+    """
+    c_loc = c // n_shards
+    if policy.granularity == "block":
+        bs = policy.block_size
+        while bs > 1 and (c_loc < bs or c_loc % bs):
+            bs //= 2
+        nblocks_loc = c_loc // bs
+        k_total = max(1, int(round((1.0 - policy.drop_rate) * (c // bs))))
+        return max(1, min(nblocks_loc, k_total // n_shards)) * bs, bs
+    return max(1, policy.keep_count(c) // n_shards), 1
+
+
 def select_indices_per_shard(
     dy2: jax.Array,
     policy: SsPropPolicy,
     tp_shards: int,
     *,
-    key: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, int]:
+    key: jax.Array | None = None,
+) -> tuple[jax.Array, int]:
     """TP-local selection: top-k/shard within each of ``tp_shards``
     contiguous channel groups (the TP shards of the output dim).
 
@@ -256,20 +281,16 @@ def select_indices_per_shard(
     if policy.granularity == "block":
         # shard-local block size: small projections (e.g. kv with few
         # heads) may hold fewer than block_size channels per shard.
-        bs = policy.block_size
-        while bs > 1 and (c_loc < bs or c_loc % bs):
-            bs //= 2
+        k_loc, bs = shard_select_width(c, policy, tp_shards)
         nblocks_loc = c_loc // bs
-        k_total = max(1, int(round((1.0 - policy.drop_rate) * (c // bs))))
-        k_loc_blocks = max(1, min(nblocks_loc, k_total // tp_shards))
+        k_loc_blocks = k_loc // bs
         bimp = imp.reshape(tp_shards, nblocks_loc, bs).mean(-1)
         _, bidx = jax.lax.top_k(bimp, k_loc_blocks)  # [S, kb]
         bidx = jnp.sort(bidx, axis=-1)
         offs = jnp.arange(bs)
         idx = (bidx[:, :, None] * bs + offs[None, None, :]).reshape(tp_shards, -1)
-        return idx, k_loc_blocks * bs
-    k_total = policy.keep_count(c)
-    k_loc = max(1, k_total // tp_shards)
+        return idx, k_loc
+    k_loc, _ = shard_select_width(c, policy, tp_shards)
     if policy.selection == "random":
         if key is None:
             raise ValueError("random selection requires key")
@@ -285,7 +306,7 @@ def mask_grad(
     policy: SsPropPolicy,
     *,
     channel_axis: int = -1,
-    key: Optional[jax.Array] = None,
+    key: jax.Array | None = None,
 ) -> jax.Array:
     """Zero out dropped channels of ``dy`` (mask-mode sparsification)."""
     if not policy.active:

@@ -15,7 +15,6 @@ batch (``host_slice``), matching multi-host jax.Array construction.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +41,7 @@ class TokenPipeline:
         # sparse-ish transition: each (prev) maps to 8 likely tokens
         self._succ = rng.integers(0, cfg.vocab, size=(min(cfg.vocab, 4096), 8))
 
-    def batch_at(self, step: int, *, host_slice: Optional[Tuple[int, int]] = None) -> Dict[str, np.ndarray]:
+    def batch_at(self, step: int, *, host_slice: tuple[int, int] | None = None) -> dict[str, np.ndarray]:
         cfg = self.cfg
         lo, hi = host_slice or (0, cfg.global_batch)
         rng = np.random.default_rng((cfg.seed, step))
@@ -61,7 +60,7 @@ class TokenPipeline:
 
 @dataclasses.dataclass(frozen=True)
 class ImagePipelineConfig:
-    image: Tuple[int, int, int]  # (C, H, W)
+    image: tuple[int, int, int]  # (C, H, W)
     n_classes: int
     global_batch: int
     seed: int = 0
@@ -81,7 +80,7 @@ class ImagePipeline:
         self._noise_seed = rng.integers(0, 2**31)
         self.n_train = n_train
 
-    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+    def batch_at(self, step: int) -> dict[str, np.ndarray]:
         cfg = self.cfg
         rng = np.random.default_rng((self._noise_seed, step))
         idx = rng.integers(0, self.n_train, size=cfg.global_batch)
@@ -92,7 +91,7 @@ class ImagePipeline:
         x = self._protos[y] + noise_bank[idx % 256]
         return {"images": x, "labels": y}
 
-    def eval_batch(self, n: int = 256) -> Dict[str, np.ndarray]:
+    def eval_batch(self, n: int = 256) -> dict[str, np.ndarray]:
         cfg = self.cfg
         rng = np.random.default_rng(999)
         y = rng.integers(0, cfg.n_classes, size=n).astype(np.int32)

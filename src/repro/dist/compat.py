@@ -25,11 +25,12 @@ Two concerns live here:
 """
 from __future__ import annotations
 
+from collections.abc import Sequence
 import contextlib
 import json
 import os
 import time
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any
 
 import jax
 
@@ -74,7 +75,7 @@ def _atomic_write_json(path: str, obj: Any) -> None:
     os.replace(tmp, path)
 
 
-def _read_json(path: str) -> Optional[Any]:
+def _read_json(path: str) -> Any | None:
     try:
         with open(path) as f:
             return json.load(f)
@@ -126,14 +127,14 @@ class ProcessGroup:
         """Publish this rank's payload for one tagged collective."""
         _atomic_write_json(self._path(tag, self.rank), payload)
 
-    def try_get(self, tag: str, rank: int) -> Optional[Any]:
+    def try_get(self, tag: str, rank: int) -> Any | None:
         """Non-blocking read of one peer's payload (None if absent)."""
         path = self._path(tag, rank)
         if not os.path.exists(path):
             return None
         return _read_json(path)
 
-    def get(self, tag: str, rank: int, timeout_s: Optional[float] = None) -> Any:
+    def get(self, tag: str, rank: int, timeout_s: float | None = None) -> Any:
         deadline = time.monotonic() + (
             self.timeout_s if timeout_s is None else timeout_s
         )
@@ -161,9 +162,9 @@ class ProcessGroup:
         tag: str,
         payload: Any = None,
         *,
-        ranks: Optional[Sequence[int]] = None,
-        timeout_s: Optional[float] = None,
-    ) -> Dict[int, Any]:
+        ranks: Sequence[int] | None = None,
+        timeout_s: float | None = None,
+    ) -> dict[int, Any]:
         """All-gather of JSON payloads among ``ranks``; returns
         rank → payload once every participant has published."""
         ranks = list(range(self.num_processes)) if ranks is None else list(ranks)
@@ -174,8 +175,8 @@ class ProcessGroup:
         self,
         tag: str,
         *,
-        ranks: Optional[Sequence[int]] = None,
-        timeout_s: Optional[float] = None,
+        ranks: Sequence[int] | None = None,
+        timeout_s: float | None = None,
     ) -> None:
         self.gather(f"bar.{tag}", None, ranks=ranks, timeout_s=timeout_s)
 
@@ -185,7 +186,7 @@ class ProcessGroup:
         payload: Any = None,
         *,
         src: int = 0,
-        timeout_s: Optional[float] = None,
+        timeout_s: float | None = None,
     ) -> Any:
         """One rank publishes, everyone reads (src returns its own)."""
         if self.rank == src:
@@ -235,7 +236,7 @@ def initialize(
     return pg
 
 
-def registered_ranks(coord_dir: str) -> List[int]:
+def registered_ranks(coord_dir: str) -> list[int]:
     """Ranks that have ever registered with :func:`initialize`."""
     d = os.path.join(coord_dir, "ranks")
     if not os.path.isdir(d):

@@ -21,12 +21,12 @@ See the module docstring of ``repro.dist`` for the full contract.
 """
 from __future__ import annotations
 
+from collections.abc import Callable, Sequence
 import dataclasses
 import json
 import os
 import statistics
 import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 _PREFIX = "rank_"
 _SENTINEL = "monitor.sentinel"
@@ -112,9 +112,9 @@ class HeartbeatMonitor:
         self.timeout_s = timeout_s
         self._sentinel = os.path.join(hb_dir, _SENTINEL)
 
-    def last_seen(self) -> Dict[int, float]:
+    def last_seen(self) -> dict[int, float]:
         """rank → heartbeat file mtime (empty when no dir/beats yet)."""
-        out: Dict[int, float] = {}
+        out: dict[int, float] = {}
         if not os.path.isdir(self.hb_dir):
             return out
         for name in os.listdir(self.hb_dir):
@@ -135,7 +135,7 @@ class HeartbeatMonitor:
             f.write("monitor clock sentinel\n")
         return os.path.getmtime(self._sentinel)
 
-    def dead_ranks(self, now: Optional[float] = None) -> List[int]:
+    def dead_ranks(self, now: float | None = None) -> list[int]:
         seen = self.last_seen()
         if not seen:
             return []
@@ -160,8 +160,8 @@ class Membership:
     """
 
     epoch: int
-    active: Tuple[int, ...]
-    evicted: Tuple[int, ...]
+    active: tuple[int, ...]
+    evicted: tuple[int, ...]
 
     @property
     def leader(self) -> int:
@@ -278,7 +278,7 @@ class FleetSupervisor:
         world_size: int,
         *,
         timeout_s: float = 60.0,
-        monitor: Optional[HeartbeatMonitor] = None,
+        monitor: HeartbeatMonitor | None = None,
     ):
         self.coord_dir = coord_dir
         self.view = MembershipView(coord_dir, world_size)
@@ -296,7 +296,7 @@ class FleetSupervisor:
         with open(os.path.join(self._rejoin_dir, f"{_PREFIX}{rank:05d}"), "w") as f:
             f.write(str(os.getpid()))
 
-    def _rejoin_requests(self) -> List[int]:
+    def _rejoin_requests(self) -> list[int]:
         if not os.path.isdir(self._rejoin_dir):
             return []
         out = []
@@ -316,7 +316,7 @@ class FleetSupervisor:
 
     # -- worker-side orderly completion --------------------------------
 
-    def completed_ranks(self) -> List[int]:
+    def completed_ranks(self) -> list[int]:
         """Ranks that finished the job and exited on purpose: a
         ``<coord>/done/rank_<r>*`` marker (written by the driver right
         before exit). Their heartbeats go silent exactly like a dead
@@ -376,7 +376,7 @@ class FleetSupervisor:
             return m3
         return m
 
-    def should_poll(self, rank: int, m: Optional[Membership] = None) -> bool:
+    def should_poll(self, rank: int, m: Membership | None = None) -> bool:
         """Does ``rank`` currently hold (or inherit) the supervisor seat?
 
         The leader polls; any other active rank takes over only when the
@@ -442,8 +442,8 @@ class StragglerTracker:
         self.slack = slack
         self.alpha = alpha
         self.min_records = min_records
-        self._ewma: Dict[int, float] = {}
-        self._n: Dict[int, int] = {}
+        self._ewma: dict[int, float] = {}
+        self._n: dict[int, int] = {}
 
     def record(self, rank: int, step_time_s: float) -> None:
         prev = self._ewma.get(rank)
@@ -454,7 +454,7 @@ class StragglerTracker:
         )
         self._n[rank] = self._n.get(rank, 0) + 1
 
-    def ewma(self, rank: int) -> Optional[float]:
+    def ewma(self, rank: int) -> float | None:
         return self._ewma.get(rank)
 
     def forget(self, rank: int) -> None:
@@ -463,7 +463,7 @@ class StragglerTracker:
         self._ewma.pop(rank, None)
         self._n.pop(rank, None)
 
-    def stragglers(self) -> List[int]:
+    def stragglers(self) -> list[int]:
         judged = {
             r: t
             for r, t in self._ewma.items()
@@ -513,11 +513,11 @@ class StragglerSupervisor:
     """
 
     def __init__(
-        self, tracker: Optional[StragglerTracker] = None, patience: int = 3
+        self, tracker: StragglerTracker | None = None, patience: int = 3
     ):
         self.tracker = tracker if tracker is not None else StragglerTracker()
         self.patience = patience
-        self._streak: Dict[int, int] = {}
+        self._streak: dict[int, int] = {}
 
     def record(self, rank: int, step_time_s: float) -> None:
         self.tracker.record(rank, step_time_s)
@@ -535,7 +535,7 @@ class StragglerSupervisor:
         for r in list(self._streak):
             if r not in flagged:
                 self._streak.pop(r)
-        worst: Optional[int] = None
+        worst: int | None = None
         for r in flagged:
             self._streak[r] = self._streak.get(r, 0) + 1
             if self._streak[r] >= self.patience:
@@ -588,7 +588,7 @@ class RestartPolicy:
     backoff_mult: float = 2.0
     max_evictions: int = 16
     max_reshards: int = 64
-    excluded_ranks: List[int] = dataclasses.field(default_factory=list)
+    excluded_ranks: list[int] = dataclasses.field(default_factory=list)
 
     def unexclude(self, rank: int) -> bool:
         """Re-admit an evicted rank (rejoin). Returns True if it was
@@ -603,9 +603,9 @@ class RestartPolicy:
         self,
         attempt: Callable[[int], object],
         *,
-        on_restart: Optional[Callable[[int, BaseException], None]] = None,
-        on_evict: Optional[Callable[[int, "StragglerEvicted"], None]] = None,
-        on_reshard: Optional[Callable[[Membership], None]] = None,
+        on_restart: Callable[[int, BaseException], None] | None = None,
+        on_evict: Callable[[int, "StragglerEvicted"], None] | None = None,
+        on_reshard: Callable[[Membership], None] | None = None,
     ):
         delay = self.backoff_s
         restarts = 0

@@ -10,7 +10,8 @@ as mesh-independent :class:`~jax.sharding.PartitionSpec` trees
 """
 from __future__ import annotations
 
-from typing import Any, Sequence
+from collections.abc import Sequence
+from typing import Any
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -24,15 +24,23 @@ Kernels:
 Grid iteration on TPU is sequential over the last axis, so accumulation
 into the revisited output block (init at step 0) is the standard pattern.
 All accumulation is fp32 (``preferred_element_type``).
+
+Every kernel's grid and BlockSpecs come from the matching ``*_spec``
+constructor in :mod:`repro.kernels.specs` — the introspectable launch
+geometry the static checker (:mod:`repro.analysis.pallas_check`) proves
+in-bounds and traffic-models. Kernel and checker share one spec object,
+so the addressing documented in ``docs/kernels.md`` cannot silently
+drift from what runs.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
+
+from repro.kernels import specs
 
 
 # ----------------------------------------------------------------------
@@ -76,18 +84,13 @@ def dx_gathered(
     kb = block_idx.shape[0]
     assert m % bm == 0 and d_in % bn == 0 and n % block_size == 0
 
-    grid = (m // bm, d_in // bn, kb)
+    spec = specs.dx_gathered_spec(
+        m, n, d_in, kb, block_size=block_size, bm=bm, bn=bn,
+        itemsize=dy.dtype.itemsize,
+    )
     return pl.pallas_call(
         functools.partial(_dx_kernel, nk=kb),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bm, block_size), lambda i, j, k, idx: (i, idx[k])),
-                pl.BlockSpec((bn, block_size), lambda i, j, k, idx: (j, idx[k])),
-            ],
-            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, idx: (i, j)),
-        ),
+        **spec.grid_spec(),
         out_shape=jax.ShapeDtypeStruct((m, d_in), jnp.float32),
         interpret=interpret,
     )(block_idx, dy, w)
@@ -135,18 +138,13 @@ def dw_gathered(
     assert m % bk_m == 0 and d_in % bm == 0 and n % block_size == 0
 
     nsteps = m // bk_m
-    grid = (d_in // bm, kb, nsteps)
+    spec = specs.dw_gathered_spec(
+        m, n, d_in, kb, block_size=block_size, bm=bm, bk_m=bk_m,
+        itemsize=x.dtype.itemsize,
+    )
     return pl.pallas_call(
         functools.partial(_dw_kernel, nsteps=nsteps),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bk_m, bm), lambda i, j, s, idx: (s, i)),
-                pl.BlockSpec((bk_m, block_size), lambda i, j, s, idx: (s, idx[j])),
-            ],
-            out_specs=pl.BlockSpec((bm, block_size), lambda i, j, s, idx: (i, j)),
-        ),
+        **spec.grid_spec(),
         out_shape=jax.ShapeDtypeStruct((d_in, kb * block_size), jnp.float32),
         interpret=interpret,
     )(block_idx, x, dy)
@@ -213,37 +211,20 @@ def conv_dw_fused(
     h_pad = s_total // b
     assert b * h_pad == s_total, (s_total, b, h_pad)
     kb = block_idx.shape[0]
-    nb = c_pad // block_size
-    bpg = nb // g
-    sh, sw = stride
-    dh, dw_ = dilation
+    _, sw = stride
+    _, dw_ = dilation
 
-    grid = (kh_dim, kb, m2)
+    spec = specs.conv_dw_fused_spec(
+        b=b, h_pad=h_pad, w_pad=w_pad, groups=g, cg=cg, h_out=h_out,
+        w_out=w_out, c_pad=c_pad, kh_dim=kh_dim, kw_dim=kw_dim,
+        stride=stride, dilation=dilation, kb=kb, block_size=block_size,
+        itemsize=xg.dtype.itemsize,
+    )
     return pl.pallas_call(
         functools.partial(
             _conv_dw_kernel, kw_dim=kw_dim, sw=sw, dw_=dw_, w_out=w_out
         ),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec(
-                    (1, 1, w_pad, cg),
-                    lambda kh, j, s, idx: (
-                        (s // h_out) * h_pad + (s % h_out) * sh + kh * dh,
-                        idx[j] // bpg,
-                        0,
-                        0,
-                    ),
-                ),
-                pl.BlockSpec(
-                    (1, w_out, block_size), lambda kh, j, s, idx: (s, 0, idx[j])
-                ),
-            ],
-            out_specs=pl.BlockSpec(
-                (1, kw_dim, cg, block_size), lambda kh, j, s, idx: (kh, 0, 0, j)
-            ),
-        ),
+        **spec.grid_spec(),
         out_shape=jax.ShapeDtypeStruct(
             (kh_dim, kw_dim, cg, kb * block_size), jnp.float32
         ),
@@ -324,41 +305,23 @@ def conv_dx_fused(
     h_out = m2 // b
     kb = block_idx.shape[0]
     assert kbbs == kb * block_size, (w2k.shape, kb, block_size)
-    nb = c_pad // block_size
-    bpg = nb // groups
     assert kb % groups == 0, (kb, groups)
     kbg = kb // groups
     sh, sw = stride
     dh, dw_ = dilation
 
-    grid = (b * h_pad, kb, kh_dim)
+    spec = specs.conv_dx_fused_spec(
+        b=b, h_pad=h_pad, w_pad=w_pad, groups=groups, cg=cg, h_out=h_out,
+        w_out=w_out, c_pad=c_pad, kh_dim=kh_dim, kw_dim=kw_dim,
+        stride=stride, dilation=dilation, kb=kb, block_size=block_size,
+        itemsize=dy2r.dtype.itemsize,
+    )
     return pl.pallas_call(
         functools.partial(
             _conv_dx_kernel, kw_dim=kw_dim, sh=sh, sw=sw, dh=dh, dw_=dw_,
             h_out=h_out, h_pad=h_pad, kbg=kbg, bs=block_size,
         ),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec(
-                    (1, w_out, block_size),
-                    lambda s, j, kh, idx: (
-                        (s // h_pad) * h_out
-                        + jnp.clip((s % h_pad - kh * dh) // sh, 0, h_out - 1),
-                        0,
-                        idx[j],
-                    ),
-                ),
-                pl.BlockSpec(
-                    (kh_dim, kw_dim, cg, kb * block_size),
-                    lambda s, j, kh, idx: (0, 0, 0, 0),
-                ),
-            ],
-            out_specs=pl.BlockSpec(
-                (1, 1, w_pad, cg), lambda s, j, kh, idx: (s, idx[j] // bpg, 0, 0)
-            ),
-        ),
+        **spec.grid_spec(),
         out_shape=jax.ShapeDtypeStruct((b * h_pad, groups, w_pad, cg), jnp.float32),
         interpret=interpret,
     )(block_idx, dy2r, w2k)
@@ -388,12 +351,10 @@ def importance(
     """Per-channel importance mean |dY| over rows: dy[M, N] -> [N] f32."""
     m, n = dy.shape
     assert m % bm == 0 and n % bn == 0
-    grid = (n // bn, m // bm)
+    spec = specs.importance_spec(m, n, bm=bm, bn=bn, itemsize=dy.dtype.itemsize)
     out = pl.pallas_call(
         functools.partial(_imp_kernel, m_total=m),
-        grid=grid,
-        in_specs=[pl.BlockSpec((bm, bn), lambda j, s: (s, j))],
-        out_specs=pl.BlockSpec((1, bn), lambda j, s: (0, j)),
+        **spec.grid_spec(),
         out_shape=jax.ShapeDtypeStruct((1, n), jnp.float32),
         interpret=interpret,
     )(dy)
@@ -432,15 +393,12 @@ def matmul(
     m, k = a.shape
     k2, n = b.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
-    grid = (m // bm, n // bn, k // bk)
+    spec = specs.matmul_spec(
+        m, k, n, bm=bm, bn=bn, bk=bk, itemsize=a.dtype.itemsize
+    )
     return pl.pallas_call(
         _mm_kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
-            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        **spec.grid_spec(),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(a, b)

@@ -28,7 +28,7 @@ framework-native shrunk-VJP path in :mod:`repro.core.conv`.
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from collections.abc import Callable
 
 import jax
 
@@ -39,10 +39,10 @@ def conv_patches(
     x: jax.Array,
     kh: int,
     kw: int,
-    stride: Tuple[int, int],
+    stride: tuple[int, int],
     padding,
-    dilation: Tuple[int, int],
-) -> Tuple[jax.Array, Callable[[jax.Array], jax.Array], Tuple[int, int]]:
+    dilation: tuple[int, int],
+) -> tuple[jax.Array, Callable[[jax.Array], jax.Array], tuple[int, int]]:
     """Extract receptive-field patches and return the col2im closure.
 
     Args:
@@ -88,7 +88,7 @@ def flatten_filters(w: jax.Array) -> jax.Array:
     return w.reshape(c_out, -1).T
 
 
-def unflatten_filter_grad(dw2: jax.Array, w_shape: Tuple[int, ...]) -> jax.Array:
+def unflatten_filter_grad(dw2: jax.Array, w_shape: tuple[int, ...]) -> jax.Array:
     """Canonical ``dW2 [C_in*Kh*Kw, C_out]`` → OIHW filter gradient."""
     c_out, c_in, kh, kw = w_shape
     return dw2.T.reshape(c_out, c_in, kh, kw)

@@ -32,9 +32,10 @@ import functools
 import math
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
+
+from repro.kernels import specs
 
 
 def _paged_attn_kernel(
@@ -118,33 +119,15 @@ def paged_attention(
     # tables are always valid page ids; clip defensively so a bad entry
     # can only read a wrong (causally fenced) page, never out of bounds
     tbl = jnp.clip(block_tables.reshape(-1).astype(jnp.int32), 0, n_pages - 1)
-    sg = s * (h // kvh)
+    spec = specs.paged_attention_spec(
+        b=b, s=s, h=h, d=d, n_pages=n_pages, bs_pg=bs_pg, kvh=kvh, nb=nb,
+        itemsize=q.dtype.itemsize,
+    )
     return pl.pallas_call(
         functools.partial(
             _paged_attn_kernel, bs_pg=bs_pg, nb=nb, scale=1.0 / math.sqrt(d)
         ),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(b, nb),
-            in_specs=[
-                pl.BlockSpec((1, s, h, d), lambda bi, j, tbl: (bi, 0, 0, 0)),
-                pl.BlockSpec(
-                    (1, bs_pg, kvh, d),
-                    lambda bi, j, tbl: (tbl[bi * nb + j], 0, 0, 0),
-                ),
-                pl.BlockSpec(
-                    (1, bs_pg, kvh, d),
-                    lambda bi, j, tbl: (tbl[bi * nb + j], 0, 0, 0),
-                ),
-                pl.BlockSpec((1, s), lambda bi, j, tbl: (bi, 0)),
-            ],
-            out_specs=pl.BlockSpec((1, s, h, d), lambda bi, j, tbl: (bi, 0, 0, 0)),
-            scratch_shapes=[
-                pltpu.VMEM((kvh, sg), jnp.float32),
-                pltpu.VMEM((kvh, sg), jnp.float32),
-                pltpu.VMEM((kvh, sg, d), jnp.float32),
-            ],
-        ),
+        **spec.grid_spec(),
         out_shape=jax.ShapeDtypeStruct((b, s, h, d), jnp.float32),
         interpret=interpret,
     )(tbl, q, k_pool, v_pool, qpos.astype(jnp.int32))

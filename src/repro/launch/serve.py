@@ -139,7 +139,7 @@ def run(args) -> dict:
                 gen_tokens += out["generated_tokens"]
                 prefill_s += out["prefill_s"]
                 decode_s += out["decode_s"]
-                for r, toks in zip(wave, out["tokens"]):
+                for r, toks in zip(wave, out["tokens"], strict=True):
                     tokens_by_rid[r.rid] = toks
             gen = np.stack([tokens_by_rid[r.rid] for r in reqs])
             return {

@@ -18,7 +18,7 @@ the state omits ``rng`` the step falls back to pure greedy argmax
 """
 from __future__ import annotations
 
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp

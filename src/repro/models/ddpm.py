@@ -221,6 +221,7 @@ def iter_conv_shapes(image, base: int = 64):
     for blk, (ci, co, h) in zip(
         ("down1", "down2", "down3"),
         [(c1, c1, hh), (c1, c2, hh // 2), (c2, c3, hh // 4)],
+        strict=True,
     ):
         yield (f"{blk}/conv1", ci, co, 3, h, h)
         yield (f"{blk}/conv2", co, co, 3, h, h)
@@ -232,6 +233,7 @@ def iter_conv_shapes(image, base: int = 64):
     for blk, (ci, co, h) in zip(
         ("up3", "up2", "up1"),
         [(c3 + c3, c2, hh // 4), (c2 + c2, c1, hh // 2), (c1 + c1, c1, hh)],
+        strict=True,
     ):
         yield (f"{blk}/conv1", ci, co, 3, h, h)
         yield (f"{blk}/conv2", co, co, 3, h, h)

@@ -19,7 +19,6 @@ its own policy — the per-site control surface of a
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -171,9 +170,9 @@ def masked_attention(
     causal: bool,
     q_offset: int = 0,
     q_chunk: int = 1024,
-    kv_len: Optional[jax.Array] = None,
+    kv_len: jax.Array | None = None,
     seq_shard_hint: bool = False,
-    qpos: Optional[jax.Array] = None,
+    qpos: jax.Array | None = None,
 ) -> jax.Array:
     """Blocked attention: scan over query chunks, full-K masked scores.
 
@@ -413,7 +412,7 @@ def embed_apply(p, tokens):
     return jnp.take(p["table"], tokens, axis=0)
 
 
-def unembed_apply(p, x, valid: Optional[int] = None):
+def unembed_apply(p, x, valid: int | None = None):
     """Tied unembedding: x [B,S,d] @ table^T -> logits fp32.
 
     ``valid``: logical vocab size — logits of padded table rows (vocab

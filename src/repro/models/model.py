@@ -16,7 +16,7 @@ Batch dict keys by family:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -26,10 +26,10 @@ from repro.core.policy import DENSE, PolicyLike
 from repro.models import layers, transformer
 
 
-def init_params(cfg: ModelConfig, rng: jax.Array) -> Dict[str, Any]:
+def init_params(cfg: ModelConfig, rng: jax.Array) -> dict[str, Any]:
     dt = jnp.dtype(cfg.dtype)
     k_emb, k_stack, k_enc, k_out = jax.random.split(rng, 4)
-    params: Dict[str, Any] = {
+    params: dict[str, Any] = {
         "embed": layers.embed_init(k_emb, cfg.padded_vocab, cfg.d_model, dt),
         "final_norm": layers.rmsnorm_init(cfg.d_model, dt),
     }
@@ -70,9 +70,9 @@ def _embed_inputs(cfg, params, batch):
 def forward(
     cfg: ModelConfig,
     params,
-    batch: Dict[str, jax.Array],
+    batch: dict[str, jax.Array],
     policy: PolicyLike = DENSE,
-) -> Tuple[jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array]:
     """Full-sequence forward. Returns (logits fp32 [B, S, V], aux_loss)."""
     x = _embed_inputs(cfg, params, batch)
     aux = jnp.zeros((), jnp.float32)
@@ -92,9 +92,9 @@ def forward(
 def loss_fn(
     cfg: ModelConfig,
     params,
-    batch: Dict[str, jax.Array],
+    batch: dict[str, jax.Array],
     policy: PolicyLike = DENSE,
-) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+) -> tuple[jax.Array, dict[str, jax.Array]]:
     """Next-token cross-entropy (+0.01·MoE aux)."""
     logits, aux = forward(cfg, params, batch, policy)
     targets = batch["targets"]
@@ -160,8 +160,8 @@ def decode_slots(
     slot_pos: jax.Array,  # [B] int32: per-slot cache write position
     token_count: jax.Array,  # [B] int32: real tokens per slot (0 = idle slot)
     *,
-    enc_out: Optional[jax.Array] = None,
-    block_tables: Optional[jax.Array] = None,  # [B, NB] int32 (paged cache)
+    enc_out: jax.Array | None = None,
+    block_tables: jax.Array | None = None,  # [B, NB] int32 (paged cache)
     paged_kernel: bool = False,
     policy: PolicyLike = DENSE,
     all_logits: bool = False,
@@ -333,7 +333,7 @@ def decode_step(
     cache,
     pos: jax.Array,  # scalar int32: current write position
     *,
-    enc_out: Optional[jax.Array] = None,
+    enc_out: jax.Array | None = None,
     policy: PolicyLike = DENSE,
 ):
     """One lock-step decode step (all rows at the same ``pos``).

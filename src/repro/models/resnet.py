@@ -13,7 +13,7 @@ needed for the reproduction benchmarks, but running stats are kept).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -98,14 +98,14 @@ def init_params(
     keys = jax.random.split(key, 64)
     ki = iter(keys)
     stem_k = 3 if small_stem else 7
-    p: Dict[str, Any] = {
+    p: dict[str, Any] = {
         "stem": conv_init(next(ki), 64, in_channels, stem_k),
         "stem_bn": bn_init(64),
         "blocks": [],
     }
     widths = (64, 128, 256, 512)
     c_in = 64
-    for si, (n, w) in enumerate(zip(stages, widths)):
+    for si, (n, w) in enumerate(zip(stages, widths, strict=True)):
         for b in range(n):
             stride = 2 if (b == 0 and si > 0) else 1
             if kind == "basic":
@@ -143,7 +143,7 @@ def site_names(name: str):
     widths = (64, 128, 256, 512)
     sites = ["stem"]
     c_in, bi = 64, 0
-    for si, (n, w) in enumerate(zip(stages, widths)):
+    for si, (n, w) in enumerate(zip(stages, widths, strict=True)):
         for b in range(n):
             stride = 2 if (b == 0 and si > 0) else 1
             convs = ("conv1", "conv2") if kind == "basic" else ("conv1", "conv2", "conv3")
@@ -195,7 +195,7 @@ def forward(
     train: bool = True,
     small_stem: bool = True,
     dropout_rate: float = 0.0,
-    dropout_key: Optional[jax.Array] = None,
+    dropout_key: jax.Array | None = None,
 ) -> jax.Array:
     """x [B, C, H, W] -> logits [B, num_classes]."""
     kind, _ = LAYOUTS[name]
@@ -210,7 +210,7 @@ def forward(
             -h, jnp.inf, jax.lax.min, (1, 1, 3, 3), (1, 1, 2, 2), "SAME"
         )
     dk = dropout_key
-    for bi, (blk, stride) in enumerate(zip(params["blocks"], block_strides(name))):
+    for bi, (blk, stride) in enumerate(zip(params["blocks"], block_strides(name), strict=True)):
         if kind == "basic":
             h = _basic_apply(blk, h, stride, policy, train, f"block_{bi}")
         else:
@@ -223,7 +223,7 @@ def forward(
     return h @ params["head"]["w"] + params["head"]["b"]
 
 
-def iter_conv_shapes(name: str, image: Tuple[int, int, int]):
+def iter_conv_shapes(name: str, image: tuple[int, int, int]):
     """Yield ``(site, c_in, c_out, k, h_out, w_out)`` for every conv.
 
     The single source of the ResNet's layer geometry on ``image``
@@ -242,7 +242,7 @@ def iter_conv_shapes(name: str, image: Tuple[int, int, int]):
     c_in = 64
     widths = (64, 128, 256, 512)
     bi = 0
-    for si, (n, w) in enumerate(zip(stages, widths)):
+    for si, (n, w) in enumerate(zip(stages, widths, strict=True)):
         for b in range(n):
             stride = 2 if (b == 0 and si > 0) else 1
             h_cur2, w_cur2 = h_cur // stride, w_cur // stride
@@ -267,9 +267,9 @@ def iter_conv_shapes(name: str, image: Tuple[int, int, int]):
 def flops_per_iter(
     name: str,
     batch: int,
-    image: Tuple[int, int, int],
+    image: tuple[int, int, int],
     drop_rate: float = 0.0,
-    policy: Optional[PolicyLike] = None,
+    policy: PolicyLike | None = None,
 ):
     """Backward FLOPs per iteration from the paper's Eq. 6/7 model.
 

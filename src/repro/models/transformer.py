@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -39,10 +39,10 @@ from repro.models import layers, moe, ssm
 @dataclasses.dataclass(frozen=True)
 class Slot:
     mixer: str  # "attn" | "ssm"
-    ffn: Optional[str]  # "mlp" | "moe" | None
+    ffn: str | None  # "mlp" | "moe" | None
 
 
-def period_pattern(cfg: ModelConfig) -> List[Slot]:
+def period_pattern(cfg: ModelConfig) -> list[Slot]:
     """The repeating layer pattern for one period."""
     if cfg.family == "ssm":
         return [Slot("ssm", None)]
@@ -73,7 +73,7 @@ def n_periods(cfg: ModelConfig) -> int:
     return cfg.n_layers // plen
 
 
-def slot_sites(cfg: ModelConfig, slot: Slot) -> Tuple[str, ...]:
+def slot_sites(cfg: ModelConfig, slot: Slot) -> tuple[str, ...]:
     """Layer-relative site names of one period slot's projections."""
     if slot.mixer == "attn":
         sites = ["attn/q", "attn/k", "attn/v", "attn/o"]
@@ -88,7 +88,7 @@ def slot_sites(cfg: ModelConfig, slot: Slot) -> Tuple[str, ...]:
     return tuple(sites)
 
 
-def stack_sites(cfg: ModelConfig) -> Tuple[str, ...]:
+def stack_sites(cfg: ModelConfig) -> tuple[str, ...]:
     """Every sparsifiable site of the decoder stack, ``layer_{li}/...``."""
     slots = period_pattern(cfg)
     plen = len(slots)
@@ -98,11 +98,11 @@ def stack_sites(cfg: ModelConfig) -> Tuple[str, ...]:
     return tuple(out)
 
 
-def _mlp_sites(cfg) -> Tuple[str, ...]:
+def _mlp_sites(cfg) -> tuple[str, ...]:
     return ("mlp/up",) + (("mlp/gate",) if cfg.gated_mlp else ()) + ("mlp/down",)
 
 
-def encoder_sites(cfg: ModelConfig) -> Tuple[str, ...]:
+def encoder_sites(cfg: ModelConfig) -> tuple[str, ...]:
     """Whisper encoder sites, ``enc/layer_{i}/...``."""
     per = ("attn/q", "attn/k", "attn/v", "attn/o") + _mlp_sites(cfg)
     return tuple(
@@ -110,7 +110,7 @@ def encoder_sites(cfg: ModelConfig) -> Tuple[str, ...]:
     )
 
 
-def cross_decoder_sites(cfg: ModelConfig) -> Tuple[str, ...]:
+def cross_decoder_sites(cfg: ModelConfig) -> tuple[str, ...]:
     """Cross-decoder sites: self- and cross-attention plus the MLP."""
     per = tuple(
         f"{role}/{proj}" for role in ("self", "cross") for proj in ("q", "k", "v", "o")
@@ -154,7 +154,7 @@ def _dtype(cfg):
 def _slot_init(key, cfg: ModelConfig, slot: Slot):
     dt = _dtype(cfg)
     ks = jax.random.split(key, 4)
-    p: Dict[str, Any] = {"norm1": layers.rmsnorm_init(cfg.d_model, dt)}
+    p: dict[str, Any] = {"norm1": layers.rmsnorm_init(cfg.d_model, dt)}
     if slot.mixer == "attn":
         p["attn"] = layers.attn_init(ks[0], cfg, dt)
     else:
@@ -335,8 +335,12 @@ def stack_apply(
         np_ = n_periods(cfg)
         ys = []
         for pi in range(np_):
-            sp = jax.tree.map(lambda a: a[pi], params["slots"])
-            sc = jax.tree.map(lambda a: a[pi], caches) if decode else None
+            sp = jax.tree.map(lambda a, pi=pi: a[pi], params["slots"])
+            sc = (
+                jax.tree.map(lambda a, pi=pi: a[pi], caches)
+                if decode
+                else None
+            )
             body = make_body(tuple(per_layer[pi * plen : (pi + 1) * plen]))
             (x, aux), nc = body((x, aux), (sp, sc))
             ys.append(nc)
@@ -391,7 +395,9 @@ def encoder_apply(params, x, cfg, policy: PolicyLike):
         x, _ = jax.lax.scan(make_body(per_layer[0] if per_layer else policy), x, params)
     else:
         for i in range(cfg.n_enc_layers):
-            x, _ = make_body(per_layer[i])(x, jax.tree.map(lambda a: a[i], params))
+            x, _ = make_body(per_layer[i])(
+                x, jax.tree.map(lambda a, i=i: a[i], params)
+            )
     return x
 
 
@@ -455,9 +461,103 @@ def cross_decoder_apply(
     else:
         ys = []
         for i in range(cfg.n_layers):
-            p_i = jax.tree.map(lambda a: a[i], params)
-            c_i = jax.tree.map(lambda a: a[i], caches) if decode else None
+            p_i = jax.tree.map(lambda a, i=i: a[i], params)
+            c_i = (
+                jax.tree.map(lambda a, i=i: a[i], caches)
+                if decode
+                else None
+            )
             x, nc = make_body(per_layer[i])(x, (p_i, c_i))
             ys.append(nc)
         new_caches = jax.tree.map(lambda *a: jnp.stack(a), *ys) if decode else None
     return x, (new_caches if decode else None)
+
+
+# ----------------------------------------------------------------------
+# static geometry walk (for the program auditor / roofline)
+# ----------------------------------------------------------------------
+
+
+def iter_dense_shapes(cfg: ModelConfig, batch: int, seq: int):
+    """Yield ``(site, m, d_in, d_out, count)`` for every sparsifiable
+    projection of the model at one training shape.
+
+    ``site`` is a representative full site path (``layer_{si}/...`` for
+    the first period, ``enc/layer_0/...`` for the encoder) so callers
+    can resolve per-site policies against the same names
+    :func:`stack_sites` produces; ``count`` is how many layers share
+    that exact geometry (depth-uniform policies assumed — the same
+    restriction ``scan_layers=True`` already imposes). ``m`` is the
+    total contraction row count: ``batch*seq`` for sequence sites,
+    ``E*capacity`` for the batched expert matmuls.
+
+    Only ``sparse_dense`` projection sites appear — attention scores,
+    the SSM scan, embeddings and the logits head are not ssProp sites.
+    """
+    tokens = batch * seq
+    hd = cfg.head_dim
+
+    def _attn_sites(prefix, m_q, m_kv):
+        return [
+            (f"{prefix}/q", m_q, cfg.d_model, cfg.n_heads * hd),
+            (f"{prefix}/k", m_kv, cfg.d_model, cfg.n_kv_heads * hd),
+            (f"{prefix}/v", m_kv, cfg.d_model, cfg.n_kv_heads * hd),
+            (f"{prefix}/o", m_q, cfg.n_heads * hd, cfg.d_model),
+        ]
+
+    def _mlp_shapes(m, d_ff, gated):
+        out = [("mlp/up", m, cfg.d_model, d_ff)]
+        if gated:
+            out.append(("mlp/gate", m, cfg.d_model, d_ff))
+        out.append(("mlp/down", m, d_ff, cfg.d_model))
+        return out
+
+    if cfg.family == "encdec":
+        m_enc = batch * cfg.enc_seq
+        enc_per = _attn_sites("attn", m_enc, m_enc) + _mlp_shapes(
+            m_enc, cfg.d_ff, cfg.gated_mlp
+        )
+        for site, m, d_in, d_out in enc_per:
+            yield f"enc/layer_0/{site}", m, d_in, d_out, cfg.n_enc_layers
+        dec_per = (
+            _attn_sites("self", tokens, tokens)
+            + _attn_sites("cross", tokens, m_enc)
+            + _mlp_shapes(tokens, cfg.d_ff, cfg.gated_mlp)
+        )
+        for site, m, d_in, d_out in dec_per:
+            yield f"layer_0/{site}", m, d_in, d_out, cfg.n_layers
+        return
+
+    slots = period_pattern(cfg)
+    reps = n_periods(cfg)
+    for si, slot in enumerate(slots):
+        per = []
+        if slot.mixer == "attn":
+            per += _attn_sites("attn", tokens, tokens)
+        else:
+            d_in_proj = 2 * cfg.d_inner + 2 * cfg.ssm_state + cfg.n_ssm_heads
+            per += [
+                ("ssm/in_proj", tokens, cfg.d_model, d_in_proj),
+                ("ssm/out_proj", tokens, cfg.d_inner, cfg.d_model),
+            ]
+        if slot.ffn == "moe":
+            cap = max(
+                1, int(tokens * cfg.moe_topk / cfg.n_experts * cfg.capacity_factor)
+            )
+            rows = cfg.n_experts * cap
+            per += [
+                ("moe/gate", rows, cfg.d_model, cfg.d_ff),
+                ("moe/up", rows, cfg.d_model, cfg.d_ff),
+                ("moe/down", rows, cfg.d_ff, cfg.d_model),
+            ]
+            if cfg.n_shared_experts:
+                ffs = cfg.d_ff * cfg.n_shared_experts
+                per += [
+                    ("moe/shared/up", tokens, cfg.d_model, ffs),
+                    ("moe/shared/gate", tokens, cfg.d_model, ffs),
+                    ("moe/shared/down", tokens, ffs, cfg.d_model),
+                ]
+        elif slot.ffn == "mlp":
+            per += _mlp_shapes(tokens, cfg.d_ff, cfg.gated_mlp)
+        for site, m, d_in, d_out in per:
+            yield f"layer_{si}/{site}", m, d_in, d_out, reps

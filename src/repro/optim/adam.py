@@ -8,7 +8,7 @@ of the moments is applied by the launcher via sharding constraints
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -71,7 +71,7 @@ def clip_by_global_norm(grads, max_norm: float):
 
 def apply_updates(
     cfg: AdamConfig, params, grads, state: AdamState
-) -> Tuple[Any, AdamState, dict]:
+) -> tuple[Any, AdamState, dict]:
     """One Adam(W) step. Returns (new_params, new_state, metrics)."""
     gn = global_norm(grads)
     if cfg.clip_norm > 0:
@@ -98,13 +98,13 @@ def apply_updates(
     flat_g = jax.tree.leaves(grads)
     flat_m = jax.tree.leaves(state.m)
     flat_v = jax.tree.leaves(state.v)
-    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v, strict=True)]
     new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
     new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
     new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
     return new_p, AdamState(step, new_m, new_v), {"grad_norm": gn, "lr": lr}
 
 
-def adamw(cfg: Optional[AdamConfig] = None) -> AdamConfig:
+def adamw(cfg: AdamConfig | None = None) -> AdamConfig:
     """The paper's generation-task optimizer (AdamW, default params)."""
     return cfg or AdamConfig(lr=1e-3, weight_decay=1e-2)

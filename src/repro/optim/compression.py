@@ -13,7 +13,7 @@ Usage (inside the jitted train step, before psum/pmean over DP):
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,7 @@ def topk_compress(g: jax.Array, k: int) -> jax.Array:
 
 def compress_tree(
     grads: Any, residual: Any, *, ratio: float = 0.01, min_size: int = 4096
-) -> Tuple[Any, Any]:
+) -> tuple[Any, Any]:
     """Error-feedback top-k over every leaf larger than ``min_size``.
 
     Returns (compressed_grads, new_residual). Small tensors (norms,
@@ -49,7 +49,7 @@ def compress_tree(
 
     flat_g, treedef = jax.tree.flatten(grads)
     flat_r = jax.tree.leaves(residual)
-    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r, strict=True)]
     return (
         jax.tree.unflatten(treedef, [o[0] for o in outs]),
         jax.tree.unflatten(treedef, [o[1] for o in outs]),

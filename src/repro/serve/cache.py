@@ -38,8 +38,9 @@ would turn every gather into a collective).
 """
 from __future__ import annotations
 
+from collections.abc import Iterable, Sequence
 import dataclasses
-from typing import Any, Iterable, List, Optional, Sequence
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -107,7 +108,7 @@ class SlotCacheManager:
             )
         self.cache = cache
         self.pos = np.zeros((n_slots,), np.int32)  # per-slot write offset
-        self._free: List[int] = list(range(n_slots - 1, -1, -1))
+        self._free: list[int] = list(range(n_slots - 1, -1, -1))
         self._reset = jax.jit(lm.reset_slots)
 
     @property
@@ -170,14 +171,14 @@ class BlockAllocator:
             raise ValueError("n_blocks must be >= 1")
         self.n_blocks = n_blocks
         # lowest ids first, matching SlotCacheManager's slot order
-        self._free: List[int] = list(range(n_blocks - 1, -1, -1))
+        self._free: list[int] = list(range(n_blocks - 1, -1, -1))
         self._held = np.zeros((n_blocks,), bool)
 
     @property
     def n_free(self) -> int:
         return len(self._free)
 
-    def alloc(self, n: int = 1) -> List[int]:
+    def alloc(self, n: int = 1) -> list[int]:
         """Claim ``n`` pages (all or nothing). Raises :class:`NoFreeBlocks`
         if fewer than ``n`` are free — the pool is left untouched."""
         if n < 0:
@@ -272,7 +273,7 @@ class PagedCacheManager:
         self.block_tables = np.zeros((n_slots, self.blocks_per_slot), np.int32)
         self.n_table_blocks = np.zeros((n_slots,), np.int32)
         self.allocator = BlockAllocator(n_blocks)
-        self._free_slots: List[int] = list(range(n_slots - 1, -1, -1))
+        self._free_slots: list[int] = list(range(n_slots - 1, -1, -1))
         self._reset = jax.jit(lm.reset_paged)
 
     # ------------------------------------------------------------------
@@ -447,7 +448,7 @@ class PagedCacheManager:
             self.cache, jnp.asarray(slot_mask), jnp.asarray(page_mask)
         )
 
-    def page_view(self, page: int) -> Optional[list]:
+    def page_view(self, page: int) -> list | None:
         """Device readback of one page's K leaves (tests/debug only)."""
         out = []
         for path, leaf in jax.tree_util.tree_flatten_with_path(self.cache)[0]:

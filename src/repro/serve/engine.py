@@ -56,9 +56,10 @@ model families, greedy and sampled).
 """
 from __future__ import annotations
 
+from collections.abc import Callable, Iterator
 import math
 import time
-from typing import Callable, Dict, Iterator, List, NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -116,7 +117,7 @@ class ContinuousBatchingEngine:
         cache_dtype=jnp.float32,
         mesh=None,
         seq_shard: bool = False,
-        draft_cfg: Optional[ModelConfig] = None,
+        draft_cfg: ModelConfig | None = None,
         draft_params=None,
     ):
         self.cfg = cfg
@@ -162,10 +163,10 @@ class ContinuousBatchingEngine:
             # committed tokens (prompt + generated prefix) the drafter
             # has consumed per slot; 0 forces a full catch-up re-prefill
             self._draft_sync = np.zeros((serve_cfg.max_slots,), np.int64)
-        self.waiting: List[rq.Request] = []
+        self.waiting: list[rq.Request] = []
         self._known_rids = set()
-        self.by_slot: Dict[int, rq.Request] = {}
-        self.finished: Dict[int, rq.Request] = {}
+        self.by_slot: dict[int, rq.Request] = {}
+        self.finished: dict[int, rq.Request] = {}
         self.clock = 0
         # stats
         self.compute_steps = 0
@@ -183,7 +184,7 @@ class ContinuousBatchingEngine:
         self.spec_accepted = 0  # draft tokens the target confirmed
         self.draft_steps = 0  # drafter model invocations
         self.padded_tokens = 0  # B × width summed over compute steps
-        self.step_times: List[float] = []
+        self.step_times: list[float] = []
         self._occupancy_sum = 0
         self.enc_out = None
         self._encode = None
@@ -296,7 +297,7 @@ class ContinuousBatchingEngine:
     # paged-cache block management
     # ------------------------------------------------------------------
 
-    def _pick_victim(self, keep: int) -> Optional[int]:
+    def _pick_victim(self, keep: int) -> int | None:
         """Youngest running slot other than ``keep`` (max arrival, rid)."""
         cands = [s for s in self.by_slot if s != keep]
         if not cands:
@@ -333,7 +334,7 @@ class ContinuousBatchingEngine:
         self.waiting.append(req)
         self.waiting.sort(key=lambda r: (r.arrival, r.rid))
 
-    def _ensure_blocks(self, plan: Dict[int, int]) -> Dict[int, int]:
+    def _ensure_blocks(self, plan: dict[int, int]) -> dict[int, int]:
         """Grow block tables to cover this step's writes, oldest request
         first; preempt the youngest running request on pool exhaustion
         (evicting it from the plan) and retry."""
@@ -396,7 +397,7 @@ class ContinuousBatchingEngine:
         self.draft_steps += 1
         return np.asarray(nxt)
 
-    def _draft_propose(self, plan: Dict[int, int]) -> Dict[int, List[int]]:
+    def _draft_propose(self, plan: dict[int, int]) -> dict[int, list[int]]:
         """Draft ``n-1`` proposal tokens for each speculative decode slot.
 
         The drafter-never-commits-speculative-state protocol, per tick:
@@ -448,7 +449,7 @@ class ContinuousBatchingEngine:
             pending.pop(s)
         if not spec_slots:
             return {}
-        proposals: Dict[int, List[int]] = {s: [] for s in spec_slots}
+        proposals: dict[int, list[int]] = {s: [] for s in spec_slots}
         while any(len(p) for p in pending.values()):
             tokens = np.zeros((b, chunk), np.int32)
             count = np.zeros((b,), np.int32)
@@ -484,7 +485,7 @@ class ContinuousBatchingEngine:
     # one engine iteration
     # ------------------------------------------------------------------
 
-    def _pick_width(self, plan: Dict[int, int]) -> int:
+    def _pick_width(self, plan: dict[int, int]) -> int:
         """Smallest compiled step width fitting the largest chunk — the
         decode-width ladder (mixed steps stop padding to prefill_chunk)."""
         need = max(plan.values())
@@ -493,7 +494,7 @@ class ContinuousBatchingEngine:
                 return w
         return self.serve_cfg.prefill_chunk
 
-    def step(self) -> List[TokenEvent]:
+    def step(self) -> list[TokenEvent]:
         """Run one engine tick. Returns the tokens emitted this tick (in
         slot order) — empty on an idle tick or a pure-prefill step."""
         self._admit()
@@ -583,11 +584,11 @@ class ContinuousBatchingEngine:
                 if is_spec[slot] and consumed[slot] < count[slot]:
                     self.slots.trim(slot, int(self.slots.pos[slot]))
 
-        events: List[TokenEvent] = []
+        events: list[TokenEvent] = []
         done_slots = []
-        for slot, n in sorted(plan.items()):
+        for slot, _n in sorted(plan.items()):
             req = self.by_slot[slot]
-            emitted: List[int] = []
+            emitted: list[int] = []
             if req.state == rq.PREFILL:
                 req.prefilled += int(count[slot])
                 if req.remaining_prompt == 0:
@@ -645,10 +646,10 @@ class ContinuousBatchingEngine:
 
     def run(
         self,
-        max_ticks: Optional[int] = None,
+        max_ticks: int | None = None,
         *,
-        on_token: Optional[Callable[[TokenEvent], None]] = None,
-    ) -> Dict[int, np.ndarray]:
+        on_token: Callable[[TokenEvent], None] | None = None,
+    ) -> dict[int, np.ndarray]:
         """Drive to completion (incl. future arrivals). rid -> tokens.
 
         ``on_token`` is called with each :class:`TokenEvent` the tick it
@@ -664,7 +665,7 @@ class ContinuousBatchingEngine:
                 break
         return {rid: r.tokens() for rid, r in sorted(self.finished.items())}
 
-    def stream(self, max_ticks: Optional[int] = None) -> Iterator[TokenEvent]:
+    def stream(self, max_ticks: int | None = None) -> Iterator[TokenEvent]:
         """Drive to completion, yielding each token as it is generated.
 
         The iterator flavour of the streaming API: yields
@@ -682,7 +683,7 @@ class ContinuousBatchingEngine:
     # stats
     # ------------------------------------------------------------------
 
-    def stats(self) -> Dict[str, float]:
+    def stats(self) -> dict[str, float]:
         """Aggregate serving metrics for the finished (or partial) run.
 
         Keys cover throughput (``tokens_per_step``, ``tokens_per_s``),

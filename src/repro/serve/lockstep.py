@@ -16,8 +16,8 @@ token-for-token — the property that makes sampling testable at all.
 """
 from __future__ import annotations
 
+from collections.abc import Sequence
 import time
-from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,10 +36,10 @@ def generate_lockstep(
     gen_lens: Sequence[int],  # per-request generation lengths
     *,
     max_seq: int,
-    frames: Optional[np.ndarray] = None,  # [B, enc_seq, d_model] (encdec)
+    frames: np.ndarray | None = None,  # [B, enc_seq, d_model] (encdec)
     cache_dtype=jnp.float32,
-    sampling: Optional[Sequence[SamplingParams]] = None,
-) -> Dict[str, object]:
+    sampling: Sequence[SamplingParams] | None = None,
+) -> dict[str, object]:
     """Lock-step decode of one static batch (greedy by default).
 
     ``sampling`` (one :class:`SamplingParams` per request, or None for
@@ -118,9 +118,9 @@ def generate_reference(
     gen_len: int,
     *,
     max_seq: int,
-    frames: Optional[np.ndarray] = None,  # [enc_seq, d_model]
+    frames: np.ndarray | None = None,  # [enc_seq, d_model]
     cache_dtype=jnp.float32,
-    sampling: Optional[SamplingParams] = None,
+    sampling: SamplingParams | None = None,
 ) -> np.ndarray:
     """Single-request lock-step decode (greedy, or sampled via
     ``sampling``) — the per-request oracle the continuous engine must
@@ -141,7 +141,7 @@ def generate_reference(
 def lockstep_waves(
     requests,
     capacity: int,
-) -> List[List]:
+) -> list[list]:
     """Split a request list into static batches ("waves") of ``capacity``
     in arrival order — how a lock-step server has to run a staggered
     workload. Used by the latency benchmark for the steps comparison."""

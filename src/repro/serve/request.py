@@ -40,7 +40,6 @@ Two strategies exist:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
 
 import numpy as np
 
@@ -130,7 +129,7 @@ class Request:
     prompt: np.ndarray
     max_new_tokens: int
     arrival: int = 0
-    frames: Optional[np.ndarray] = None
+    frames: np.ndarray | None = None
     sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
     no_spec: bool = False
 
@@ -138,17 +137,17 @@ class Request:
     state: str = WAITING
     slot: int = -1
     prefilled: int = 0  # context tokens already fed to the model
-    generated: List[int] = dataclasses.field(default_factory=list)
+    generated: list[int] = dataclasses.field(default_factory=list)
     preemptions: int = 0  # times evicted back to WAITING (paged engine)
     # recompute context after a preemption (None = plain prompt)
-    _resume: Optional[np.ndarray] = None
+    _resume: np.ndarray | None = None
     # host-swapped cache state (SwappedSlot) awaiting re-admission
-    swap: Optional[object] = None
+    swap: object | None = None
     # traces (engine ticks / seconds) for latency accounting
     first_token_step: int = -1
     finish_step: int = -1
-    token_steps: List[int] = dataclasses.field(default_factory=list)
-    token_latencies: List[float] = dataclasses.field(default_factory=list)
+    token_steps: list[int] = dataclasses.field(default_factory=list)
+    token_latencies: list[float] = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)

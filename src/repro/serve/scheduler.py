@@ -26,7 +26,6 @@ scheduler produces.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
 
 from repro.serve.request import Request
 
@@ -90,7 +89,7 @@ class ServeConfig:
     token_budget: int = 0
     block_size: int = 0
     n_blocks: int = 0
-    decode_widths: Tuple[int, ...] = (1, 4)
+    decode_widths: tuple[int, ...] = (1, 4)
     attn_kernel: bool = False
     preempt: str = "auto"
     spec_k: int = 0
@@ -165,7 +164,7 @@ class ServeConfig:
         return self.n_blocks or (self.max_slots * self.blocks_per_slot)
 
     @property
-    def widths(self) -> Tuple[int, ...]:
+    def widths(self) -> tuple[int, ...]:
         """Ascending compiled step widths (always ends at prefill_chunk)."""
         ws = {w for w in self.decode_widths if w <= self.prefill_chunk}
         ws.add(self.prefill_chunk)
@@ -181,12 +180,12 @@ class Scheduler:
 
     def admit(
         self,
-        waiting: List[Request],
+        waiting: list[Request],
         n_free: int,
         clock: int,
         *,
-        n_free_blocks: Optional[int] = None,
-    ) -> List[Request]:
+        n_free_blocks: int | None = None,
+    ) -> list[Request]:
         """FIFO admission: arrived requests, up to the free-slot count.
 
         ``waiting`` must be sorted by (arrival, rid); returns the prefix
@@ -214,7 +213,7 @@ class Scheduler:
             out.append(req)
         return out
 
-    def plan(self, by_slot: Dict[int, Request]) -> Dict[int, int]:
+    def plan(self, by_slot: dict[int, Request]) -> dict[int, int]:
         """Token counts per slot for one step, under the budget.
 
         Decode slots first (round-robin so a budget smaller than the
@@ -232,7 +231,7 @@ class Scheduler:
         slot).
         """
         budget = self.cfg.budget
-        plan: Dict[int, int] = {}
+        plan: dict[int, int] = {}
         decoding = [s for s in sorted(by_slot) if by_slot[s].remaining_prompt == 0]
         if decoding:
             off = self._rr % len(decoding)

@@ -8,7 +8,6 @@ while pages let the many short requests share the memory the few long
 ones actually use."""
 from __future__ import annotations
 
-from typing import List, Optional
 
 import numpy as np
 
@@ -28,7 +27,7 @@ def poisson_workload(
     temperature: float = 0.0,
     top_k: int = 0,
     top_p: float = 1.0,
-) -> List[Request]:
+) -> list[Request]:
     """Build a staggered request list for ``cfg``.
 
     Arrivals are a Poisson process (exponential inter-arrival, mean
@@ -60,7 +59,7 @@ def poisson_workload(
         p = int(rng.integers(plo, phi + 1))
         g = int(rng.integers(glo, ghi + 1))
         prompt = rng.integers(0, cfg.vocab, size=p).astype(np.int32)
-        frames: Optional[np.ndarray] = None
+        frames: np.ndarray | None = None
         if cfg.family == "encdec":
             frames = rng.standard_normal((cfg.enc_seq, cfg.d_model)).astype(
                 np.float32
@@ -97,7 +96,7 @@ def longtail_workload(
     tail_frac: float = 0.2,  # fraction of requests in the tail
     seed: int = 0,
     uniform_prompts: bool = False,
-) -> List[Request]:
+) -> list[Request]:
     """Long-tail workload: ~``1 - tail_frac`` short requests plus a few
     long ones. A contiguous cache must budget every slot for the tail's
     worst case; the paged cache only spends pages on the tail requests

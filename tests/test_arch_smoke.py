@@ -51,7 +51,7 @@ def test_train_step_improves_and_finite(arch):
     )
     batch = _batch(cfg)
     losses = []
-    for i in range(3):
+    for _ in range(3):
         params, opt_state, metrics = step(params, opt_state, batch)
         losses.append(float(metrics["loss"]))
     assert all(np.isfinite(x) for x in losses)

@@ -98,7 +98,7 @@ class TestConvParityGrid:
         g_mask = _conv_grads(
             _pol(granularity, bwd_dtype, mask=True), stride, padding, dilation, groups
         )
-        for name, a, r in zip(("dx", "dw", "db"), g_gather, g_mask):
+        for name, a, r in zip(("dx", "dw", "db"), g_gather, g_mask, strict=True):
             np.testing.assert_allclose(
                 np.asarray(a), np.asarray(r), err_msg=name, **_tols(bwd_dtype)
             )
@@ -109,7 +109,7 @@ class TestConvParityGrid:
         g2 = _conv_grads(
             _pol(granularity, bwd_dtype, mask=True, tp_shards=4), 1, 1, 1, 1
         )
-        for name, a, r in zip(("dx", "dw", "db"), g1, g2):
+        for name, a, r in zip(("dx", "dw", "db"), g1, g2, strict=True):
             np.testing.assert_allclose(
                 np.asarray(a), np.asarray(r), err_msg=name, **_tols(bwd_dtype)
             )
@@ -127,7 +127,7 @@ class TestDenseParityGrid:
     def test_gather_equals_mask_oracle(self, granularity, bwd_dtype, tp_shards):
         g1 = _dense_grads(_pol(granularity, bwd_dtype, tp_shards=tp_shards))
         g2 = _dense_grads(_pol(granularity, bwd_dtype, mask=True, tp_shards=tp_shards))
-        for name, a, r in zip(("dx", "dw", "db"), g1, g2):
+        for name, a, r in zip(("dx", "dw", "db"), g1, g2, strict=True):
             np.testing.assert_allclose(
                 np.asarray(a), np.asarray(r), err_msg=name, **_tols(bwd_dtype)
             )
@@ -145,7 +145,7 @@ class TestPallasParity:
         ref = _pol("block", "", block_size=8, mask=True)
         g1 = _conv_grads(pol, stride, padding, dilation, 1)
         g2 = _conv_grads(ref, stride, padding, dilation, 1)
-        for name, a, r in zip(("dx", "dw", "db"), g1, g2):
+        for name, a, r in zip(("dx", "dw", "db"), g1, g2, strict=True):
             np.testing.assert_allclose(
                 np.asarray(a), np.asarray(r), rtol=1e-3, atol=1e-4, err_msg=name
             )
@@ -155,7 +155,7 @@ class TestPallasParity:
         ref = _pol("block", "bfloat16", block_size=8, mask=True)
         g1 = _conv_grads(pol, 1, 1, 1, 1)
         g2 = _conv_grads(ref, 1, 1, 1, 1)
-        for name, a, r in zip(("dx", "dw", "db"), g1, g2):
+        for name, a, r in zip(("dx", "dw", "db"), g1, g2, strict=True):
             np.testing.assert_allclose(
                 np.asarray(a), np.asarray(r), err_msg=name, **_tols("bfloat16")
             )
@@ -211,7 +211,7 @@ class TestPallasParity:
         ref = dataclasses.replace(pol, fuse_im2col=False)
         g1 = _conv_grads(pol, stride, padding, dilation, groups)
         g2 = _conv_grads(ref, stride, padding, dilation, groups)
-        for name, a, r in zip(("dx", "dw", "db"), g1, g2):
+        for name, a, r in zip(("dx", "dw", "db"), g1, g2, strict=True):
             np.testing.assert_allclose(
                 np.asarray(a), np.asarray(r), rtol=1e-3, atol=1e-4, err_msg=name
             )
@@ -226,7 +226,7 @@ class TestPallasParity:
         g1 = _conv_grads(pol, 1, 1, 1, 2)
         g2 = _conv_grads(ref, 1, 1, 1, 2)
         assert calls["conv_dx_fused"] == 1 and calls["conv_dw_fused_scatter"] == 1
-        for a, r in zip(g1, g2):
+        for a, r in zip(g1, g2, strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(r), rtol=1e-3, atol=1e-4)
 
     def test_conv_pallas_grouped_indivisible_falls_back(self, monkeypatch):
@@ -239,7 +239,7 @@ class TestPallasParity:
         g1 = _conv_grads(pol, 1, 1, 1, 2)
         g2 = _conv_grads(ref, 1, 1, 1, 2)
         assert calls["conv_dx_fused"] == 0 and calls["conv_dw_fused_scatter"] == 0
-        for a, r in zip(g1, g2):
+        for a, r in zip(g1, g2, strict=True):
             np.testing.assert_allclose(np.asarray(a), np.asarray(r), rtol=2e-4, atol=1e-5)
 
 
@@ -262,7 +262,7 @@ class TestRaggedTailRegression:
         ref = self._make_tail_kept_policy(mask_mode=True)
         g1 = self._dense(pol)
         g2 = self._dense(ref)
-        for name, a, r in zip(("dx", "dw", "db"), g1, g2):
+        for name, a, r in zip(("dx", "dw", "db"), g1, g2, strict=True):
             np.testing.assert_allclose(
                 np.asarray(a), np.asarray(r), rtol=1e-3, atol=1e-4, err_msg=name
             )
@@ -273,7 +273,7 @@ class TestRaggedTailRegression:
         ref = self._make_tail_kept_policy(mask_mode=True)
         g1 = _conv_grads(pol, 1, 1, 1, 1, c_out=130)
         g2 = _conv_grads(ref, 1, 1, 1, 1, c_out=130)
-        for name, a, r in zip(("dx", "dw", "db"), g1, g2):
+        for name, a, r in zip(("dx", "dw", "db"), g1, g2, strict=True):
             np.testing.assert_allclose(
                 np.asarray(a), np.asarray(r), rtol=1e-3, atol=1e-4, err_msg=name
             )
@@ -341,7 +341,7 @@ class TestSparsifyFlags:
 
     def test_both_off_is_dense_path(self):
         pol = _pol("channel", "", sparsify_dx=False, sparsify_dw=False)
-        for a, r in zip(_dense_grads(pol), _dense_grads(self.DENSE)):
+        for a, r in zip(_dense_grads(pol), _dense_grads(self.DENSE), strict=True):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(r))
 
     def test_pallas_block_respects_flags(self):

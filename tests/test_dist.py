@@ -3,9 +3,9 @@ tolerance edge cases, and the checkpoint paths test_system.py only
 exercises indirectly (partial shardings restore, async-save flush)."""
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.configs.registry import get_config

@@ -333,7 +333,7 @@ class TestBitExactParity:
         l1, p1 = _train_resnet(legacy)
         l2, p2 = _train_resnet(res.policies_for_step)
         assert l1 == l2  # bit-exact, not approximately equal
-        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2), strict=True):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -399,7 +399,7 @@ def test_continuous_beats_lockstep_on_staggered_workload():
             max_seq=MAX_SEQ,
         )
         lockstep_steps += res["steps"]
-        for r, toks in zip(wave, res["tokens"]):
+        for r, toks in zip(wave, res["tokens"], strict=True):
             np.testing.assert_array_equal(out[r.rid], toks, err_msg=f"rid={r.rid}")
 
     assert engine_steps < lockstep_steps, (engine_steps, lockstep_steps)
@@ -681,7 +681,7 @@ def test_swap_roundtrip_restores_device_state():
     assert int(mgr.pos[slot2]) == 7
     new_pages = mgr.block_tables[slot2, :2].tolist()
     restored = lm.swap_out_slot(mgr.cache, slot2, new_pages)
-    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(swapped.data)):
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(swapped.data), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -66,7 +66,7 @@ class TestDenseGrad:
         gp = jax.grad(lambda x, w, b: ((x @ w + b) ** 2).sum(), argnums=(0, 1, 2))(
             x, w, b
         )
-        for a, r in zip(g, gp):
+        for a, r in zip(g, gp, strict=True):
             np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-3)
 
     @pytest.mark.parametrize("rate", [0.25, 0.5, 0.8])
@@ -74,7 +74,7 @@ class TestDenseGrad:
         x, w, b = xwb
         g_gather = _dense_grads(x, w, b, paper_default(rate))
         g_mask = _dense_grads(x, w, b, SsPropPolicy(rate, mask_mode=True))
-        for a, r in zip(g_gather, g_mask):
+        for a, r in zip(g_gather, g_mask, strict=True):
             np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4)
 
     def test_dropped_channels_zero_grad(self, xwb):
@@ -129,7 +129,7 @@ class TestDenseGrad:
         ref = dataclasses.replace(tpu_default(0.5), mask_mode=True)
         g1 = _dense_grads(x, w, b, pol)
         g2 = _dense_grads(x, w, b, ref)
-        for a, r in zip(g1, g2):
+        for a, r in zip(g1, g2, strict=True):
             np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-3)
 
 
@@ -147,7 +147,7 @@ class TestConvGrad:
 
         g1 = jax.grad(loss, argnums=(0, 1, 2))(x, w, b, paper_default(0.5))
         g2 = jax.grad(loss, argnums=(0, 1, 2))(x, w, b, SsPropPolicy(0.5, mask_mode=True))
-        for a, r in zip(g1, g2):
+        for a, r in zip(g1, g2, strict=True):
             np.testing.assert_allclose(a, r, rtol=1e-4, atol=1e-4)
 
     def test_groups_supported(self):
@@ -185,7 +185,7 @@ class TestSchedulers:
             ]
             assert vals[0] == 0.0
             assert abs(vals[-1] - 0.8) < 1e-9
-            assert all(b >= a - 1e-12 for a, b in zip(vals, vals[1:]))
+            assert all(b >= a - 1e-12 for a, b in zip(vals, vals[1:], strict=False))
 
     def test_bar_is_step_function(self):
         vals = [

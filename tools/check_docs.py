@@ -16,6 +16,12 @@ Checks, over ``README.md`` and every ``docs/*.md`` page:
    parenthesized imports work; ``from`` imports also verify the name
    exists on the module) with ``src/`` on ``sys.path`` — a renamed
    module or symbol breaks the build, not the reader.
+4. **CLI flags exist** — every ``python <script> --flag ...`` command
+   (fenced or inline, backslash continuations joined) is checked
+   against the script's actual argparse surface, read statically from
+   its source (every ``add_argument("--...")`` string — no imports, so
+   a script with heavy deps still checks). A documented flag that the
+   script no longer defines is a failure.
 
 Run:  python tools/check_docs.py        (CI runs it in the ruff lane)
 Exit: 0 clean, 1 with a list of stale references.
@@ -24,9 +30,9 @@ from __future__ import annotations
 
 import ast
 import importlib
+from pathlib import Path
 import re
 import sys
-from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(ROOT / "src"))
@@ -116,6 +122,88 @@ def check_snippet(src: str):
                 importlib.import_module(f"{node.module}.{alias.name}")
 
 
+# ----------------------------------------------------------------------
+# CLI flag cross-check
+# ----------------------------------------------------------------------
+
+# `... \` + newline (+ optional `$ ` console prompt) -> one command line
+CONT = re.compile(r"\\\n\s*(?:\$\s+)?")
+PY_CMD = re.compile(r"python3?\s+(-m\s+[\w.]+|[\w./\-]+\.py)([^\n`]*)")
+FLAG = re.compile(r"--[A-Za-z0-9][\w-]*")
+
+_FLAG_CACHE: dict[Path, set[str] | None] = {}
+
+
+def argparse_flags(script: Path) -> set[str] | None:
+    """Every ``--flag`` the script defines, read from source (no import).
+
+    Walks the AST for ``*.add_argument("--...")`` calls; returns None
+    when the script defines no argparse surface at all (then any
+    documented flag is stale by definition).
+    """
+    if script not in _FLAG_CACHE:
+        tree = ast.parse(script.read_text(encoding="utf-8"))
+        flags: set[str] = set()
+        seen_parser = False
+        for node in ast.walk(tree):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "add_argument"
+            ):
+                seen_parser = True
+                for arg in node.args:
+                    if (
+                        isinstance(arg, ast.Constant)
+                        and isinstance(arg.value, str)
+                        and arg.value.startswith("--")
+                    ):
+                        flags.add(arg.value)
+        _FLAG_CACHE[script] = flags if seen_parser else None
+    return _FLAG_CACHE[script]
+
+
+def _resolve_script(target: str) -> Path | None | str:
+    """Map a command target to a repo script path.
+
+    Returns a Path, ``None`` for out-of-repo targets (``-m pytest``),
+    or the stale target string when it should exist but doesn't.
+    """
+    if target.startswith("-m"):
+        module = target.split()[-1]
+        top = module.split(".")[0]
+        if top == "repro":
+            p = ROOT / "src" / (module.replace(".", "/") + ".py")
+        elif top in ("benchmarks", "tools"):
+            p = ROOT / (module.replace(".", "/") + ".py")
+        else:
+            return None  # pytest, pip, ... not ours
+        return p if p.exists() else target
+    for root in (ROOT, ROOT / "src"):
+        if (root / target).exists():
+            return root / target
+    return target
+
+
+def check_cli_flags(text: str, rel) -> list[str]:
+    """Cross-check every documented python command's flags."""
+    failures = []
+    for target, tail in PY_CMD.findall(CONT.sub(" ", text)):
+        script = _resolve_script(target.strip())
+        if script is None:
+            continue
+        if isinstance(script, str):
+            failures.append(f"{rel}: command references missing `{script}`")
+            continue
+        used = {f.split("=")[0] for f in FLAG.findall(tail)}
+        known = argparse_flags(script)
+        for flag in sorted(used - (known or set())):
+            failures.append(
+                f"{rel}: `{script.relative_to(ROOT)}` defines no `{flag}`"
+            )
+    return failures
+
+
 def main() -> int:
     failures = []
     for doc in DOC_FILES:
@@ -137,6 +225,8 @@ def main() -> int:
                 continue  # same-page anchor
             if not ((doc.parent / link).exists() or (ROOT / link).exists()):
                 failures.append(f"{rel}: broken link ({link})")
+
+        failures.extend(check_cli_flags(text, rel))
 
         for i, snip in enumerate(python_snippets(text)):
             try:
